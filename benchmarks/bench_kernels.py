@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness-path
+timing only; TPU is the perf target) vs the jnp reference, µs/call."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    B, S, Hq, Hkv, D = 1, 512, 8, 2, 64
+    q = jax.random.normal(KEY, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(KEY, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(KEY, (B, S, Hkv, D), jnp.float32)
+    us_p = _time(lambda *a: ops.flash_attention(*a), q, k, v)
+    us_r = _time(lambda *a: jax.jit(ref.flash_attention_ref)(*a), q, k, v)
+    rows.append(f"flash_attention,us_interpret={us_p:.0f},us_ref={us_r:.0f},"
+                f"shape=({B}x{S}x{Hq}x{D})")
+
+    kv_len = jnp.array([S // 2], jnp.int32)
+    qd = jax.random.normal(KEY, (1, 1, Hq, D))
+    us_p = _time(lambda *a: ops.decode_attention(*a), qd, k, v, kv_len)
+    us_r = _time(lambda *a: jax.jit(ref.decode_attention_ref)(*a), qd, k, v, kv_len)
+    rows.append(f"decode_attention,us_interpret={us_p:.0f},us_ref={us_r:.0f}")
+
+    x = jax.random.normal(KEY, (4096, 1024))
+    sc = jnp.ones((1024,))
+    us_p = _time(lambda *a: ops.rms_norm(*a), x, sc)
+    us_r = _time(lambda *a: jax.jit(ref.rms_norm_ref)(*a), x, sc)
+    rows.append(f"rms_norm,us_interpret={us_p:.0f},us_ref={us_r:.0f}")
+
+    H, P, N = 4, 32, 16
+    xs = jax.random.normal(KEY, (1, 256, H, P))
+    Bm = jax.random.normal(KEY, (1, 256, N))
+    Cm = jax.random.normal(KEY, (1, 256, N))
+    dt = jax.nn.softplus(jax.random.normal(KEY, (1, 256, H)))
+    Al = jax.random.normal(KEY, (H,)) * 0.5
+    Dd = jax.random.normal(KEY, (H,))
+    us_p = _time(lambda *a: ops.ssm_scan(*a), xs, Bm, Cm, dt, Al, Dd)
+    us_r = _time(lambda *a: jax.jit(ref.ssm_scan_ref)(*a), xs, Bm, Cm, dt, Al, Dd)
+    rows.append(f"ssm_scan,us_interpret={us_p:.0f},us_ref={us_r:.0f}")
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline benchmark: reads the dry-run result JSONs and emits the
+§Roofline table rows (one per arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+RESULTS = (("baseline", "results/dryrun_single.json"),
+           ("multipod", "results/dryrun_multi.json"),
+           ("optimized", "results/dryrun_optimized.json"))
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    for tag, path in RESULTS:
+        if not os.path.exists(path):
+            continue
+        for r in json.load(open(path)):
+            if r["status"] == "skipped":
+                rows.append(f"roofline,{tag},{r['arch']},{r['shape']},{r['mesh']},skipped")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"roofline,{tag},{r['arch']},{r['shape']},{r['mesh']},FAILED")
+                continue
+            rf = r["roofline"]
+            rows.append(
+                f"roofline,{tag},{r['arch']},{r['shape']},{r['mesh']},"
+                f"tC={rf['t_compute_s']:.4f},tM={rf['t_memory_s']:.4f},"
+                f"tMpallas={rf.get('t_memory_pallas_s', float('nan')):.4f},"
+                f"tNet={rf['t_collective_s']:.4f},bneck={rf['bottleneck']},"
+                f"useful={rf['useful_flops_ratio']:.3f},"
+                f"mfu={rf['mfu_roofline']:.4f}"
+            )
+    if not rows:
+        rows.append("roofline,NO_RESULTS,run `python -m repro.launch.dryrun --all`")
+    return rows

@@ -1,0 +1,39 @@
+"""Benchmark driver — one section per paper table/claim.
+
+  bench_paper    — fig. 5(a)/(b) + solver-time claims (§4.2)
+  bench_fleet    — the technique on a TPU pod fleet (TPU fig. 5 analogue)
+  bench_roofline — §Roofline table from the dry-run artifacts
+  bench_kernels  — Pallas kernels (interpret) vs jnp refs
+
+Prints ``name,key=value,...`` CSV rows.
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_fleet, bench_kernels, bench_paper, bench_roofline
+
+    sections = [
+        ("paper", bench_paper.run),
+        ("fleet", bench_fleet.run),
+        ("roofline", bench_roofline.run),
+        ("kernels", bench_kernels.run),
+    ]
+    failed = 0
+    for name, fn in sections:
+        print(f"# === {name} ===")
+        try:
+            for row in fn():
+                print(row)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},ERROR")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

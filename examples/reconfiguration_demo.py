@@ -1,0 +1,98 @@
+"""The paper's contribution, end to end, on a TPU fleet:
+
+  1. build a heterogeneous pod fleet (different $/chip-hour),
+  2. admit a stream of training/serving jobs FCFS under SLO/budget bounds
+     (Step 5 — first-come-first-served fills the cheap pods),
+  3. run the in-operation reconfiguration (Step 7): the LP trial-solve
+     finds a placement with higher group satisfaction and emits migrations,
+  4. EXECUTE one migration for a real (tiny) training job: checkpoint →
+     re-shard → resume — the framework's live migration,
+  5. report the satisfaction ratios (the paper's fig. 5(b) quantity).
+
+    PYTHONPATH=src python examples/reconfiguration_demo.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster import FleetScheduler, JobSpec, PodSpec, build_fleet_topology
+from repro.models import reduced
+from repro.runtime.elastic import MeshPlan, reshard_restore
+from repro.ckpt import save
+from repro.train import init_state, make_optimizer
+from repro.train.trainer import TrainerConfig, make_synthetic_trainer
+import jax
+
+
+def main():
+    # ---- 1. fleet ----
+    pods = [PodSpec("tokyo-a", 256, 1.2), PodSpec("tokyo-b", 256, 1.2),
+            PodSpec("osaka-spot", 256, 0.85), PodSpec("osaka-v5p", 256, 2.1)]
+    topo = build_fleet_topology(pods)
+    sched = FleetScheduler(topo, reconfig_every=10 ** 9, window=24)  # manual Step 7
+    print("fleet:", ", ".join(f"{p.name}(${p.chip_hour_usd}/chip·h)" for p in pods))
+
+    # ---- 2. FCFS admission ----
+    rng = np.random.default_rng(0)
+    jobs = []
+    for i in range(14):
+        fast = i % 3 == 0
+        t = float(rng.uniform(0.8, 2.0))
+        jobs.append(JobSpec(
+            job_id=i, arch="granite-3-2b", shape="train_4k", chips=64,
+            step_time_s=t,
+            step_slo_s=t + (0.1 if fast else 2.0),
+            budget_usd_month=None if fast else 90_000.0,
+        ))
+    for j in jobs:
+        pod = sched.submit(j)
+        print(f"  job {j.job_id:2d} (slo={j.step_slo_s:.2f}s"
+              f"{', budget' if j.budget_usd_month else ''}) → {pod}")
+    print("utilization:", {k: f"{v:.0%}" for k, v in sched.utilization().items()})
+
+    # Two early jobs on the cheap pod complete and release their slices —
+    # the first-come-first-served skew the paper targets: later (budget)
+    # jobs are stuck on expensive pods while cheap capacity is now free.
+    for done in (1, 2):
+        sched.engine.release(done)
+    print("jobs 1,2 completed → osaka-spot capacity freed")
+
+    # ---- 3. reconfiguration trial (eq. 1) ----
+    res = sched.recon.plan(sched.engine.recent(24))
+    print(f"\nreconfig trial: S {res.s_before:.3f} → {res.s_after:.3f} "
+          f"(gain {res.gain:.3f}), {res.n_moved} moves, "
+          f"mean X+Y of moved = {res.mean_moved_ratio:.4f}")
+    for mv in res.moves:
+        print(f"  move job {mv.req_id}: {mv.old.node.site_id} → "
+              f"{mv.new.node.site_id}  (ratio {mv.ratio:.4f})")
+    sched.recon.apply(res)
+
+    # ---- 4. live-migrate one real training job ----
+    if res.moves:
+        mv = res.moves[0]
+        print(f"\nexecuting migration of job {mv.req_id} as ckpt→reshard→resume:")
+        cfg = reduced(get_config("granite-3-2b"), vocab_size=128)
+        opt = make_optimizer("adamw", lr=1e-3)
+        with tempfile.TemporaryDirectory() as d:
+            tcfg = TrainerConfig(steps=6, log_every=2, ckpt_dir=d, ckpt_every=100)
+            trainer = make_synthetic_trainer(cfg, tcfg, global_batch=4, seq_len=32)
+            state = trainer.run()
+            save(d, 6, state, extra={"step": 6})          # pause + snapshot
+            mesh = MeshPlan((1, 1), ("data", "model")).build()  # target slice
+            state2, step, _ = reshard_restore(d, cfg, opt, mesh)
+            print(f"  restored at step {step} on {mv.new.node.site_id}; resuming")
+            tcfg2 = TrainerConfig(steps=10, log_every=2)
+            trainer2 = make_synthetic_trainer(cfg, tcfg2, global_batch=4, seq_len=32)
+            trainer2.run(state=state2, start_step=step)
+        print("  migration complete — no training progress lost")
+
+    # ---- 5. the paper's metric ----
+    sat = [s.ratio for s in res.satisfaction if s.ratio < 2.0 - 1e-9]
+    print(f"\nimproved jobs: {len(sat)}; mean X+Y = "
+          f"{np.mean(sat) if sat else 2.0:.4f}  (paper fig.5(b): ≈1.96 regime)")
+
+
+if __name__ == "__main__":
+    main()

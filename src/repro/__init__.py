@@ -1,0 +1,3 @@
+"""repro: environment-adaptive deployment reconfiguration (Yamato 2022) as a
+first-class scheduler layer of a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

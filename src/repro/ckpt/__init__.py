@@ -1,0 +1,5 @@
+"""Atomic sharded checkpointing with cross-mesh resharding restore."""
+from .checkpoint import (  # noqa: F401
+    CheckpointManager, latest_checkpoint, list_checkpoints, read_extra,
+    restore, save,
+)

@@ -1,0 +1,137 @@
+"""The environment-adaptation flow (paper §2.2, Steps 1–7) as a controller.
+
+Paper step → TPU-framework action:
+
+  Step 1  コード分析            → inspect the model config (families, layer
+                                  pattern, params) — `analyze`
+  Step 2  オフロード可能部抽出   → identify kernel-eligible hot spots &
+                                  parallelizable dims — `extract_offloadable`
+  Step 3  適切なオフロード部探索 → GA over execution plans, fitness from the
+                                  verification environment — `search`
+  Step 4  リソース量調整         → chips needed for HBM + SLO — `size_resources`
+  Step 5  配置場所調整           → LP admission onto the fleet — `place`
+  Step 6  実行ファイル配置と検証  → lower+compile (dry-run) = deploy artifact
+                                  — `verify`
+  Step 7  運用中再構成           → periodic `FleetScheduler` reconfiguration,
+                                  migrations via `runtime.elastic` — `operate`
+
+Each step is a small, separately testable method; `run_all` chains them for
+one job.  This is the paper's flow made executable against the framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch.analytic import estimate
+from repro.launch.plans import CellPlan, plan_for
+from repro.models import ModelConfig, ShapeConfig
+from repro.models.config import BLOCK_ATTN, BLOCK_MAMBA2, BLOCK_MLSTM, BLOCK_MOE
+from .cluster import FleetScheduler, JobSpec
+from .shard_search import PlanSearchResult, search_plan
+
+
+@dataclasses.dataclass
+class Analysis:
+    families: List[str]
+    n_params: int
+    kernel_hotspots: List[str]
+    parallel_dims: Dict[str, int]
+
+
+class AdaptationController:
+    def __init__(self, scheduler: Optional[FleetScheduler] = None,
+                 mesh_shape: Tuple[int, ...] = (16, 16),
+                 hbm_bytes: float = 16 * 2 ** 30):
+        self.scheduler = scheduler
+        self.mesh_shape = mesh_shape
+        self.hbm_bytes = hbm_bytes
+
+    # Step 1 -----------------------------------------------------------
+    def analyze(self, cfg: ModelConfig) -> Analysis:
+        kinds = set(cfg.layer_pattern())
+        hotspots = []
+        if kinds & {BLOCK_ATTN, BLOCK_MOE} or cfg.shared_attn_every:
+            hotspots += ["flash_attention", "decode_attention", "rmsnorm"]
+        if BLOCK_MAMBA2 in kinds:
+            hotspots += ["ssm_scan"]
+        if BLOCK_MLSTM in kinds:
+            hotspots += ["mlstm_chunked"]
+        dims = {"batch": 1, "heads": cfg.n_heads, "mlp": cfg.d_ff,
+                "vocab": cfg.vocab_size, "experts": cfg.n_experts,
+                "layers": cfg.n_layers}
+        return Analysis(sorted(kinds), cfg.param_count(), hotspots,
+                        {k: v for k, v in dims.items() if v})
+
+    # Step 2 -----------------------------------------------------------
+    def extract_offloadable(self, analysis: Analysis) -> List[str]:
+        return analysis.kernel_hotspots
+
+    # Step 3 -----------------------------------------------------------
+    def search(self, cfg: ModelConfig, shape: ShapeConfig,
+               **kw) -> PlanSearchResult:
+        baseline = plan_for(cfg.name, shape)
+        return search_plan(cfg, shape, self.mesh_shape, baseline=baseline, **kw)
+
+    # Step 4 -----------------------------------------------------------
+    def size_resources(self, cfg: ModelConfig, shape: ShapeConfig,
+                       plan: Optional[CellPlan] = None,
+                       step_slo_s: Optional[float] = None) -> int:
+        """Smallest power-of-two chip count that fits HBM and (optionally)
+        meets the step-time SLO per the analytic roofline."""
+        state_bytes = cfg.param_count() * (
+            2.0 + (12.0 if cfg.optimizer == "adamw" and shape.is_train else 2.1))
+        chips = 1
+        while chips < 16_384:
+            mesh = (max(chips // self.mesh_shape[-1], 1),
+                    min(chips, self.mesh_shape[-1]))
+            fits = state_bytes / chips <= 0.6 * self.hbm_bytes
+            t = estimate(cfg, shape, mesh, plan).t_step
+            if fits and (step_slo_s is None or t <= step_slo_s):
+                return chips
+            chips *= 2
+        return chips
+
+    # Step 5 -----------------------------------------------------------
+    def place(self, job: JobSpec) -> Optional[str]:
+        if self.scheduler is None:
+            raise ValueError("no FleetScheduler attached")
+        return self.scheduler.submit(job)
+
+    # Step 6 -----------------------------------------------------------
+    def verify(self, arch: str, shape_name: str, multi_pod: bool = False) -> Dict:
+        """Compile the deploy artifact (the dry-run IS the verification
+        environment); returns the cell record incl. roofline terms."""
+        from repro.launch.dryrun import run_cell
+        return run_cell(arch, shape_name, multi_pod, verbose=False)
+
+    # Step 7 -----------------------------------------------------------
+    def operate(self) -> List:
+        """One reconfiguration window; returns migration directives."""
+        if self.scheduler is None:
+            return []
+        res = self.scheduler.recon.run(
+            self.scheduler.engine.recent(self.scheduler.window))
+        if res.accepted:
+            self.scheduler.migrations.extend(res.migration_steps)
+        return res.migration_steps
+
+    # ------------------------------------------------------------------
+    def run_all(self, cfg: ModelConfig, shape: ShapeConfig,
+                job_id: int = 0, step_slo_factor: float = 1.5) -> Dict:
+        analysis = self.analyze(cfg)
+        offload = self.extract_offloadable(analysis)
+        search = self.search(cfg, shape)
+        chips = self.size_resources(cfg, shape, search.best_plan)
+        t = estimate(cfg, shape,
+                     (max(chips // self.mesh_shape[-1], 1),
+                      min(chips, self.mesh_shape[-1])), search.best_plan).t_step
+        job = JobSpec(job_id=job_id, arch=cfg.name, shape=shape.name,
+                      chips=chips, step_time_s=t, step_slo_s=t * step_slo_factor,
+                      budget_usd_month=None)
+        pod = self.place(job) if self.scheduler else None
+        return {"analysis": analysis, "offload": offload, "search": search,
+                "chips": chips, "t_step": t, "pod": pod}

@@ -1,0 +1,135 @@
+"""MILP formulation of placement/reconfiguration — paper eqs. (1)–(5).
+
+Key structural observation (DESIGN.md §2): with a tree topology, an app's
+response time (2) and price (3) are fully determined by its *candidate
+placement* (node + unique uplink path).  So the decision variables are
+binaries ``x[k,p]`` ("app k uses candidate p") and:
+
+* eq. (2)/(3) user upper bounds   → pre-filtering of candidates,
+* eq. (4) device capacity          → Σ_k usage·x ≤ remaining capacity,
+* eq. (5) link bandwidth           → Σ_k bw·x ≤ remaining bandwidth,
+* eq. (1) satisfaction objective   → c[k,p] = R_p/R_k^before + P_p/P_k^before.
+
+The builder emits a dense `MilpProblem` plus an index for decoding solutions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .apps import Candidate, PlacementRequest, feasible
+from .solver import MilpProblem
+
+OBJ_SATISFACTION = "satisfaction"
+
+
+@dataclasses.dataclass
+class AppVars:
+    """One app's slice of the joint problem."""
+
+    request: PlacementRequest
+    candidates: List[Candidate]          # already feasibility-filtered (eqs. 2–3)
+    current_node_id: Optional[str] = None  # where it runs now (reconfig only)
+    r_before: Optional[float] = None
+    p_before: Optional[float] = None
+
+
+@dataclasses.dataclass
+class JointIndex:
+    """Decoder from flat variable vector to per-app candidate choice."""
+
+    apps: List[AppVars]
+    offsets: np.ndarray  # offsets[i] = first var index of app i
+
+    def decode(self, x: np.ndarray) -> List[int]:
+        """Chosen candidate index per app (argmax over its one-hot block)."""
+        out: List[int] = []
+        for i, av in enumerate(self.apps):
+            lo = int(self.offsets[i])
+            hi = lo + len(av.candidates)
+            out.append(int(np.argmax(x[lo:hi])))
+        return out
+
+
+def filter_candidates(
+    request: PlacementRequest, candidates: Sequence[Candidate]
+) -> List[Candidate]:
+    """Apply the user's upper bounds — constraints (2) and (3)."""
+    return [c for c in candidates if feasible(c, request.requirement)]
+
+
+def build_joint_milp(
+    apps: Sequence[AppVars],
+    node_capacity: Dict[str, float],
+    link_capacity: Dict[str, float],
+    move_penalty: float = 0.0,
+) -> Tuple[MilpProblem, JointIndex]:
+    """Build the reconfiguration MILP (objective = eq. (1) + optional
+    per-move penalty modelling migration cost).
+
+    ``node_capacity``/``link_capacity`` must already EXCLUDE usage by apps
+    outside this window (eq. (4)(5) are computed "他ユーザ配置アプリ含めて").
+    """
+    apps = list(apps)
+    sizes = np.array([len(a.candidates) for a in apps], dtype=np.int64)
+    if (sizes == 0).any():
+        bad = [apps[i].request.req_id for i in np.nonzero(sizes == 0)[0]]
+        raise ValueError(f"apps with no feasible candidates: {bad}")
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    n = int(sizes.sum())
+
+    c = np.zeros(n)
+    for i, av in enumerate(apps):
+        rb, pb = av.r_before, av.p_before
+        if rb is None or pb is None:
+            raise ValueError("reconfig objective needs r_before/p_before")
+        for j, cand in enumerate(av.candidates):
+            coef = cand.response_s / rb + cand.price / pb
+            if move_penalty and cand.node.node_id != av.current_node_id:
+                coef += move_penalty
+            c[offsets[i] + j] = coef
+
+    # Equality: each app picks exactly one candidate.
+    A_eq = np.zeros((len(apps), n))
+    for i in range(len(apps)):
+        A_eq[i, offsets[i]:offsets[i] + sizes[i]] = 1.0
+    b_eq = np.ones(len(apps))
+
+    # Capacity rows — only for resources actually touched by ≥ 1 candidate.
+    node_rows: Dict[str, List[Tuple[int, float]]] = {}
+    link_rows: Dict[str, List[Tuple[int, float]]] = {}
+    for i, av in enumerate(apps):
+        app = av.request.app
+        for j, cand in enumerate(av.candidates):
+            var = int(offsets[i] + j)
+            node_rows.setdefault(cand.node.node_id, []).append((var, app.device_usage))
+            for link in cand.links:
+                link_rows.setdefault(link.link_id, []).append((var, app.bandwidth_mbps))
+
+    ub_rows: List[np.ndarray] = []
+    ub_rhs: List[float] = []
+    for node_id, entries in sorted(node_rows.items()):
+        row = np.zeros(n)
+        for var, usage in entries:
+            row[var] += usage
+        ub_rows.append(row)
+        ub_rhs.append(node_capacity[node_id])
+    for link_id, entries in sorted(link_rows.items()):
+        row = np.zeros(n)
+        for var, bw in entries:
+            row[var] += bw
+        ub_rows.append(row)
+        ub_rhs.append(link_capacity[link_id])
+
+    problem = MilpProblem(
+        c=c,
+        A_ub=np.vstack(ub_rows) if ub_rows else None,
+        b_ub=np.asarray(ub_rhs) if ub_rhs else None,
+        A_eq=A_eq,
+        b_eq=b_eq,
+        integrality=np.ones(n),
+    )
+    return problem, JointIndex(apps=apps, offsets=offsets)

@@ -1,0 +1,171 @@
+"""Reconfiguration during operation — the paper's contribution (§3.3).
+
+Every fixed number of new placements, take a window of already-running apps
+(e.g. the most recent 100/200/400) and *trial-solve* their joint placement:
+
+    minimize   S = Σ_k ( R_k^after / R_k^before + P_k^after / P_k^before )   (1)
+    subject to each app's original upper bounds (2)(3)
+               device & link capacities (4)(5), with non-window apps pinned.
+
+The trial result is applied only when the satisfaction gain exceeds a
+threshold (再構成の効果が高い場合のみ); accepted moves are executed through
+the live-migration planner.  A per-move penalty models migration cost and
+suppresses near-zero-gain moves; without it, symmetric instances have many
+equal optima that churn apps between identical nodes.  The default 0.01
+(1 % of one satisfaction point) reproduces the paper's "≈10 % of the window
+actually moves" (fig. 5a) — see EXPERIMENTS.md §Repro for the sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+from .apps import enumerate_candidates
+from .lp import AppVars, build_joint_milp, filter_candidates
+from .migration import MigrationStep, Move, plan_and_apply
+from .placement import PlacementEngine
+from .satisfaction import AppSatisfaction, mean_moved_ratio, window_sum
+from .solver import MilpResult, solve_milp
+
+
+@dataclasses.dataclass
+class ReconfigResult:
+    window: List[int]
+    moves: List[Move]
+    satisfaction: List[AppSatisfaction]  # for ALL window apps under the plan
+    s_before: float
+    s_after: float
+    accepted: bool
+    solver: Optional[MilpResult]
+    plan_time_s: float
+    migration_steps: List[MigrationStep] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_moved(self) -> int:
+        return len(self.moves)
+
+    @property
+    def gain(self) -> float:
+        return self.s_before - self.s_after
+
+    @property
+    def mean_moved_ratio(self) -> float:
+        return mean_moved_ratio(self.satisfaction)
+
+
+class Reconfigurator:
+    """Windowed joint re-placement on top of a `PlacementEngine`."""
+
+    def __init__(
+        self,
+        engine: PlacementEngine,
+        move_penalty: float = 0.01,
+        accept_threshold: float = 0.0,
+        backend: str = "auto",
+        time_limit_s: float = 60.0,
+    ) -> None:
+        self.engine = engine
+        self.move_penalty = move_penalty
+        self.accept_threshold = accept_threshold
+        self.backend = backend
+        self.time_limit_s = time_limit_s
+
+    # -------------------------------------------------------------- window
+    def _window_app_vars(self, window: Sequence[int]) -> List[AppVars]:
+        out: List[AppVars] = []
+        for req_id in window:
+            placed = self.engine.placed[req_id]
+            cands = enumerate_candidates(
+                self.engine.topo, placed.request, self.engine.allow_cpu_fallback,
+                all_sites=self.engine.all_sites,
+            )
+            cands = filter_candidates(placed.request, cands)
+            # The current placement is always a candidate (it satisfied the
+            # bounds at admission), so the MILP can never be infeasible.
+            out.append(
+                AppVars(
+                    request=placed.request,
+                    candidates=cands,
+                    current_node_id=placed.candidate.node.node_id,
+                    r_before=placed.response_s,
+                    p_before=placed.price,
+                )
+            )
+        return out
+
+    def _free_capacity_excluding(self, window: Sequence[int]) -> tuple:
+        """Remaining capacity with window apps lifted out (they re-place)."""
+        node_cap: Dict[str, float] = {
+            nid: self.engine.node_remaining(nid) for nid in self.engine.topo.nodes
+        }
+        link_cap: Dict[str, float] = {
+            lid: self.engine.link_remaining(lid) for lid in self.engine.topo.links
+        }
+        for req_id in window:
+            placed = self.engine.placed[req_id]
+            node_cap[placed.candidate.node.node_id] += placed.request.app.device_usage
+            for l in placed.candidate.links:
+                link_cap[l.link_id] += placed.request.app.bandwidth_mbps
+        return node_cap, link_cap
+
+    # ---------------------------------------------------------------- plan
+    def plan(self, window: Sequence[int]) -> ReconfigResult:
+        """Trial calculation (試行計算): solve eq. (1)–(5) over the window
+        without touching the fleet."""
+        t0 = time.perf_counter()
+        window = list(window)
+        app_vars = self._window_app_vars(window)
+        node_cap, link_cap = self._free_capacity_excluding(window)
+        problem, index = build_joint_milp(
+            app_vars, node_cap, link_cap, move_penalty=self.move_penalty
+        )
+        res = solve_milp(problem, backend=self.backend, time_limit_s=self.time_limit_s)
+        if not res.ok:
+            # Keep everything in place (current placements are feasible, so
+            # this only happens on solver timeout).
+            sat = [
+                AppSatisfaction(r, self.engine.placed[r].response_s,
+                                self.engine.placed[r].response_s,
+                                self.engine.placed[r].price, self.engine.placed[r].price)
+                for r in window
+            ]
+            return ReconfigResult(window, [], sat, 2.0 * len(window), 2.0 * len(window),
+                                  False, res, time.perf_counter() - t0)
+
+        choices = index.decode(res.x)
+        moves: List[Move] = []
+        sat: List[AppSatisfaction] = []
+        for av, choice in zip(app_vars, choices):
+            placed = self.engine.placed[av.request.req_id]
+            cand = av.candidates[choice]
+            sat.append(
+                AppSatisfaction(
+                    av.request.req_id,
+                    r_before=placed.response_s, r_after=cand.response_s,
+                    p_before=placed.price, p_after=cand.price,
+                )
+            )
+            if cand.node.node_id != placed.candidate.node.node_id:
+                ratio = cand.response_s / placed.response_s + cand.price / placed.price
+                moves.append(Move(av.request.req_id, placed.candidate, cand, ratio))
+        s_before = 2.0 * len(window)         # ratio of the do-nothing plan
+        s_after = window_sum(sat)
+        accepted = (s_before - s_after) > self.accept_threshold
+        return ReconfigResult(
+            window, moves, sat, s_before, s_after, accepted, res,
+            time.perf_counter() - t0,
+        )
+
+    # --------------------------------------------------------------- apply
+    def apply(self, result: ReconfigResult, state_mb: float = 64.0) -> ReconfigResult:
+        """Execute an accepted plan through the live-migration planner."""
+        if not result.accepted or not result.moves:
+            return result
+        steps = plan_and_apply(self.engine, result.moves, state_mb=state_mb)
+        result.migration_steps.extend(steps)
+        return result
+
+    def run(self, window: Sequence[int]) -> ReconfigResult:
+        return self.apply(self.plan(window))

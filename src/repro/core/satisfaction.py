@@ -1,0 +1,42 @@
+"""User-satisfaction metric of paper eq. (1).
+
+Per app k the paper scores a reconfiguration by
+``X + Y = R_after/R_before + P_after/P_before`` — 2.0 means "unchanged";
+lower is better.  The reconfiguration objective minimizes the window sum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSatisfaction:
+    req_id: int
+    r_before: float
+    r_after: float
+    p_before: float
+    p_after: float
+
+    @property
+    def ratio(self) -> float:
+        """X + Y (eq. 1 summand).  < 2 means the user got happier."""
+        return self.r_after / self.r_before + self.p_after / self.p_before
+
+    @property
+    def improved(self) -> bool:
+        return self.ratio < 2.0 - 1e-12
+
+
+def window_sum(entries: Sequence[AppSatisfaction]) -> float:
+    """S of eq. (1) over the window."""
+    return sum(e.ratio for e in entries)
+
+
+def mean_moved_ratio(entries: Sequence[AppSatisfaction]) -> float:
+    """Paper fig. 5(b): mean X+Y over apps that actually moved."""
+    moved = [e for e in entries if (e.r_after, e.p_after) != (e.r_before, e.p_before)]
+    if not moved:
+        return 2.0
+    return sum(e.ratio for e in moved) / len(moved)

@@ -1,0 +1,184 @@
+"""Dense two-phase primal simplex in pure numpy.
+
+This is the fallback LP engine behind `core.solver` so the framework has no
+hard dependency on an external solver (the paper uses GLPK/CPLEX; we default
+to scipy's HiGHS when present and fall back to this).  Standard form:
+
+    min c·x   s.t.  A_ub x ≤ b_ub,  A_eq x = b_eq,  0 ≤ x ≤ ub
+
+Bland's rule is used for anti-cycling.  Intended problem sizes: up to a few
+thousand variables / constraints (the reconfiguration MILPs are far smaller
+after candidate filtering).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class LpResult:
+    status: str            # "optimal" | "infeasible" | "unbounded" | "iteration_limit"
+    x: Optional[np.ndarray]
+    objective: float
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "optimal"
+
+
+def _tableau_simplex(T: np.ndarray, basis: np.ndarray, max_iter: int) -> str:
+    """In-place primal simplex on tableau ``T`` (last row = objective,
+    last column = RHS).  Returns a status string."""
+    m = T.shape[0] - 1
+    for _ in range(max_iter):
+        obj = T[-1, :-1]
+        # Bland: entering = smallest index with negative reduced cost.
+        neg = np.nonzero(obj < -_EPS)[0]
+        if neg.size == 0:
+            return "optimal"
+        col = int(neg[0])
+        ratios = np.full(m, np.inf)
+        pos = T[:m, col] > _EPS
+        ratios[pos] = T[:m, -1][pos] / T[:m, col][pos]
+        if not np.isfinite(ratios).any():
+            return "unbounded"
+        # Bland tie-break: smallest basis index among minimal ratios.
+        rmin = ratios.min()
+        tie = np.nonzero(ratios <= rmin + _EPS)[0]
+        row = int(tie[np.argmin(basis[tie])])
+        # Pivot.
+        piv = T[row, col]
+        T[row] /= piv
+        colvals = T[:, col].copy()
+        colvals[row] = 0.0
+        T -= np.outer(colvals, T[row])
+        T[:, col] = 0.0
+        T[row, col] = 1.0
+        basis[row] = col
+    return "iteration_limit"
+
+
+def solve_lp(
+    c: np.ndarray,
+    A_ub: Optional[np.ndarray] = None,
+    b_ub: Optional[np.ndarray] = None,
+    A_eq: Optional[np.ndarray] = None,
+    b_eq: Optional[np.ndarray] = None,
+    ub: Optional[np.ndarray] = None,
+    max_iter: int = 20_000,
+) -> LpResult:
+    """Two-phase simplex.  Variables are implicitly ≥ 0; ``ub`` adds
+    per-variable upper bounds (encoded as extra ≤ rows)."""
+    c = np.asarray(c, dtype=np.float64)
+    n = c.size
+    rows_A = []
+    rows_b = []
+    if A_ub is not None and len(A_ub):
+        rows_A.append(np.asarray(A_ub, dtype=np.float64))
+        rows_b.append(np.asarray(b_ub, dtype=np.float64))
+    if ub is not None:
+        finite = np.nonzero(np.isfinite(ub))[0]
+        if finite.size:
+            Aub2 = np.zeros((finite.size, n))
+            Aub2[np.arange(finite.size), finite] = 1.0
+            rows_A.append(Aub2)
+            rows_b.append(np.asarray(ub, dtype=np.float64)[finite])
+    A_ub_all = np.vstack(rows_A) if rows_A else np.zeros((0, n))
+    b_ub_all = np.concatenate(rows_b) if rows_b else np.zeros((0,))
+    A_eq = np.asarray(A_eq, dtype=np.float64) if A_eq is not None and len(A_eq) else np.zeros((0, n))
+    b_eq = np.asarray(b_eq, dtype=np.float64) if A_eq.shape[0] else np.zeros((0,))
+
+    # Normalize RHS ≥ 0.
+    flip = b_ub_all < 0  # ≤ with negative rhs → needs surplus+artificial
+    m_ub, m_eq = A_ub_all.shape[0], A_eq.shape[0]
+    m = m_ub + m_eq
+    if m == 0:
+        # Unconstrained min over x ≥ 0.
+        if (c < -_EPS).any():
+            return LpResult("unbounded", None, -np.inf)
+        return LpResult("optimal", np.zeros(n), 0.0)
+
+    # Build phase-1 tableau: columns = [x | slack/surplus | artificial | rhs].
+    A = np.vstack([A_ub_all, A_eq])
+    b = np.concatenate([b_ub_all, b_eq])
+    neg = b < 0
+    A[neg] *= -1.0
+    b[neg] *= -1.0
+    # slack for ≤ rows (sign −1 if the row was flipped → becomes surplus).
+    slack = np.zeros((m, m_ub))
+    for i in range(m_ub):
+        slack[i, i] = -1.0 if flip[i] else 1.0
+    # Artificials for: flipped ≤ rows and all eq rows.
+    need_art = np.zeros(m, dtype=bool)
+    need_art[:m_ub] = flip
+    need_art[m_ub:] = True
+    art_idx = np.nonzero(need_art)[0]
+    art = np.zeros((m, art_idx.size))
+    for j, i in enumerate(art_idx):
+        art[i, j] = 1.0
+    n_slack, n_art = m_ub, art_idx.size
+    total = n + n_slack + n_art
+
+    T = np.zeros((m + 1, total + 1))
+    T[:m, :n] = A
+    T[:m, n:n + n_slack] = slack
+    T[:m, n + n_slack:total] = art
+    T[:m, -1] = b
+    basis = np.zeros(m, dtype=np.int64)
+    for i in range(m):
+        if need_art[i]:
+            j = int(np.nonzero(art_idx == i)[0][0])
+            basis[i] = n + n_slack + j
+        else:
+            basis[i] = n + i  # its own slack
+    if n_art:
+        # Phase 1 objective: min sum of artificials.
+        T[-1, n + n_slack:total] = 1.0
+        for i in range(m):
+            if need_art[i]:
+                T[-1] -= T[i]
+        status = _tableau_simplex(T, basis, max_iter)
+        if status != "optimal":
+            return LpResult(status, None, np.nan)
+        if T[-1, -1] < -1e-7:
+            return LpResult("infeasible", None, np.nan)
+        # Drive artificials out of basis where possible.
+        for i in range(m):
+            if basis[i] >= n + n_slack:
+                row = T[i, :n + n_slack]
+                cand = np.nonzero(np.abs(row) > 1e-7)[0]
+                if cand.size:
+                    col = int(cand[0])
+                    piv = T[i, col]
+                    T[i] /= piv
+                    colv = T[:, col].copy()
+                    colv[i] = 0.0
+                    T -= np.outer(colv, T[i])
+                    T[:, col] = 0.0
+                    T[i, col] = 1.0
+                    basis[i] = col
+        # Remove artificial columns.
+        keep = np.concatenate([np.arange(n + n_slack), [total]])
+        T = T[:, keep]
+
+    # Phase 2.
+    T[-1, :] = 0.0
+    T[-1, :n] = c
+    for i in range(m):
+        if basis[i] < n + n_slack and abs(T[-1, basis[i]]) > _EPS:
+            T[-1] -= T[-1, basis[i]] * T[i]
+    status = _tableau_simplex(T, basis, max_iter)
+    if status != "optimal":
+        return LpResult(status, None, np.nan)
+    x = np.zeros(n + n_slack)
+    for i in range(m):
+        if basis[i] < n + n_slack:
+            x[basis[i]] = T[i, -1]
+    xs = x[:n]
+    return LpResult("optimal", xs, float(c @ xs))

@@ -1,0 +1,180 @@
+"""MILP solver frontends.
+
+The paper derives reconfiguration solutions with an off-the-shelf LP/MILP
+solver (GLPK 5.0 / CPLEX).  Here:
+
+* backend ``"highs"`` — `scipy.optimize.milp` (HiGHS), the drop-in analogue.
+* backend ``"bnb"``   — our own branch-and-bound over the pure-numpy simplex
+  (`core.simplex`), so the system works with zero external solver deps and
+  the LP layer is property-testable end-to-end.
+* backend ``"auto"``  — HiGHS when importable, else B&B.
+
+Problems are expressed densely; reconfiguration instances are small
+(≤ a few thousand binaries) after candidate filtering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .simplex import solve_lp
+
+try:  # pragma: no cover - availability depends on environment
+    from scipy import optimize as _sciopt
+    from scipy import sparse as _scisparse
+
+    _HAVE_SCIPY = hasattr(_sciopt, "milp")
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+
+@dataclasses.dataclass
+class MilpProblem:
+    """min c·x  s.t.  A_ub x ≤ b_ub,  A_eq x = b_eq,  0 ≤ x ≤ ub,
+    x[integrality==1] ∈ ℤ."""
+
+    c: np.ndarray
+    A_ub: Optional[np.ndarray] = None
+    b_ub: Optional[np.ndarray] = None
+    A_eq: Optional[np.ndarray] = None
+    b_eq: Optional[np.ndarray] = None
+    ub: Optional[np.ndarray] = None          # default: 1.0 for integer vars, inf else
+    integrality: Optional[np.ndarray] = None  # 1 = integer, 0 = continuous
+
+    def n(self) -> int:
+        return int(np.asarray(self.c).size)
+
+
+@dataclasses.dataclass
+class MilpResult:
+    status: str                 # "optimal" | "infeasible" | "timeout" | <lp status>
+    x: Optional[np.ndarray]
+    objective: float
+    solve_time_s: float = 0.0
+    nodes_explored: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "optimal"
+
+
+def _default_ub(p: MilpProblem) -> np.ndarray:
+    ub = np.full(p.n(), np.inf)
+    if p.integrality is not None:
+        ub[np.asarray(p.integrality, dtype=bool)] = 1.0
+    if p.ub is not None:
+        ub = np.minimum(ub, p.ub)
+    return ub
+
+
+def solve_milp(
+    problem: MilpProblem,
+    backend: str = "auto",
+    time_limit_s: float = 60.0,
+) -> MilpResult:
+    if backend == "auto":
+        backend = "highs" if _HAVE_SCIPY else "bnb"
+    if backend == "highs":
+        return _solve_highs(problem, time_limit_s)
+    if backend == "bnb":
+        return _solve_bnb(problem, time_limit_s)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ----------------------------------------------------------------- HiGHS ---
+def _solve_highs(p: MilpProblem, time_limit_s: float) -> MilpResult:
+    t0 = time.perf_counter()
+    n = p.n()
+    constraints = []
+    if p.A_ub is not None and len(p.A_ub):
+        constraints.append(
+            _sciopt.LinearConstraint(_scisparse.csr_matrix(p.A_ub), -np.inf, p.b_ub)
+        )
+    if p.A_eq is not None and len(p.A_eq):
+        constraints.append(
+            _sciopt.LinearConstraint(_scisparse.csr_matrix(p.A_eq), p.b_eq, p.b_eq)
+        )
+    integrality = (
+        np.asarray(p.integrality, dtype=np.int64) if p.integrality is not None else np.zeros(n)
+    )
+    bounds = _sciopt.Bounds(np.zeros(n), _default_ub(p))
+    res = _sciopt.milp(
+        c=np.asarray(p.c, dtype=np.float64),
+        constraints=constraints,
+        integrality=integrality,
+        bounds=bounds,
+        options={"time_limit": time_limit_s},
+    )
+    dt = time.perf_counter() - t0
+    if res.status == 0:
+        return MilpResult("optimal", np.asarray(res.x), float(res.fun), dt)
+    if res.status == 2:
+        return MilpResult("infeasible", None, np.nan, dt)
+    if res.status == 1:
+        return MilpResult("timeout", None, np.nan, dt)
+    return MilpResult(f"highs_status_{res.status}", None, np.nan, dt)
+
+
+# ------------------------------------------------------- branch & bound ---
+def _solve_bnb(p: MilpProblem, time_limit_s: float) -> MilpResult:
+    t0 = time.perf_counter()
+    n = p.n()
+    int_mask = (
+        np.asarray(p.integrality, dtype=bool) if p.integrality is not None else np.zeros(n, bool)
+    )
+    base_ub = _default_ub(p)
+
+    best_x: Optional[np.ndarray] = None
+    best_obj = np.inf
+    nodes = 0
+    # Stack of (lb, ub) variable-bound overrides; lower bounds realized by
+    # shifting is overkill here — we instead add bound rows per node.
+    stack = [(np.zeros(n), base_ub.copy())]
+    status = "optimal"
+    while stack:
+        if time.perf_counter() - t0 > time_limit_s:
+            status = "timeout" if best_x is None else "optimal"
+            break
+        lb, ub = stack.pop()
+        # Encode lb via extra ≤ rows: −x ≤ −lb.
+        A_ub = p.A_ub if p.A_ub is not None else np.zeros((0, n))
+        b_ub = p.b_ub if p.b_ub is not None else np.zeros((0,))
+        nz = np.nonzero(lb > 0)[0]
+        if nz.size:
+            A_lb = np.zeros((nz.size, n))
+            A_lb[np.arange(nz.size), nz] = -1.0
+            A_ub = np.vstack([A_ub, A_lb])
+            b_ub = np.concatenate([b_ub, -lb[nz]])
+        res = solve_lp(p.c, A_ub, b_ub, p.A_eq, p.b_eq, ub=ub)
+        nodes += 1
+        if not res.ok or res.objective >= best_obj - 1e-9:
+            continue
+        x = res.x
+        frac = np.abs(x - np.round(x))
+        frac[~int_mask] = 0.0
+        j = int(np.argmax(frac))
+        if frac[j] < 1e-6:
+            xi = x.copy()
+            xi[int_mask] = np.round(xi[int_mask])
+            obj = float(np.dot(p.c, xi))
+            if obj < best_obj - 1e-12:
+                best_obj, best_x = obj, xi
+            continue
+        # Branch on x[j].
+        floor_v = np.floor(x[j])
+        ub_lo = ub.copy()
+        ub_lo[j] = floor_v
+        lb_hi = lb.copy()
+        lb_hi[j] = floor_v + 1.0
+        if lb_hi[j] <= ub[j] + 1e-9:
+            stack.append((lb_hi, ub.copy()))
+        if floor_v >= lb[j] - 1e-9:
+            stack.append((lb.copy(), ub_lo))
+    dt = time.perf_counter() - t0
+    if best_x is None:
+        return MilpResult("infeasible" if status == "optimal" else status, None, np.nan, dt, nodes)
+    return MilpResult("optimal", best_x, best_obj, dt, nodes)

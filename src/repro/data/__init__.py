@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic + byte-text sources, prefetch."""
+from .pipeline import (  # noqa: F401
+    ByteTokenizer, DataConfig, Prefetcher, SyntheticLM, TextFileLM,
+)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+with `ops.py` jit'd wrappers (interpret-mode fallback off-TPU) and `ref.py`
+pure-jnp oracles.  tests/test_kernels.py sweeps shapes/dtypes and asserts
+allclose against the oracles.
+"""

@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (causal GQA), explicit VMEM tiling.
+
+Grid = (B·Hq, Sq/block_q, Sk/block_k); the innermost dim is sequential
+("arbitrary") so the running (m, l, acc) online-softmax state lives in VMEM
+scratch across k-blocks.  Fully-masked causal blocks are skipped with
+`pl.when`.  Block sizes default to 128×128 (MXU-aligned); d_head rides along
+unblocked (64–128 for the assigned archs → ≤ 64 KB·block_q of VMEM per
+operand, comfortably inside the ~16 MB v5e VMEM budget).
+
+Validated against `ref.flash_attention_ref` in interpret mode on CPU
+(tests/test_kernels.py sweeps shapes/dtypes); TPU is the deploy target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int,
+            n_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: skip blocks strictly above the diagonal.
+    run = (qi + 1) * block_q > kj * block_k if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)          # (block_q, D)
+        k = k_ref[...].astype(jnp.float32)          # (block_k, D)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(f"seq ({Sq},{Sk}) must divide blocks ({block_q},{block_k})")
+    n_q, n_k = Sq // block_q, Sk // block_k
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+
+    def kv_head(h):  # flattened q-head index → flattened kv-head index
+        return (h // Hq) * Hkv + (h % Hq) // G
+
+    grid = (B * Hq, n_q, n_k)
+    kernel = functools.partial(
+        _kernel, scale=D ** -0.5, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((None, block_k, D), lambda h, i, j: (kv_head(h), j, 0)),
+            pl.BlockSpec((None, block_k, D), lambda h, i, j: (kv_head(h), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,45 @@
+"""Jit'd kernel entry points with backend dispatch.
+
+On TPU the Pallas kernels compile natively (``interpret=False``); elsewhere
+they run in interpret mode, which executes the kernel body op-by-op on CPU —
+bitwise the same program structure, so correctness tests on CPU validate
+the TPU kernel logic.  Model code (`cfg.attn_impl`/`cfg.ssm_impl`) routes
+here when the kernels are enabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import decode_attention as _decode
+from . import flash_attention as _flash
+from . import rmsnorm as _rmsnorm
+from . import ssm_scan as _ssm
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _flash.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, block_k: int = 512):
+    return _decode.decode_attention(q, k_cache, v_cache, kv_len,
+                                    block_k=block_k, interpret=_interpret())
+
+
+def rms_norm(x, scale, eps: float = 1e-5, block_rows: int = 256):
+    return _rmsnorm.rms_norm(x, scale, eps=eps, block_rows=block_rows,
+                             interpret=_interpret())
+
+
+def ssm_scan(x, Bm, Cm, dt, A_log, D, chunk: int = 64):
+    return _ssm.ssm_scan(x, Bm, Cm, dt, A_log, D, chunk=chunk,
+                         interpret=_interpret())

@@ -1,0 +1,55 @@
+"""Pallas TPU fused RMSNorm: one HBM round-trip instead of the ~4 an
+unfused mean-square → rsqrt → scale chain costs.
+
+Grid over row blocks; the full feature dim rides in VMEM (d_model ≤ 8192 ⇒
+≤ 4 MB·rows of VMEM at f32)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # (block_rows, d)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rms_norm(
+    x: jax.Array,            # (..., d)
+    scale: jax.Array,        # (d,)
+    eps: float = 1e-5,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    n = xf.shape[0] // block_rows
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

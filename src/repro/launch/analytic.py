@@ -1,0 +1,143 @@
+"""Closed-form roofline estimator for (cfg × shape × mesh × plan).
+
+Used as the fast fitness oracle of the GA plan search
+(`core.shard_search`) and for fleet job profiles when a compiled dry-run
+row is unavailable.  The constants are coarse (elementwise-traffic factor,
+remat recompute factor); `calibrate()` fits per-term scale factors against
+the measured dry-run table so the estimator ranks plans like the compiled
+analysis does — the GA needs *ordering*, not absolute seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.models import ModelConfig, ShapeConfig
+from repro.models.config import BLOCK_ATTN, BLOCK_MOE
+from .plans import CellPlan
+from .roofline import HBM_BW, ICI_LINK_BW, ICI_LINKS_PER_CHIP, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class AnalyticTerms:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def t_step(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+#: Fitted against the compiled single-pod table (see EXPERIMENTS §Roofline);
+#: overridden by `calibrate()`.
+SCALE = {"compute": 1.0, "memory": 1.0, "collective": 1.0}
+
+
+def estimate(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh_shape: Tuple[int, ...],
+    plan: Optional[CellPlan] = None,
+    scale: Optional[Dict[str, float]] = None,
+) -> AnalyticTerms:
+    scale = scale or SCALE
+    plan = plan or CellPlan()
+    chips = int(np.prod(mesh_shape))
+    n_model = mesh_shape[-1]
+    n_data = chips // n_model
+    B, S = shape.global_batch, shape.seq_len
+    T = B * S if shape.kind != "decode" else B
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+
+    n_params = cfg.param_count()
+    n_embed = V * d * (1 if cfg.tie_embeddings else 2)
+    n_mm = max(n_params - n_embed, 1)
+    if cfg.n_experts:
+        mult = 3 if cfg.ffn_type == "swiglu" else 2
+        n_moe = sum(1 for k in cfg.layer_pattern() if k == BLOCK_MOE)
+        n_mm -= n_moe * (cfg.n_experts - cfg.top_k * plan_cap_factor(cfg, plan)) \
+            * mult * d * cfg.d_ff
+
+    n_attn = sum(1 for k in cfg.layer_pattern() if k in (BLOCK_ATTN, BLOCK_MOE))
+    if cfg.shared_attn_every:
+        n_attn += L // cfg.shared_attn_every
+
+    # ---- FLOPs (per device) ----
+    train = shape.kind == "train"
+    pass_factor = 8.0 if (train and cfg.remat == "block") else (6.0 if train else 2.0)
+    f_mm = pass_factor / 2.0 * 2.0 * n_mm * T          # matmul params
+    f_head = (6.0 if train else 2.0) * T * d * V
+    if shape.kind == "decode":
+        f_attn = 4.0 * B * S * cfg.n_heads * cfg.d_head * n_attn
+    else:
+        # chunked attention computes the full square then masks (×2 vs causal)
+        f_attn = (4.5 if train else 1.0) * 4.0 * B * S * S * cfg.n_heads \
+            * cfg.d_head * n_attn / 2.0 * 2.0
+    flops_dev = (f_mm + f_head + f_attn) / chips
+
+    # ---- bytes (per device) ----
+    pbytes = 2.0 * n_params / chips                    # bf16 params, fully sharded
+    opt_reads = 3.0 if train else 1.0
+    act_elems = T * d * L / chips
+    k_act = 24.0 if train else 6.0                     # elementwise-chain factor (f32)
+    bytes_dev = opt_reads * pbytes * (3 if train else 1) + 4.0 * k_act * act_elems
+    if shape.kind == "decode":
+        cache = 2.0 * B * S * cfg.n_kv_heads * cfg.d_head * n_attn * 2.0 / chips
+        bytes_dev += cache
+
+    # ---- collective wire bytes (per device) ----
+    wire = 0.0
+    if n_model > 1:
+        fac = 2.0 * (n_model - 1) / n_model
+        psums = 2.0 * n_attn * (3.0 if train else 1.0)  # wo + down, fwd/bwd/remat
+        wire += psums * 4.0 * (T / n_data) * d * fac / plan.n_microbatch \
+            * plan.n_microbatch  # per-microbatch psums sum back to full T
+    if train and n_data > 1:
+        wire += 2.0 * 2.0 * n_params / chips            # grad reduce + fsdp gather
+    if cfg.n_experts and n_model > 1:
+        a2a = 2.0 * (T / chips) * cfg.top_k * d * 2.0 * (3.0 if train else 1.0)
+        wire += a2a
+    return AnalyticTerms(
+        t_compute=scale["compute"] * flops_dev / PEAK_FLOPS_BF16,
+        t_memory=scale["memory"] * bytes_dev / HBM_BW,
+        t_collective=scale["collective"] * wire / (ICI_LINKS_PER_CHIP * ICI_LINK_BW),
+    )
+
+
+def plan_cap_factor(cfg: ModelConfig, plan: CellPlan) -> float:
+    return cfg.capacity_factor
+
+
+def calibrate(results_path: str, mesh_shape=(16, 16)) -> Dict[str, float]:
+    """Fit per-term scale factors (median measured/analytic ratio over the
+    compiled cells) and install them in `SCALE`."""
+    from repro.configs import get_config
+    from repro.models import SHAPES_BY_NAME
+    from .plans import plan_for
+
+    rows = json.load(open(results_path))
+    ratios = {"compute": [], "memory": [], "collective": []}
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES_BY_NAME[r["shape"]]
+        est = estimate(cfg, shape, mesh_shape, plan_for(r["arch"], shape),
+                       scale={"compute": 1, "memory": 1, "collective": 1})
+        rf = r["roofline"]
+        for term, est_v, got_v in (
+            ("compute", est.t_compute, rf["t_compute_s"]),
+            ("memory", est.t_memory, rf["t_memory_s"]),
+            ("collective", est.t_collective, rf["t_collective_s"]),
+        ):
+            if est_v > 1e-9 and got_v > 1e-9:
+                ratios[term].append(got_v / est_v)
+    for term, vals in ratios.items():
+        if vals:
+            SCALE[term] = float(np.median(vals))
+    return dict(SCALE)

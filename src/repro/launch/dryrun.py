@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh(es) with ShapeDtypeStruct inputs (no allocation), print
+memory/cost analyses, and derive the roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single --out results.json
+    python -m repro.launch.dryrun --all --mesh multi          # 512-chip pass
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_stats import module_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.plans import plan_for
+from repro.launch.roofline import RooflineTerms, model_flops
+from repro.launch.specs import input_specs
+from repro.models import SHAPES_BY_NAME
+from repro.parallel.context import activation_sharding
+from repro.parallel.sharding import (
+    batch_specs as make_batch_specs,
+    cache_specs as make_cache_specs,
+    param_specs as make_param_specs,
+    state_specs as make_state_specs,
+)
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train import make_optimizer, make_train_step, state_shapes
+
+
+def _lower_train(cfg, shape, mesh, plan):
+    cfg = plan.apply_config(cfg)
+    opt = make_optimizer(cfg.optimizer)
+    step = make_train_step(cfg, opt, loss_chunk=plan.loss_chunk,
+                           n_microbatch=plan.n_microbatch)
+    strat = plan.strategy(mesh)
+    state_sds = state_shapes(cfg, opt)
+    st_specs = make_state_specs(state_sds, mesh, strat)
+    cell = input_specs(cfg.name, shape.name)
+    b_specs = make_batch_specs(cell["batch"], mesh, strat)
+    jitted = jax.jit(step, in_shardings=(st_specs, b_specs),
+                     out_shardings=(st_specs, None), donate_argnums=(0,))
+    with activation_sharding(mesh, strat):
+        return jitted.lower(state_sds, cell["batch"])
+
+
+def _lower_prefill(cfg, shape, mesh, plan):
+    cfg = plan.apply_config(cfg)
+    strat = plan.strategy(mesh)
+    cross = shape.seq_len if cfg.n_encoder_layers else 0
+    step = make_prefill_step(cfg, max_len=shape.seq_len, cross_len=cross)
+    params_sds = jax.eval_shape(
+        lambda k: __import__("repro.models", fromlist=["init_lm"]).init_lm(k, cfg),
+        jax.random.PRNGKey(0))
+    p_specs = make_param_specs(params_sds, mesh, strat)
+    cell = input_specs(cfg.name, shape.name)
+    b_specs = make_batch_specs(cell["batch"], mesh, strat)
+    cache_sds = jax.eval_shape(step, params_sds, cell["batch"])[0]
+    c_specs = make_cache_specs(cache_sds, mesh, strat, shape.global_batch)
+    jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
+                     out_shardings=(c_specs, None))
+    with activation_sharding(mesh, strat):
+        return jitted.lower(params_sds, cell["batch"])
+
+
+def _lower_decode(cfg, shape, mesh, plan):
+    cfg = plan.apply_config(cfg)
+    strat = plan.strategy(mesh)
+    step = make_decode_step(cfg)
+    from repro.models import init_lm
+    params_sds = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    p_specs = make_param_specs(params_sds, mesh, strat)
+    cell = input_specs(cfg.name, shape.name)
+    cache_sds, tok_sds = cell["cache"], cell["tokens"]
+    c_specs = make_cache_specs(cache_sds, mesh, strat, shape.global_batch)
+    tok_spec = make_batch_specs({"tokens": tok_sds}, mesh, strat)["tokens"]
+    jitted = jax.jit(step, in_shardings=(p_specs, c_specs, tok_spec),
+                     out_shardings=(c_specs, None), donate_argnums=(1,))
+    with activation_sharding(mesh, strat):
+        return jitted.lower(params_sds, cache_sds, tok_sds)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    cell = input_specs(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not cell["supported"]:
+        result["status"] = "skipped"
+        result["skip_reason"] = cell["skip_reason"]
+        return result
+    plan = plan_for(arch, shape)
+    result["plan"] = {"n_microbatch": plan.n_microbatch, "loss_chunk": plan.loss_chunk,
+                      "strategy_overrides": plan.strategy_overrides,
+                      "config_overrides": plan.config_overrides}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.perf_counter()
+    with mesh:
+        if shape.kind == "train":
+            lowered = _lower_train(cfg, shape, mesh, plan)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(cfg, shape, mesh, plan)
+        else:
+            lowered = _lower_decode(cfg, shape, mesh, plan)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Own HLO analysis: trip-count-corrected FLOPs/bytes + collective wire
+    # bytes (backend cost_analysis counts while bodies once — calibrated).
+    stats = module_stats(hlo, chips)
+
+    flops_dev = stats["flops"]
+    bytes_dev = stats["bytes"]
+    peak_mem = None
+    for attr in ("temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v:
+            peak_mem = float(v)
+            break
+    arg_b = float(getattr(mem, "argument_size_in_bytes", 0) or 0)
+    out_b = float(getattr(mem, "output_size_in_bytes", 0) or 0)
+    alias_b = float(getattr(mem, "alias_size_in_bytes", 0) or 0)
+
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        wire_bytes_per_device=stats["wire_bytes"],
+        model_flops_total=model_flops(cfg, shape),
+        peak_memory_bytes=peak_mem,
+    )
+    # Memory term with Pallas kernels substituted for their kscope regions
+    # (interior traffic stays in VMEM on TPU; boundaries remain counted).
+    from repro.launch.roofline import HBM_BW
+    bytes_pallas = bytes_dev - stats.get("bytes_kernel_interior", 0.0)
+    t_memory_pallas = bytes_pallas / HBM_BW
+    result.update({
+        "status": "ok",
+        "t_lower_s": t_lower,
+        "t_compile_s": t_compile,
+        "memory": {"temp_bytes": peak_mem, "argument_bytes": arg_b,
+                   "output_bytes": out_b, "alias_bytes": alias_b},
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float)) and
+                              k in ("flops", "bytes accessed", "transcendentals")},
+        "hlo_stats": stats,
+        "roofline": terms.row(),
+        "hlo_bytes": len(hlo),
+    })
+    result["roofline"]["t_memory_pallas_s"] = t_memory_pallas
+    result["roofline"]["t_step_pallas_s"] = max(
+        terms.t_compute, t_memory_pallas, terms.t_collective)
+    if verbose:
+        r = terms.row()
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory_analysis: temp={_gb(peak_mem)} args={_gb(arg_b)} "
+              f"out={_gb(out_b)} alias={_gb(alias_b)}")
+        print(f"  hlo_stats: flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+              f"wire/dev={_gb(stats['wire_bytes'])} "
+              f"colls={int(stats['n_collectives'])}")
+        print(f"  roofline: compute={r['t_compute_s']:.4f}s "
+              f"memory={r['t_memory_s']:.4f}s (pallas {t_memory_pallas:.4f}s) "
+              f"collective={r['t_collective_s']:.4f}s "
+              f"→ {r['bottleneck']} | useful={r['useful_flops_ratio']:.2f} "
+              f"mfu@roofline={r['mfu_roofline']:.2%}")
+    return result
+
+
+def _gb(x) -> str:
+    return "n/a" if x is None else f"{x / 2**30:.2f}GiB"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default=None, help="write JSON results")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use the §Perf-winning plans instead of baselines")
+    args = ap.parse_args(argv)
+    if args.optimized:
+        from repro.launch.plans import use_optimized_plans
+        use_optimized_plans()
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES_BY_NAME]
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    else:
+        ap.error("--all or (--arch and --shape)")
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    failed = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape, mp))
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failed += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": "failed", "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\n== dry-run: {ok} ok, {sk} skipped, {failed} failed, "
+          f"{len(results)} total ==")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ before any jax import (see dryrun.py).
+
+"""§Perf hillclimb driver: re-measure one cell under an explicit plan.
+
+    python -m repro.launch.hillclimb --arch qwen1.5-110b --shape train_4k \
+        --config bf16_cotangent=true --config hoist_rope=true \
+        --strategy moe=ep_shardmap --microbatch 8 --out results/hc1.json
+
+Every invocation is one hypothesis→change→measure iteration; EXPERIMENTS.md
+§Perf records the sequence.
+"""
+
+import argparse
+import json
+import sys
+
+
+def _parse_kv(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        elif v.lower() in ("none", "null"):
+            out[k] = None
+        elif "+" in v:
+            out[k] = tuple(v.split("+"))
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--config", action="append", metavar="K=V")
+    ap.add_argument("--strategy", action="append", metavar="K=V")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    import dataclasses
+
+    from repro.launch.dryrun import run_cell
+    from repro.launch.plans import PLAN_OVERRIDES, plan_for
+    from repro.models import SHAPES_BY_NAME
+
+    base = plan_for(args.arch, SHAPES_BY_NAME[args.shape])
+    plan = dataclasses.replace(
+        base,
+        n_microbatch=args.microbatch if args.microbatch is not None else base.n_microbatch,
+        loss_chunk=args.loss_chunk if args.loss_chunk is not None else base.loss_chunk,
+        strategy_overrides={**base.strategy_overrides, **_parse_kv(args.strategy)},
+        config_overrides={**base.config_overrides, **_parse_kv(args.config)},
+    )
+    PLAN_OVERRIDES[(args.arch, args.shape)] = plan
+    result = run_cell(args.arch, args.shape, multi_pod=args.mesh == "multi")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    return 0 if result["status"] == "ok" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state.  Single-pod: 16×16 = 256 chips ("data","model"); multi-pod: 2 pods ×
+256 = 512 chips ("pod","data","model") — the "pod" axis is pure DP across
+the inter-pod DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = 0):
+    """A small mesh over however many (host) devices exist — used by tests
+    and the smoke train driver."""
+    n = len(jax.devices())
+    if data == 0:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

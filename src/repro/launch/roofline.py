@@ -1,0 +1,119 @@
+"""Roofline model for TPU v5e (target hardware; the container only hosts the
+dry-run).  Three terms per (arch × shape × mesh) cell, from the compiled
+artifact:
+
+    compute    = HLO_FLOPs(per device)      / peak_FLOP/s
+    memory     = HLO_bytes(per device)      / HBM_bw
+    collective = wire_bytes(per device)     / (links_per_chip × link_bw)
+
+`cost_analysis()` on the SPMD-partitioned module reports per-device numbers;
+scan-over-layers under-counts `while` bodies, so FLOPs/bytes are corrected
+by the same trip-count multipliers used for collectives when the backend
+reports loop-body costs once (`flops_correction`).  MODEL_FLOPS = 6·N_active·D
+gives the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.models import ModelConfig, ShapeConfig
+from repro.models.config import BLOCK_ATTN, BLOCK_MOE
+
+# TPU v5e constants (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_LINK_BW = 50e9                # B/s per link (per direction)
+ICI_LINKS_PER_CHIP = 2            # effective links on a 2D (16×16) torus axis
+HBM_BYTES = 16 * 2 ** 30          # 16 GiB
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_total: float          # 6·N_active·D (train) / 2·N_active·D (fwd)
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / (ICI_LINKS_PER_CHIP * ICI_LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips × HLO_FLOPs) — remat/dispatch overhead."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_total / total if total else 0.0
+
+    @property
+    def mfu_roofline(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.t_step * self.chips * PEAK_FLOPS_BF16
+        return self.model_flops_total / denom if denom else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "bottleneck": self.bottleneck,
+            "t_step_s": self.t_step,
+            "model_flops": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_roofline": self.mfu_roofline,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    total = cfg.param_count()
+    if cfg.n_experts:
+        d = cfg.d_model
+        mult = 3 if cfg.ffn_type == "swiglu" else 2
+        expert_p = mult * d * cfg.d_ff
+        n_moe = sum(1 for k in cfg.layer_pattern() if k == BLOCK_MOE)
+        total -= n_moe * (cfg.n_experts - cfg.top_k) * expert_p
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D for a train step; 2·N·D per forward token otherwise (the
+    standard dense-equivalent accounting; attention FLOPs excluded, which
+    makes the reported useful-ratio conservative)."""
+    n_active = active_params(cfg) - cfg.vocab_size * cfg.d_model * (
+        2 if not cfg.tie_embeddings else 1)  # embeddings are lookups
+    n_active = max(n_active, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens

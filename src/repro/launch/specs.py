@@ -1,0 +1,102 @@
+"""Per-cell input specifications: ShapeDtypeStruct stand-ins for every
+(architecture × input shape) combination — weak-type-correct, shardable,
+no device allocation.
+
+Cell semantics (DESIGN.md §5):
+  * train_*:    one optimizer step on (inputs, targets) of (B, S).
+  * prefill_*:  build a KV/SSM cache from a (B, S) prompt batch.
+  * decode_*:   ONE new token against a cache holding S valid entries.
+  * seamless:   encoder frames = S stub embeddings; decoder length = S.
+  * qwen2-vl:   256 stub patch embeddings + (S−256) text tokens; 3D M-RoPE
+    position ids are part of the input (the frontend computes them).
+
+Skip rules (per assignment): long_500k only for SSM/hybrid archs; no
+encoder-only archs are assigned, so decode shapes run everywhere else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import ModelConfig, SHAPES_BY_NAME, ShapeConfig
+from repro.models.transformer import init_cache
+
+I32 = jnp.int32
+_SUBQUADRATIC = {"ssm", "hybrid"}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in _SUBQUADRATIC:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is a full-attention arch (skip per assignment)")
+    return True, ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cd = cfg.compute_dtype
+    if cfg.family == "vlm":
+        P = cfg.vision_stub_patches
+        return {
+            "inputs": sds((B, S - P), I32),
+            "targets": sds((B, S - P), I32),
+            "vision_embeds": sds((B, P, cfg.d_model), cd),
+            "positions": sds((3, B, S), I32),
+        }
+    batch = {"inputs": sds((B, S), I32), "targets": sds((B, S), I32)}
+    if cfg.n_encoder_layers:
+        batch["encoder_embeds"] = sds((B, S, cfg.d_model), cd)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cd = cfg.compute_dtype
+    if cfg.family == "vlm":
+        P = cfg.vision_stub_patches
+        return {
+            "tokens": sds((B, S - P), I32),
+            "vision_embeds": sds((B, P, cfg.d_model), cd),
+            "positions": sds((3, B, S), I32),
+        }
+    batch = {"tokens": sds((B, S), I32)}
+    if cfg.n_encoder_layers:
+        batch["encoder_embeds"] = sds((B, S, cfg.d_model), cd)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, Any]:
+    """(cache ShapeDtypeStructs, token specs) for one decode step with a
+    cache of seq_len valid entries."""
+    B, S = shape.global_batch, shape.seq_len
+    cross = S if cfg.n_encoder_layers else 0
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S, cross_len=cross))
+    tokens = sds((B, 1), I32)
+    return cache, tokens
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Everything the dry-run needs to lower this cell (model inputs only;
+    state/cache specs are built by the step assemblers in `dryrun`)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    out: Dict[str, Any] = {"cfg": cfg, "shape": shape, "supported": ok, "skip_reason": why}
+    if not ok:
+        return out
+    if shape.kind == "train":
+        out["batch"] = train_batch_specs(cfg, shape)
+    elif shape.kind == "prefill":
+        out["batch"] = prefill_batch_specs(cfg, shape)
+    else:
+        out["cache"], out["tokens"] = decode_specs(cfg, shape)
+    return out

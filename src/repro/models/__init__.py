@@ -1,0 +1,22 @@
+"""Composable model substrate: every assigned architecture family in raw JAX."""
+
+from .config import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    reduced,
+)
+from .transformer import (  # noqa: F401
+    encode,
+    forward,
+    init_cache,
+    init_lm,
+    lm_loss,
+    logits_fn,
+    stack_layout,
+)

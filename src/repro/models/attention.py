@@ -1,0 +1,340 @@
+"""Grouped-query attention with RoPE/M-RoPE, KV cache, and cross-attention.
+
+The jnp path here is the *reference* implementation (and what the dry-run
+lowers — XLA-native ops give clean HLO for the roofline analysis).  The
+Pallas flash kernels in `repro.kernels` are drop-in replacements selected
+with ``impl="flash"`` / ``impl="flash_decode"`` (validated in interpret mode
+on CPU; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import constrain
+
+from .config import ModelConfig
+from .layers import (apply_linear, apply_mrope, apply_rope, apply_rope_tables,
+                     dtype_of, init_linear)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, dh = cfg.d_model, cfg.d_head
+    p = {
+        "wq": init_linear(kq, d, cfg.n_heads * dh, dtype, bias=cfg.qkv_bias),
+        "wk": init_linear(kk, d, cfg.n_kv_heads * dh, dtype, bias=cfg.qkv_bias),
+        "wv": init_linear(kv, d, cfg.n_kv_heads * dh, dtype, bias=cfg.qkv_bias),
+        "wo": init_linear(ko, cfg.n_heads * dh, d, dtype, scale=(cfg.n_heads * dh) ** -0.5),
+    }
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _split_heads(x, n_heads, d_head):
+    return x.reshape(*x.shape[:-1], n_heads, d_head)
+
+
+def _rope(cfg: ModelConfig, x, positions, rope_cache=None):
+    if rope_cache is not None:
+        return apply_rope_tables(x, rope_cache)
+    if positions is None:
+        return x
+    if cfg.mrope:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def gqa_reference(
+    q: jnp.ndarray,            # (B, Sq, Hq, Dh)
+    k: jnp.ndarray,            # (B, Sk, Hkv, Dh)
+    v: jnp.ndarray,            # (B, Sk, Hkv, Dh)
+    causal: bool,
+    q_offset: int | jnp.ndarray = 0,   # absolute position of q[0] (decode)
+    kv_len: Optional[jnp.ndarray] = None,  # #valid cache entries (decode)
+) -> jnp.ndarray:
+    """Pure-jnp GQA attention; fp32 softmax.  Oracle for the flash kernels."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (Dh ** 0.5)
+    Sk = k.shape[1]
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = None  # broadcastable to (B, Sq, Sk); offsets/lengths may be per-row
+    if causal:
+        qoff = jnp.broadcast_to(jnp.asarray(q_offset), (B,))
+        mask = (qoff[:, None, None] + qpos[None, :, None]) >= kpos[None, None, :]
+    if kv_len is not None:
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len), (B,))
+        valid = kpos[None, None, :] < kvl[:, None, None]
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def _flash_fwd_math(q, k, v, causal, q_offset, kv_len, q_chunk, k_chunk):
+    """Online-softmax forward.  q: (B,Sq,Hq,Dh) → (out, lse (B,kv,G,Sq)).
+    Pure XLA ops — `repro.kernels.flash_attention` is the Pallas twin with
+    explicit VMEM tiling."""
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = Dh ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, q_chunk, Hkv, G, Dh), 1, 0).astype(jnp.float32)
+    kb = jnp.moveaxis(k.reshape(B, nk, k_chunk, Hkv, Dh), 1, 0).astype(jnp.float32)
+    vb = jnp.moveaxis(v.reshape(B, nk, k_chunk, Hkv, Dh), 1, 0).astype(jnp.float32)
+
+    def per_q(qi, q_blk):  # q_blk: (B, qc, Hkv, G, Dh)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def per_k(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk) * scale
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if kv_len is not None:
+                mask &= (kpos < kv_len)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, v_blk)
+            return (m_new, l_new, acc_new), 0
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_k, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,kv,G,qc,Dh)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))                # (B,kv,G,qc)
+        return jnp.moveaxis(out, 3, 1), lse
+
+    with jax.named_scope("kscope_flash_fwd"):
+        out, lse = jax.vmap(per_q)(jnp.arange(nq), qb)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, Hkv, G, Sq)        # (B,kv,G,nq·qc)
+    return out, lse
+
+
+def chunked_attention(q, k, v, *, causal, q_offset=0, kv_len=None,
+                      q_chunk: int = 1024, k_chunk: int = 1024):
+    """Forward-only online-softmax attention (prefill / encoder paths may
+    carry traced offsets/lengths; training uses `flash_attention_jnp`)."""
+    q_chunk = min(q_chunk, q.shape[1])
+    k_chunk = min(k_chunk, k.shape[1])
+    if q.shape[1] % q_chunk or k.shape[1] % k_chunk:
+        return gqa_reference(q, k, v, causal, q_offset, kv_len)
+    out, _ = _flash_fwd_math(q, k, v, causal, q_offset, kv_len, q_chunk, k_chunk)
+    return out
+
+
+# ---------------------------------------------------------- flash (train) --
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_jnp(q, k, v, causal: bool, q_chunk: int, k_chunk: int):
+    """Flash attention with a flash *backward* (recompute probabilities per
+    block from the saved log-sum-exp instead of storing them) — without this
+    the scan backward stashes every (qc × kc) probability block and a 4k
+    train step needs tens of GB per layer."""
+    out, _ = _flash_fwd_math(q, k, v, causal, 0, None, q_chunk, k_chunk)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, q_chunk, k_chunk):
+    out, lse = _flash_fwd_math(q, k, v, causal, 0, None, q_chunk, k_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, q_chunk, k_chunk, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = Dh ** -0.5
+    f32 = jnp.float32
+    qb = jnp.moveaxis(q.reshape(B, nq, q_chunk, Hkv, G, Dh), 1, 0).astype(f32)
+    kb = jnp.moveaxis(k.reshape(B, nk, k_chunk, Hkv, Dh), 1, 0).astype(f32)
+    vb = jnp.moveaxis(v.reshape(B, nk, k_chunk, Hkv, Dh), 1, 0).astype(f32)
+    dob = jnp.moveaxis(dout.reshape(B, nq, q_chunk, Hkv, G, Dh), 1, 0).astype(f32)
+    lseb = jnp.moveaxis(lse.reshape(B, Hkv, G, nq, q_chunk), 3, 0)  # (nq,B,kv,G,qc)
+    # D_i = Σ_d dout·out  (rowwise), per q position.
+    delta = jnp.einsum("bsqgd,bsqgd->bqgs",
+                       dout.reshape(B, Sq, Hkv, G, Dh).astype(f32),
+                       out.reshape(B, Sq, Hkv, G, Dh).astype(f32))  # (B,kv,G,Sq)
+    deltab = jnp.moveaxis(delta.reshape(B, Hkv, G, nq, q_chunk), 3, 0)
+
+    def mask_for(qi, kj):
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        kpos = kj * k_chunk + jnp.arange(k_chunk)
+        return qpos[:, None] >= kpos[None, :]
+
+    # Pass 1 — dq: vmap over q blocks, scan over k blocks.
+    def dq_per_q(qi, q_blk, do_blk, lse_blk, dl_blk):
+        def body(dq_acc, inputs):
+            kj, k_blk, v_blk = inputs
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk) * scale
+            if causal:
+                s = jnp.where(mask_for(qi, kj)[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", do_blk, v_blk)
+            ds = p * (dp - dl_blk[..., None])
+            dq_acc = dq_acc + jnp.einsum("bkgqt,btkd->bqkgd", ds, k_blk) * scale
+            return dq_acc, 0
+        dq0 = jnp.zeros_like(q_blk)
+        dq_blk, _ = jax.lax.scan(body, dq0, (jnp.arange(nk), kb, vb))
+        return dq_blk
+
+    with jax.named_scope("kscope_flash_bwd"):
+        dq = jax.vmap(dq_per_q)(jnp.arange(nq), qb, dob, lseb, deltab)
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+    # Pass 2 — dk/dv: vmap over k blocks, scan over q blocks.
+    def dkv_per_k(kj, k_blk, v_blk):
+        def body(carry, inputs):
+            dk_acc, dv_acc = carry
+            qi, q_blk, do_blk, lse_blk, dl_blk = inputs
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk) * scale
+            if causal:
+                s = jnp.where(mask_for(qi, kj)[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgd->btkd", p, do_blk)
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", do_blk, v_blk)
+            ds = p * (dp - dl_blk[..., None])
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgd->btkd", ds, q_blk) * scale
+            return (dk_acc, dv_acc), 0
+        z = jnp.zeros_like(k_blk)
+        (dk_blk, dv_blk), _ = jax.lax.scan(
+            body, (z, jnp.zeros_like(v_blk)),
+            (jnp.arange(nq), qb, dob, lseb, deltab))
+        return dk_blk, dv_blk
+
+    with jax.named_scope("kscope_flash_bwd"):
+        dk, dv = jax.vmap(dkv_per_k)(jnp.arange(nk), kb, vb)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, Sk, Hkv, Dh).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, Sk, Hkv, Dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_jnp.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+#: Sequences at or above this length use the online-softmax path.
+CHUNKED_ATTN_THRESHOLD = 2048
+_Q_CHUNK = 1024
+_K_CHUNK = 1024
+
+
+def _self_attention_math(q, k, v, causal, q_offset=0, kv_len=None):
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq < CHUNKED_ATTN_THRESHOLD and Sk <= 2 * CHUNKED_ATTN_THRESHOLD:
+        return gqa_reference(q, k, v, causal, q_offset, kv_len)
+    qc, kc = min(_Q_CHUNK, Sq), min(_K_CHUNK, Sk)
+    static_extras = isinstance(q_offset, int) and kv_len is None
+    if static_extras and q_offset == 0 and Sq % qc == 0 and Sk % kc == 0:
+        return flash_attention_jnp(q, k, v, causal, qc, kc)
+    return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             kv_len=kv_len, q_chunk=qc, k_chunk=kc)
+
+
+def attention(
+    params: Dict,
+    x: jnp.ndarray,                      # (B, S, d)
+    cfg: ModelConfig,
+    positions: Optional[jnp.ndarray],    # (B,S) or (3,B,S) for mrope
+    *,
+    causal: bool = True,
+    kv_input: Optional[jnp.ndarray] = None,   # cross-attention memory (B,Sk,d)
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,  # scalar int32 write offset
+    impl: Optional[str] = None,
+    rope_cache=None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Self- or cross-attention with optional KV cache.
+
+    Modes:
+      * train/prefill: ``cache=None`` (prefill callers build a cache from the
+        returned k/v via `prefill_cache`), full-sequence causal.
+      * decode: ``cache`` + ``cache_index`` given, S == 1: write new k/v at
+        ``cache_index`` and attend over the valid prefix.
+      * cross: ``kv_input`` given (no cache, no causality).
+    """
+    impl = impl or cfg.attn_impl
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    kv_src = x if kv_input is None else kv_input
+    q = _split_heads(apply_linear(params["wq"], x, cd), cfg.n_heads, cfg.d_head)
+    k = _split_heads(apply_linear(params["wk"], kv_src, cd), cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(apply_linear(params["wv"], kv_src, cd), cfg.n_kv_heads, cfg.d_head)
+    q = constrain(q, ("dp", None, "tp", None))
+    k = constrain(k, ("dp", None, "tp", None))
+    v = constrain(v, ("dp", None, "tp", None))
+
+    if kv_input is None:  # RoPE only applies to self-attention
+        q = _rope(cfg, q, positions, rope_cache)
+        k = _rope(cfg, k, positions, rope_cache)
+
+    new_cache = None
+    if cache is not None:
+        # Decode: scatter this step's k/v at the write offset — a scalar in
+        # lockstep decode, or per-row (B,) under continuous batching.
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 0:
+            upd = lambda c, x: jax.lax.dynamic_update_slice_in_dim(
+                c, x.astype(c.dtype), idx, axis=1)
+        else:
+            upd = lambda c, x: jax.vmap(
+                lambda cb, xb, ib: jax.lax.dynamic_update_slice_in_dim(
+                    cb, xb.astype(cb.dtype), ib, axis=0))(c, x, idx)
+        k_cache = upd(cache["k"], k)
+        v_cache = upd(cache["v"], v)
+        new_cache = {"k": k_cache, "v": v_cache}
+        kv_len = cache_index + S
+        if impl == "flash_decode" and S == 1:
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(q, k_cache, v_cache, kv_len)
+        elif S == 1:
+            # Single-step decode: prefix mask only.
+            out = gqa_reference(q, k_cache, v_cache, causal=False, kv_len=kv_len)
+        else:
+            # Prefill-into-cache: causal with absolute offset.
+            out = _self_attention_math(q, k_cache, v_cache, causal=True,
+                                       q_offset=cache_index, kv_len=kv_len)
+    else:
+        if impl == "flash" and kv_input is None and causal:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=True)
+        else:
+            out = _self_attention_math(q, k, v, causal=causal and kv_input is None)
+
+    out = constrain(out, ("dp", None, "tp", None))
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return apply_linear(params["wo"], out, cd), new_cache
+
+
+def prefill_cache(cfg: ModelConfig, k: jnp.ndarray, v: jnp.ndarray, max_len: int) -> Dict:
+    """Extend prefill-computed k/v to a full-size cache (right-padded)."""
+    B, S, Hkv, Dh = k.shape
+    pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}

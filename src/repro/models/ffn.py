@@ -1,0 +1,44 @@
+"""Dense feed-forward variants: SwiGLU (Qwen/DBRX/Kimi), GELU (Seamless),
+squared-ReLU (Nemotron-4)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import constrain
+
+from .config import ModelConfig
+from .layers import ACTIVATIONS, apply_linear, dtype_of, init_linear, relu2
+
+
+def init_ffn(key, cfg: ModelConfig, dtype, d_ff: int = 0) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.ffn_type == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": init_linear(k1, d, d_ff, dtype, bias=cfg.ffn_bias),
+            "w_up": init_linear(k2, d, d_ff, dtype, bias=cfg.ffn_bias),
+            "w_down": init_linear(k3, d_ff, d, dtype, bias=cfg.ffn_bias,
+                                  scale=d_ff ** -0.5),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": init_linear(k1, d, d_ff, dtype, bias=cfg.ffn_bias),
+        "w_down": init_linear(k2, d_ff, d, dtype, bias=cfg.ffn_bias,
+                              scale=d_ff ** -0.5),
+    }
+
+
+def ffn(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.ffn_type == "swiglu":
+        gate = jax.nn.silu(apply_linear(params["w_gate"], x, cd))
+        up = constrain(apply_linear(params["w_up"], x, cd), ("dp", None, "tp"))
+        return apply_linear(params["w_down"], gate * up, cd)
+    act = ACTIVATIONS["gelu" if cfg.ffn_type == "gelu" else "relu2"]
+    h = constrain(act(apply_linear(params["w_up"], x, cd)), ("dp", None, "tp"))
+    return apply_linear(params["w_down"], h, cd)

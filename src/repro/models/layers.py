@@ -1,0 +1,188 @@
+"""Base layers: norms, embeddings, RoPE/M-RoPE, activations, linear init.
+
+Pure-functional: ``init_*`` builds param pytrees (plain dicts of jnp arrays);
+``apply`` logic is free functions.  Naming conventions of leaves matter —
+`repro.parallel.sharding` maps leaf paths to PartitionSpecs by name.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+@jax.custom_vjp
+def _bf16_barrier_core(x):
+    return x
+
+
+def _bf16_bar_fwd(x):
+    return x, None
+
+
+def _bf16_bar_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_bf16_barrier_core.defvjp(_bf16_bar_fwd, _bf16_bar_bwd)
+
+
+def bf16_cotangent_barrier(x):
+    """Identity whose backward casts the cotangent to bf16 — placed on the
+    residual stream it stops fp32 gradient chains (born in fp32 softmax/norm
+    internals) from propagating through every dot transpose and activation
+    psum (§Perf: halves backward HBM+wire traffic).  No-op for non-bf16
+    primals (fp32 smoke configs)."""
+    return _bf16_barrier_core(x) if x.dtype == jnp.bfloat16 else x
+
+
+# ------------------------------------------------------------------ linear
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False,
+                scale: Optional[float] = None):
+    """Truncated-normal fan-in init (LeCun-ish), matching common LM practice."""
+    if scale is None:
+        scale = d_in ** -0.5
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_linear(p, x, compute_dtype):
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# -------------------------------------------------------------------- norm
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x, scale, eps: float):
+    with jax.named_scope("kscope_rmsnorm"):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps)
+        return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(x, scale, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d: int, dtype):
+    return {"embedding": (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)}
+
+
+def embed(p, tokens, compute_dtype):
+    return jnp.take(p["embedding"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(p, x, logit_dtype):
+    return jnp.einsum("...d,vd->...v", x, p["embedding"]).astype(logit_dtype)
+
+
+# ------------------------------------------------------------- activations
+def relu2(x):
+    """Squared ReLU (Nemotron-4 / Primer)."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {"gelu": jax.nn.gelu, "relu2": relu2, "silu": jax.nn.silu}
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions_thw: jnp.ndarray,  # (3, ..., S) — temporal / height / width ids
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the Dh/2 frequency slots are partitioned into
+    (temporal, height, width) sections, each rotated by its own position id.
+    Text tokens use identical t/h/w ids, recovering standard RoPE."""
+    d_head = x.shape[-1]
+    if sum(sections) != d_head // 2:
+        raise ValueError(f"mrope sections {sections} must sum to d_head/2={d_head // 2}")
+    freqs = rope_freqs(d_head, theta)                 # (Dh/2,)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d_head // 2)
+    # Select, per frequency slot, the position id of its section.
+    pos = jnp.take(jnp.moveaxis(positions_thw, 0, -1), sec_id, axis=-1)  # (..., S, Dh/2)
+    angles = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_tables(cfg: ModelConfig, positions: jnp.ndarray):
+    """Precompute (cos, sin) rotation tables ONCE per step (loop-invariant
+    scan operands — XLA hoists them out of the layer loop, §Perf: removes
+    per-layer trig + fp32 position chains).  Handles M-RoPE section gather.
+    Returns (B, S, Dh/2) fp32 pairs."""
+    freqs = rope_freqs(cfg.d_head, cfg.rope_theta)        # (Dh/2,)
+    if cfg.mrope:
+        sec_id = jnp.repeat(jnp.arange(3), jnp.array(cfg.mrope_sections),
+                            total_repeat_length=cfg.d_head // 2)
+        pos = jnp.take(jnp.moveaxis(positions, 0, -1), sec_id, axis=-1)
+        angles = pos.astype(jnp.float32) * freqs
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope_tables(x: jnp.ndarray, tables) -> jnp.ndarray:
+    """x: (B, S, H, Dh); tables from `rope_tables`."""
+    cos, sin = tables
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg: ModelConfig, batch: int, seq: int, offset=0) -> jnp.ndarray:
+    off = jnp.asarray(offset)
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = pos + (off[:, None] if off.ndim else off)   # per-row offsets allowed
+    pos = jnp.broadcast_to(pos, (batch, seq)).astype(jnp.int32)
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, batch, seq))  # text-only default
+    return pos

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN: top-k token-choice router + capacity-bounded
+sort-based dispatch (DBRX 16e/top-4, Kimi-K2 384e/top-8).
+
+Single-device reference lives here; the expert-parallel version
+(`repro.parallel.moe_ep`) wraps the same math in `shard_map` with explicit
+all-to-alls and must match it exactly (tested).  The sort-based dispatch
+gives FLOPs ∝ active-expert compute (× capacity factor), which keeps the
+dry-run roofline honest — a dense all-experts einsum would overcount by
+E/top_k (48× for Kimi).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import constrain
+
+from .config import ModelConfig
+from .ffn import ffn, init_ffn
+from .layers import dtype_of, init_linear
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
+    k_router, k_experts = jax.random.split(key)
+    # Stacked expert FFNs: leaves get a leading (E,) axis.
+    expert_keys = jax.random.split(k_experts, cfg.n_experts)
+    experts = jax.vmap(lambda k: init_ffn(k, cfg, dtype))(expert_keys)
+    return {
+        "router": init_linear(k_router, cfg.d_model, cfg.n_experts, jnp.float32),
+        "experts": experts,
+    }
+
+
+def router_probs(params, x_flat, cfg: ModelConfig):
+    """fp32 router; returns (logits, probs, top-k probs/ids) with the top-k
+    weights renormalized (standard for top-k>1 routers)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, top_p, top_ids
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    return max(1, int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                                / cfg.n_experts)))
+
+
+def build_dispatch(top_ids, top_p, n_tokens: int, cfg: ModelConfig, cap: int):
+    """Sort-based dispatch plan.
+
+    Returns (token_src, buffer_idx, keep, weight) flat arrays of length
+    ``n_tokens*top_k``, where ``buffer_idx`` addresses an (E*cap,) expert
+    buffer and dropped assignments point at a dump slot E*cap.
+    """
+    k = cfg.top_k
+    flat_e = top_ids.reshape(-1)                       # (T*k,)
+    flat_w = top_p.reshape(-1)
+    token_src = jnp.repeat(jnp.arange(n_tokens), k)    # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=cfg.n_experts)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(n_tokens * k) - offsets[sorted_e]
+    keep = rank < cap
+    buffer_idx = jnp.where(keep, sorted_e * cap + rank, cfg.n_experts * cap)
+    return token_src[order], buffer_idx, keep, flat_w[order]
+
+
+def aux_losses(logits, probs, top_ids, cfg: ModelConfig):
+    """Switch-style load-balance loss + router z-loss."""
+    E = cfg.n_experts
+    onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)  # (T,k,E)
+    frac_dispatched = onehot.sum((0, 1)) / (onehot.shape[0] * cfg.top_k)
+    mean_prob = probs.mean(0)
+    balance = E * jnp.sum(frac_dispatched * mean_prob)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return cfg.aux_loss_coef * balance + cfg.router_z_loss * z, {
+        "moe_balance": balance, "moe_zloss": z,
+    }
+
+
+def expert_ffn(expert_params, buf, cfg: ModelConfig):
+    """Apply stacked expert FFNs: buf (E, C, d) → (E, C, d)."""
+    cd = dtype_of(cfg.compute_dtype)
+    b = buf.astype(cd)
+    if cfg.ffn_type == "swiglu":
+        gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", b, expert_params["w_gate"]["w"].astype(cd)))
+        up = jnp.einsum("ecd,edf->ecf", b, expert_params["w_up"]["w"].astype(cd))
+        return jnp.einsum("ecf,efd->ecd", gate * up, expert_params["w_down"]["w"].astype(cd))
+    h = jnp.einsum("ecd,edf->ecf", b, expert_params["w_up"]["w"].astype(cd))
+    h = jax.nn.gelu(h) if cfg.ffn_type == "gelu" else jax.nn.relu(h) ** 2
+    return jnp.einsum("ecf,efd->ecd", h, expert_params["w_down"]["w"].astype(cd))
+
+
+def moe_ffn(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """MoE FFN.  x: (B, S, d) → (out, aux_loss, metrics).
+
+    With an active sharding context whose strategy selects ``ep_shardmap``,
+    dispatch runs through explicit expert-parallel all-to-alls
+    (`repro.parallel.moe_ep`); otherwise the sort-based single-program path
+    below (XLA SPMD partitions it — measured badly for many-expert models,
+    see EXPERIMENTS.md §Perf kimi iterations)."""
+    from repro.parallel.context import current
+    ctx = current()
+    if ctx is not None:
+        mesh, strat = ctx
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_ep = sizes.get(strat.tp, 1)
+        if (getattr(strat, "moe", "auto_spmd") == "ep_shardmap"
+                and n_ep > 1 and cfg.n_experts % n_ep == 0):
+            from repro.parallel.moe_ep import moe_ffn_ep
+            return moe_ffn_ep(params, x, cfg, mesh, strat)
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    logits, probs, top_p, top_ids = router_probs(params, xf, cfg)
+    cap = capacity(T, cfg)
+    token_src, buffer_idx, keep, weight = build_dispatch(top_ids, top_p, T, cfg, cap)
+
+    buf = jnp.zeros((cfg.n_experts * cap + 1, d), x.dtype)
+    buf = buf.at[buffer_idx].set(xf[token_src] * keep[:, None].astype(x.dtype))
+    ebuf = constrain(buf[:-1].reshape(cfg.n_experts, cap, d), ("ep", None, None))
+    y = expert_ffn(params["experts"], ebuf, cfg)
+    y = jnp.concatenate([y.reshape(-1, d), jnp.zeros((1, d), y.dtype)])
+
+    gathered = y[buffer_idx] * (weight * keep)[:, None].astype(y.dtype)
+    out = jnp.zeros((T, d), y.dtype).at[token_src].add(gathered)
+    aux, metrics = aux_losses(logits, probs, top_ids, cfg)
+    metrics["moe_drop_frac"] = 1.0 - keep.mean()
+    return out.reshape(B, S, d), aux, metrics
+
+
+def moe_ffn_dense_oracle(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """All-experts dense evaluation (no capacity drops) — tiny-shape oracle
+    for testing the dispatch path when capacity_factor is large enough that
+    nothing drops."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    _, _, top_p, top_ids = router_probs(params, xf, cfg)
+    # (T, E): combined weight per expert.
+    w = jnp.zeros((xf.shape[0], cfg.n_experts), jnp.float32)
+    w = jnp.take_along_axis(w, top_ids, axis=1)  # zeros; replaced below
+    w = jnp.zeros_like(w).at[
+        jnp.arange(xf.shape[0])[:, None], top_ids
+    ].set(top_p)
+    # Evaluate every expert on every token.
+    buf = jnp.broadcast_to(xf[None], (cfg.n_experts, xf.shape[0], d))
+    y = expert_ffn(params["experts"], buf, cfg)  # (E, T, d)
+    out = jnp.einsum("etd,te->td", y.astype(jnp.float32), w)
+    return out.reshape(B, S, d).astype(x.dtype)

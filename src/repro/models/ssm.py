@@ -1,0 +1,198 @@
+"""Mamba2 (SSD — state-space duality) blocks for zamba2-7b / hybrid stacks.
+
+Selective state space per head p with state size N:
+
+    S_t = exp(A·dt_t)·S_{t-1} + dt_t · x_t ⊗ B_t          (S: P×N)
+    y_t = C_t · S_t + D · x_t
+
+Training/prefill uses the chunked algorithm (intra-chunk quadratic form +
+inter-chunk state recurrence via `lax.scan`); decode carries (conv window,
+state) and steps in O(P·N).  The chunked jnp path is the oracle for the
+`repro.kernels.ssm_scan` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import constrain
+
+from .config import ModelConfig
+from .layers import dtype_of, init_linear, rms_norm
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.mamba_headdim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Dict:
+    d_inner, H, N = _dims(cfg)
+    d = cfg.d_model
+    k_in, k_conv, k_out, k_a, k_dt = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * N  # conv over (x, B, C)
+    # A ∈ [1, 16] log-init (Mamba2 default), dt bias ≈ softplus⁻¹(0.005…0.1).
+    a_init = jnp.exp(jax.random.uniform(k_a, (H,), minval=jnp.log(1.0), maxval=jnp.log(16.0)))
+    dt0 = jnp.exp(jax.random.uniform(k_dt, (H,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))
+    return {
+        "in_proj": init_linear(k_in, d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k_conv, (cfg.ssm_conv, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(a_init).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt0)).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": init_linear(k_out, d_inner, d, dtype, scale=d_inner ** -0.5),
+    }
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B,S,C), w: (W,C).  ``state`` is the
+    trailing W−1 inputs from the previous call (decode); returns new state."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    return out, xp[:, -(W - 1):]
+
+
+def ssd_chunked(
+    x: jnp.ndarray,        # (B, S, H, P)
+    Bm: jnp.ndarray,       # (B, S, N)
+    Cm: jnp.ndarray,       # (B, S, N)
+    dt: jnp.ndarray,       # (B, S, H)  (post-softplus)
+    A_log: jnp.ndarray,    # (H,)
+    D: jnp.ndarray,        # (H,)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if S % chunk:
+        raise ValueError(f"seq {S} not divisible by chunk {chunk}")
+    nc = S // chunk
+    f32 = jnp.float32
+    xc = x.reshape(B, nc, chunk, H, P).astype(f32)
+    Bc = Bm.reshape(B, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(B, nc, chunk, N).astype(f32)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    la = -jnp.exp(A_log.astype(f32)) * dtc                      # (B,nc,L,H) log decay
+    cum = jnp.cumsum(la, axis=2)                                # inclusive cumsum
+
+    # Intra-chunk quadratic term: w[i,j] = exp(cum_i - cum_j)·dt_j for j ≤ i.
+    with jax.named_scope("kscope_ssd"):
+        li = cum[:, :, :, None, :]                              # (B,nc,L,1,H)
+        lj = cum[:, :, None, :, :]                              # (B,nc,1,L,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tri[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+        w = w * dtc[:, :, None, :, :]                           # (B,nc,i,j,H)
+        g = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)               # (B,nc,i,j)
+        y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", g, w, xc)
+
+    # Inter-chunk: scan states across chunks.
+    decay_end = jnp.exp(cum[:, :, -1])                          # (B,nc,H)
+    # Contribution of step j to the chunk-final state: exp(cum_L - cum_j)·dt_j.
+    wL = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                 # (B,nc,L,H)
+    chunk_state = jnp.einsum("bclh,bclhp,bcln->bchpn", wL, xc, Bc)
+
+    def step(S_prev, inputs):
+        dec, cs = inputs                                        # (B,H), (B,H,P,N)
+        S_new = S_prev * dec[..., None, None] + cs
+        return S_new, S_prev
+
+    S0 = init_state.astype(f32) if init_state is not None else jnp.zeros((B, H, P, N), f32)
+    S_final, S_starts = jax.lax.scan(
+        step,
+        S0,
+        (jnp.moveaxis(decay_end, 1, 0), jnp.moveaxis(chunk_state, 1, 0)),
+    )
+    S_starts = jnp.moveaxis(S_starts, 0, 1)                     # (B,nc,H,P,N) state at chunk start
+    # y_inter_i = exp(cum_i) · C_i · S_start
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, jnp.exp(cum), S_starts)
+    y = y_intra + y_inter + xc * D.astype(f32)[None, None, None, :, None]
+    return y.reshape(B, S, H, P), S_final
+
+
+def ssd_reference(x, Bm, Cm, dt, A_log, D, init_state=None):
+    """Step-by-step scan oracle (O(S) sequential) for testing the chunked path."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    A = -jnp.exp(A_log.astype(f32))
+
+    def step(S_prev, inputs):
+        xt, bt, ct, dtt = inputs
+        dec = jnp.exp(A[None] * dtt)                            # (B,H)
+        S_new = S_prev * dec[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt.astype(f32), bt.astype(f32), dtt)
+        y = jnp.einsum("bhpn,bn->bhp", S_new, ct.astype(f32))
+        return S_new, y
+
+    S0 = init_state if init_state is not None else jnp.zeros((B, H, P, N), f32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0).astype(f32))
+    S_final, ys = jax.lax.scan(step, S0.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y, S_final
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d_inner, H, N = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * N), dtype_of(cfg.compute_dtype)),
+        "state": jnp.zeros((batch, H, cfg.mamba_headdim, N), jnp.float32),
+    }
+
+
+def mamba2_block(
+    params: Dict,
+    x: jnp.ndarray,                 # (B, S, d) — pre-normed input
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Mamba2 mixer.  With ``cache`` (decode) S may be 1; state is carried."""
+    d_inner, H, N = _dims(cfg)
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    proj = jnp.einsum("bsd,dk->bsk", x.astype(cd), params["in_proj"]["w"].astype(cd))
+    proj = constrain(proj, ("dp", None, "tp"))
+    z, xs, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, conv_state = causal_conv(
+        conv_in, params["conv_w"].astype(cd), params["conv_b"].astype(cd),
+        None if cache is None else cache["conv"],
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    xh = xs.reshape(B, S, H, cfg.mamba_headdim)
+
+    init_state = None if cache is None else cache["state"]
+    if S == 1:
+        # Decode: exact single-step recurrence.
+        y, state = ssd_reference(xh, Bm, Cm, dt, params["A_log"], params["D"],
+                                 init_state=init_state)
+    elif cfg.ssm_impl == "pallas" and S % cfg.ssm_chunk == 0 and init_state is None:
+        from repro.kernels import ops as kops
+        y, state = kops.ssm_scan(xh, Bm, Cm, dt, params["A_log"], params["D"],
+                                 chunk=cfg.ssm_chunk)
+    else:
+        # Train / prefill: chunked scan (state carried for prefill).
+        chunk = cfg.ssm_chunk if S % cfg.ssm_chunk == 0 else 1
+        y, state = ssd_chunked(xh, Bm, Cm, dt, params["A_log"], params["D"], chunk,
+                               init_state=init_state)
+    new_cache = None if cache is None else {"conv": conv_state, "state": state}
+
+    y = y.reshape(B, S, d_inner).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"]["w"].astype(cd))
+    return out, new_cache

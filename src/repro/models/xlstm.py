@@ -1,0 +1,290 @@
+"""xLSTM blocks (xlstm-1.3b): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory with recurrent connections), both with exponential
+gating and max-stabilizers, per Beck et al. 2024.
+
+The stack follows the paper's [7:1] ratio — every 8th block is sLSTM, the
+rest mLSTM (`repro.configs.xlstm_1_3b`).  Both recurrences are exact fp32
+`lax.scan`s over time; mLSTM state is (C: P×P matrix, n: P, m: scalar) per
+head, sLSTM state is (c, n, h, m) vectors per head.  sLSTM is inherently
+sequential (recurrent weights on h), which the xLSTM paper itself notes —
+there is no parallel form to exploit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import constrain
+
+from .config import ModelConfig
+from .layers import dtype_of, init_linear, rms_norm
+from .ssm import causal_conv
+
+
+def _head_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return d_inner, d_inner // cfg.n_heads
+
+
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = cfg.slstm_expand * cfg.d_model
+    return d_inner, d_inner // cfg.n_heads
+
+
+def init_blockdiag(key, d: int, block: int, dtype):
+    """Block-diagonal linear (xLSTM q/k/v, blocksize 4): (d/bs, bs, bs)."""
+    nb = d // block
+    w = jax.random.normal(key, (nb, block, block)) * block ** -0.5
+    return {"w": w.astype(dtype)}
+
+
+def apply_blockdiag(p, x, cd):
+    nb, bs, _ = p["w"].shape
+    xb = x.reshape(*x.shape[:-1], nb, bs).astype(cd)
+    y = jnp.einsum("...np,npq->...nq", xb, p["w"].astype(cd))
+    return y.reshape(*x.shape)
+
+
+# =============================================================== mLSTM ====
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Dict:
+    d, (d_inner, P) = cfg.d_model, _head_dims(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": init_linear(ks[0], d, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": init_blockdiag(ks[2], d_inner, cfg.qkv_block, dtype),
+        "wk": init_blockdiag(ks[3], d_inner, cfg.qkv_block, dtype),
+        "wv": init_blockdiag(ks[4], d_inner, cfg.qkv_block, dtype),
+        "w_gates": init_linear(ks[5], d_inner, 2 * H, jnp.float32),  # ĩ, f̃ per head
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "down_proj": init_linear(ks[6], d_inner, d, dtype, scale=d_inner ** -0.5),
+    }
+
+
+def mlstm_recurrence(q, k, v, igate, fgate, init=None):
+    """Stabilized mLSTM scan.  q,k,v: (B,S,H,P); gates: (B,S,H) pre-act.
+    Returns (h (B,S,H,P), (C,n,m) final)."""
+    B, S, H, P = q.shape
+    f32 = jnp.float32
+    q, k, v = (t.astype(f32) for t in (q, k, v))
+    k = k / (P ** 0.5)
+    lf = jax.nn.log_sigmoid(fgate.astype(f32))      # log forget gate
+    li = igate.astype(f32)                          # log input gate (i = exp(ĩ))
+
+    def step(carry, inputs):
+        C, n, m = carry                             # (B,H,P,P), (B,H,P), (B,H)
+        qt, kt, vt, lft, lit = inputs
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)               # stabilized gates
+        ip = jnp.exp(lit - m_new)
+        C_new = fp[..., None, None] * C + ip[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])    # v ⊗ k
+        n_new = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhpq,bhq->bhp", C_new, qt)
+        den = jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, qt))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C_new, n_new, m_new), h
+
+    if init is None:
+        init = (jnp.zeros((B, H, P, P), f32), jnp.zeros((B, H, P), f32),
+                jnp.zeros((B, H), f32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, lf, li))
+    final, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+def mlstm_chunked(q, k, v, igate, fgate, chunk: int, init=None):
+    """Chunkwise-parallel stabilized mLSTM (the xLSTM paper's training form;
+    cf. TFLA).  Same math as `mlstm_recurrence` (tested equal) but the
+    matrix memory C only materializes at chunk boundaries — the per-step
+    scan saves a (P×P) state per *token* for backward (1.4 TB/device at 4k
+    sequence, measured), the chunkwise form one per chunk.
+
+    q,k,v: (B,S,H,P); gates: (B,S,H) pre-activation.  Returns
+    (h (B,S,H,P), (C,n,m) final)."""
+    B, S, H, P = q.shape
+    if S % chunk:
+        raise ValueError(f"seq {S} % chunk {chunk} != 0")
+    nc, L = S // chunk, chunk
+    f32 = jnp.float32
+    qs = q.reshape(B, nc, L, H, P).astype(f32)
+    ks = (k.reshape(B, nc, L, H, P).astype(f32)) / (P ** 0.5)
+    vs = v.reshape(B, nc, L, H, P).astype(f32)
+    lf = jax.nn.log_sigmoid(fgate.astype(f32)).reshape(B, nc, L, H)
+    li = igate.astype(f32).reshape(B, nc, L, H)
+    b = jnp.cumsum(lf, axis=2)                      # (B,nc,L,H) inclusive
+    btot = b[:, :, -1]                              # (B,nc,H)
+    with jax.named_scope("kscope_mlstm"):
+        # Intra-chunk log weights D_ij = b_i − b_j + ĩ_j  (j ≤ i).
+        D = b[:, :, :, None, :] - b[:, :, None, :, :] + li[:, :, None, :, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, None, :, :, None], D, -jnp.inf)
+        m_intra = D.max(axis=3)                     # (B,nc,L,H)
+        # Chunk-final state ingredients.
+        wstate = btot[:, :, None, :] - b + li       # (B,nc,L,H)
+        m_state = wstate.max(axis=2)                # (B,nc,H)
+        s = jnp.einsum("bclhp,bcjhp->bchlj", qs, ks)  # (B,nc,H,L,L)
+
+    def step(carry, xs_c):
+        C, n, m = carry                             # (B,H,P,P),(B,H,P),(B,H)
+        q_c, k_c, v_c, b_c, D_c, mi_c, s_c, bt_c, ws_c, ms_c = xs_c
+        m_i = jnp.maximum(mi_c, b_c + m[:, None])                 # (B,L,H)
+        Pij = jnp.exp(D_c - m_i[:, :, None])                      # (B,L,L,H)
+        num = jnp.einsum("bhij,bijh,bjhp->bihp",
+                         s_c, Pij, v_c)                           # intra numerator
+        den = jnp.einsum("bhij,bijh->bih", s_c, Pij)
+        w_inter = jnp.exp(b_c + m[:, None] - m_i)                 # (B,L,H)
+        num = num + w_inter[..., None] * jnp.einsum("bhvk,blhk->blhv", C, q_c)
+        den = den + w_inter * jnp.einsum("bhk,blhk->blh", n, q_c)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # Advance the carry.
+        m_new = jnp.maximum(bt_c + m, ms_c)                       # (B,H)
+        wS = jnp.exp(ws_c - m_new[:, None])                       # (B,L,H)
+        C_new = jnp.exp(bt_c + m - m_new)[..., None, None] * C + \
+            jnp.einsum("blh,blhv,blhk->bhvk", wS, v_c, k_c)
+        n_new = jnp.exp(bt_c + m - m_new)[..., None] * n + \
+            jnp.einsum("blh,blhk->bhk", wS, k_c)
+        return (C_new, n_new, m_new), h
+
+    if init is None:
+        init = (jnp.zeros((B, H, P, P), f32), jnp.zeros((B, H, P), f32),
+                jnp.full((B, H), 0.0, f32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (qs, ks, vs, b, D, m_intra, s, btot, wstate, m_state))
+    with jax.named_scope("kscope_mlstm"):
+        final, hs = jax.lax.scan(step, init, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, P)
+    return h, final
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d_inner, P = _head_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype_of(cfg.compute_dtype)),
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_block(params, x, cfg: ModelConfig, cache: Optional[Dict] = None):
+    """x: (B,S,d) pre-normed → (out, new_cache)."""
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    d_inner, P = _head_dims(cfg)
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,dk->bsk", x.astype(cd), params["up_proj"]["w"].astype(cd))
+    up = constrain(up, ("dp", None, "tp"))
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_out, conv_state = causal_conv(
+        xm, params["conv_w"].astype(cd), params["conv_b"].astype(cd),
+        None if cache is None else cache["conv"])
+    xc = jax.nn.silu(conv_out)
+    q = apply_blockdiag(params["wq"], xc, cd).reshape(B, S, H, P)
+    k = apply_blockdiag(params["wk"], xc, cd).reshape(B, S, H, P)
+    v = apply_blockdiag(params["wv"], xm, cd).reshape(B, S, H, P)
+    gates = jnp.einsum("bsk,kj->bsj", xm.astype(jnp.float32), params["w_gates"]["w"])
+    igate, fgate = jnp.split(gates, 2, axis=-1)
+
+    init = None if cache is None else (cache["C"], cache["n"], cache["m"])
+    chunk = min(cfg.mlstm_chunk, S)
+    if S > 1 and S % chunk == 0:
+        h, (C, n, m) = mlstm_chunked(q, k, v, igate, fgate, chunk, init)
+    else:
+        h, (C, n, m) = mlstm_recurrence(q, k, v, igate, fgate, init)
+    h = h.reshape(B, S, d_inner).astype(cd)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", h, params["down_proj"]["w"].astype(cd))
+    new_cache = None if cache is None else {"conv": conv_state, "C": C, "n": n, "m": m}
+    return out, new_cache
+
+
+# =============================================================== sLSTM ====
+def init_slstm(key, cfg: ModelConfig, dtype) -> Dict:
+    d, (d_inner, P) = cfg.d_model, _slstm_dims(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    # Input weights for 4 gates (z,i,f,o) + block-diag recurrent weights.
+    r = (jax.random.normal(ks[1], (4, H, P, P)) * P ** -0.5).astype(jnp.float32)
+    ff = int(d_inner * 4 / 3)
+    return {
+        "in_proj": init_linear(ks[0], d, d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_gates": init_linear(ks[3], d_inner, 4 * d_inner, jnp.float32),
+        "r_gates": r,
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "w_up": init_linear(ks[4], d_inner, 2 * ff, dtype),
+        "w_down": init_linear(ks[5], ff, d, dtype, scale=ff ** -0.5),
+    }
+
+
+def make_slstm_step(r):
+    """One sLSTM time step.  ``r``: (4,H,P,P) block-diagonal recurrent
+    weights for (z,i,f,o).  Carry: (c,n,h,m) each (B,H,P); input gx:
+    (B,4,H,P) — this step's input-weight contributions to the gates."""
+
+    def step(carry, gx):
+        c, n, h, m = carry
+        rec = jnp.einsum("ghpq,bhq->gbhp", r, h)   # (4,B,H,P)
+        zt = jnp.tanh(gx[:, 0] + rec[0])
+        lit = gx[:, 1] + rec[1]                    # log input gate (i = exp)
+        lft = jax.nn.log_sigmoid(gx[:, 2] + rec[2])
+        ot = jax.nn.sigmoid(gx[:, 3] + rec[3])
+        m_new = jnp.maximum(lft + m, lit)
+        ip = jnp.exp(lit - m_new)
+        fp = jnp.exp(lft + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    return step
+
+
+def slstm_block(params, x, cfg: ModelConfig, cache: Optional[Dict] = None):
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    d_inner, P = _slstm_dims(cfg)
+    H = cfg.n_heads
+    xi = jnp.einsum("bsd,dk->bsk", x.astype(cd), params["in_proj"]["w"].astype(cd))
+    conv_out, conv_state = causal_conv(
+        xi, params["conv_w"].astype(cd), params["conv_b"].astype(cd),
+        None if cache is None else cache["conv"])
+    xc = jax.nn.silu(conv_out)
+    gx = jnp.einsum("bsk,kj->bsj", xc.astype(jnp.float32), params["w_gates"]["w"])
+    gx = gx.reshape(B, S, 4, H, P)
+
+    step = make_slstm_step(params["r_gates"])
+    if cache is None:
+        f32 = jnp.float32
+        init = tuple(jnp.zeros((B, H, P), f32) for _ in range(4))
+    else:
+        init = (cache["c"], cache["n"], cache["h"], cache["m"])
+    final, hs = jax.lax.scan(step, init, jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_inner).astype(cd)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps)
+    up = jnp.einsum("bsk,kj->bsj", h, params["w_up"]["w"].astype(cd))
+    a, b = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(a) * b, params["w_down"]["w"].astype(cd))
+    new_cache = None if cache is None else {
+        "conv": conv_state, "c": final[0], "n": final[1], "h": final[2], "m": final[3]}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d_inner, P = _slstm_dims(cfg)
+    H = cfg.n_heads
+    f32 = jnp.float32
+    vec = lambda: jnp.zeros((batch, H, P), f32)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype_of(cfg.compute_dtype)),
+        "c": vec(), "n": vec(), "h": vec(), "m": vec(),
+    }

@@ -1,0 +1,12 @@
+"""Distribution: sharding rules, activation constraints, expert-parallel
+MoE dispatch, pipeline parallelism, compressed collectives."""
+from .sharding import (  # noqa: F401
+    ShardingStrategy, batch_specs, cache_specs, default_strategy, opt_specs,
+    param_specs, state_specs,
+)
+from .collectives import (  # noqa: F401
+    compressed_psum_mean, init_error_feedback, pod_sync_grads,
+)
+from .pipeline import (  # noqa: F401
+    bubble_fraction, pipeline_apply, split_layers_to_stages, stack_stages,
+)

@@ -1,0 +1,108 @@
+"""Gradient compression for slow collective axes (the inter-pod "pod" axis
+rides DCN, ~10× slower than ICI).
+
+`compressed_psum_mean`: int8 block-quantized reduce-scatter → all-gather
+under `shard_map` — wire bytes ≈ ¼ of an fp32 ring all-reduce — with
+**error feedback** (the quantization residual is re-injected next step, so
+compression error accumulates to O(1) instead of O(steps); Seide et al. /
+Karimireddy et al.).
+
+Usage (multi-pod DP sync):
+
+    grads, err = pod_sync_grads(grads, err, mesh, axis="pod")
+
+The compression state `err` is a param-shaped pytree carried in the train
+state.  Property-tested in tests/test_collectives.py: exactness at int8
+resolution per step, and error-feedback convergence of the running mean.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+_BLOCK = 256
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def _compressed_mean_1axis(x, err, *, axis: str, n: int):
+    """Per-device body: quantize (x+err) → int8 all-to-all (reduce-scatter
+    phase) → local sum → quantize → int8 all-gather — all wire traffic int8."""
+    y = x + err
+    shape = y.shape
+    flat = y.reshape(-1)
+    pad = (-flat.size) % (n * _BLOCK)
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)                       # one chunk per peer
+    q, scale = _quantize(chunks)                       # (n*?, B) blocks
+    q = q.reshape(n, -1, _BLOCK)
+    scale = scale.reshape(n, -1, 1)
+    # reduce-scatter phase: everyone receives the chunk they own.
+    q_rs = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0, tiled=True)
+    s_rs = jax.lax.all_to_all(scale, axis, split_axis=0, concat_axis=0, tiled=True)
+    q_rs = q_rs.reshape(n, -1, _BLOCK)
+    s_rs = s_rs.reshape(n, -1, 1)
+    owned = jnp.sum(q_rs.astype(jnp.float32) * s_rs, axis=0) / n   # mean chunk
+    # all-gather phase (int8 again).
+    qo, so = _quantize(owned.reshape(1, -1))
+    qg = jax.lax.all_gather(qo.reshape(-1, _BLOCK), axis, axis=0, tiled=True)
+    sg = jax.lax.all_gather(so.reshape(-1, 1), axis, axis=0, tiled=True)
+    mean = (qg.astype(jnp.float32) * sg).reshape(-1)[: flat.size]
+    # Error feedback: what the wire lost this step, re-sent next step.
+    # (Decoded against this device's own contribution.)
+    sent = _dequantize(q.reshape(-1, _BLOCK), scale.reshape(-1, 1), (flat.size,))
+    new_err = (y.reshape(-1) - sent[: y.size].reshape(-1)).reshape(shape)
+    return mean[: y.size].reshape(shape).astype(x.dtype), new_err.astype(x.dtype)
+
+
+def compressed_psum_mean(x: jax.Array, err: jax.Array, mesh: Mesh,
+                         axis: str = "pod"):
+    """Mean of ``x`` over ``axis`` with int8 wire traffic + error feedback.
+    ``x`` must be replicated w.r.t. ``axis`` in layout (pure DP gradients)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes[axis]
+    if n == 1:
+        return x, err
+    other = tuple(a for a in mesh.axis_names if a != axis)
+    spec = P(*[None] * x.ndim)  # replicated over `axis` (and others)
+    fn = functools.partial(_compressed_mean_1axis, axis=axis, n=n)
+    return shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec), check_rep=False)(x, err)
+
+
+def pod_sync_grads(grads: Any, err: Any, mesh: Mesh, axis: str = "pod"):
+    """Tree-mapped compressed mean over the pod axis (multi-pod DP sync)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        mg, me = compressed_psum_mean(g, e, mesh, axis)
+        out_g.append(mg)
+        out_e.append(me)
+    return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_e)
+
+
+def init_error_feedback(grads_like: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, grads_like)

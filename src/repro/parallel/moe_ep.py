@@ -1,0 +1,129 @@
+"""Expert-parallel MoE dispatch under `shard_map` — explicit all-to-alls.
+
+Under pure pjit auto-sharding, the sort-based dispatch's scatters/gathers
+over expert-sharded buffers make XLA replicate token buffers: the kimi-k2
+train_4k baseline measured 111 TB of collectives per device per step.  The
+explicit EP pipeline is the classic one:
+
+  tokens (B/dp, S/tp, d)  →  local top-k route → capacity-packed per-expert
+  send buffers (E, C, d)  →  all-to-all over the model axis (E → E/tp,
+  C → C·tp)  →  local expert FFN (+ FSDP all-gather of expert weights)  →
+  reverse all-to-all  →  local combine.
+
+Per-device wire ≈ 2 passes × top_k·T_loc·d·2 B — ~600× less than measured.
+Exactness: with no capacity drops this equals `models.moe.moe_ffn` (tested);
+with drops, the drop POLICY differs (per-source-device capacity rather than
+global) — the standard trade of distributed MoE.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _local_moe(x_loc, router_w, wg, wu, wd, *, cfg: ModelConfig,
+               tp_axis: str, fsdp_axis, axis_names: Tuple[str, ...]):
+    """Per-device function under shard_map."""
+    from repro.models.moe import build_dispatch  # local import (no cycle)
+
+    B, S, d = x_loc.shape
+    T = B * S
+    xf = x_loc.reshape(T, d)
+
+    # --- route (router weights replicated) ---
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(math.ceil(T * cfg.top_k * cfg.capacity_factor
+                               / cfg.n_experts)))
+    token_src, buffer_idx, keep, weight = build_dispatch(
+        top_ids, top_p, T, cfg, cap)
+
+    # --- pack send buffers (E, cap, d) ---
+    buf = jnp.zeros((cfg.n_experts * cap + 1, d), x_loc.dtype)
+    buf = buf.at[buffer_idx].set(xf[token_src] * keep[:, None].astype(x_loc.dtype))
+    send = buf[:-1].reshape(cfg.n_experts, cap, d)
+
+    # --- dispatch a2a: split experts over the EP axis, gather sources ---
+    recv = jax.lax.all_to_all(send, tp_axis, split_axis=0, concat_axis=1,
+                              tiled=True)                  # (E/tp, cap·tp, d)
+
+    # --- FSDP gather of this device's expert weights, then apply.
+    # (A ff-over-fsdp partial-psum variant measured 4× less wire but is
+    # incorrect when the batch is sharded over the same axis — the psum
+    # mixes data shards.  See EXPERIMENTS §Perf kimi it.2, reverted.)
+    if fsdp_axis is not None:
+        wg = jax.lax.all_gather(wg, fsdp_axis, axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, fsdp_axis, axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, fsdp_axis, axis=2, tiled=True)
+    h = recv.astype(wg.dtype)
+    if cfg.ffn_type == "swiglu":
+        act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, wg))
+        up = jnp.einsum("ecd,edf->ecf", h, wu)
+        y = jnp.einsum("ecf,efd->ecd", act * up, wd)
+    else:
+        act = jnp.einsum("ecd,edf->ecf", h, wu)
+        act = jax.nn.gelu(act) if cfg.ffn_type == "gelu" else jax.nn.relu(act) ** 2
+        y = jnp.einsum("ecf,efd->ecd", act, wd)
+
+
+    # --- return a2a + local combine ---
+    back = jax.lax.all_to_all(y, tp_axis, split_axis=1, concat_axis=0,
+                              tiled=True)                  # (E, cap, d)
+    yf = jnp.concatenate([back.reshape(-1, d),
+                          jnp.zeros((1, d), back.dtype)])
+    gathered = yf[buffer_idx] * (weight * keep)[:, None].astype(back.dtype)
+    out = jnp.zeros((T, d), back.dtype).at[token_src].add(gathered)
+
+    # --- aux losses (local → mean over the fleet) ---
+    onehot = jax.nn.one_hot(top_ids, cfg.n_experts, dtype=jnp.float32)
+    frac = onehot.sum((0, 1)) / (T * cfg.top_k)
+    balance = cfg.n_experts * jnp.sum(frac * probs.mean(0))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = cfg.aux_loss_coef * balance + cfg.router_z_loss * z
+    aux = jax.lax.pmean(aux, axis_names)   # replicate across the whole mesh
+    return out.reshape(B, S, d), aux
+
+
+def moe_ffn_ep(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+               mesh: Mesh, strat) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """Drop-in for `models.moe.moe_ffn` with explicit EP collectives."""
+    tp = strat.tp
+    fsdp = strat.fsdp
+    dp = strat.axis("dp")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_ep = sizes[tp]
+    B, S, d = x.shape
+    # Sequence must shard over tp for dispatch balance; guard divisibility.
+    seq_ok = S % n_ep == 0
+    x_spec = P(dp, tp if seq_ok else None, None)
+    w_gate = params["experts"]["w_gate"]["w"]
+    w_up = params["experts"]["w_up"]["w"]
+    w_down = params["experts"]["w_down"]["w"]
+    # Expert weights arrive (E, d, ff) sharded (ep=tp, fsdp, -) per the
+    # param rules; w_down is (E, ff, d) sharded (ep, -, fsdp).
+    fs = fsdp if (w_gate.shape[1] % sizes.get(fsdp, 1) == 0 if fsdp else False) else None
+    wg_spec = P(tp, fs, None)
+    wd_spec = P(tp, None, fs)
+
+    fn = functools.partial(_local_moe, cfg=cfg, tp_axis=tp, fsdp_axis=fs,
+                           axis_names=tuple(mesh.axis_names))
+    out, aux = shard_map(
+        fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None), wg_spec, wg_spec, wd_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )(x, params["router"]["w"], w_gate, w_up, w_down)
+    return out, aux, {"moe_ep": jnp.ones(())}   # jit-safe marker

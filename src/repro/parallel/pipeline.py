@@ -1,0 +1,105 @@
+"""Pipeline parallelism over a mesh axis (GPipe-style, shard_map + ppermute).
+
+For multi-pod meshes the natural stage axis is **"pod"**: stages exchange
+only point-to-point activations over the slow DCN (one (B_mb, …) tensor per
+microbatch per stage boundary), while each pod keeps its fast ICI for the
+DP/TP/EP layout inside the stage — the textbook hierarchical layout.
+
+Mechanics: stage parameters carry a leading (n_stages,) axis sharded onto
+the stage axis; under `shard_map` each stage group holds its slice.  The
+schedule runs `n_micro + n_stages − 1` ticks: stage 0 ingests microbatch
+``t``, every stage applies its block, and activations `ppermute` one hop
+forward; the last stage collects finished microbatches.  Backward is jax
+autodiff through the loop (GPipe semantics; bubble fraction
+(S−1)/(M+S−1)); the §Roofline collective term sees exactly the boundary
+ppermute bytes.
+
+Model-agnostic: `apply_fn(stage_params, x) -> x` is any per-stage block.
+Correctness (forward AND gradients) is proven against the unpipelined
+reference on a real 8-device (4-stage × 2-data) mesh in
+tests/test_pipeline.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def stack_stages(params_list) -> Any:
+    """Stack per-stage param pytrees on a leading (n_stages,) axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def split_layers_to_stages(stacked: Any, n_stages: int) -> Any:
+    """Reshape a (L, ...) layer-stacked tree into (n_stages, L/S, ...)."""
+
+    def re(x):
+        L = x.shape[0]
+        if L % n_stages:
+            raise ValueError(f"{L} layers not divisible into {n_stages} stages")
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+
+    return jax.tree.map(re, stacked)
+
+
+def pipeline_apply(
+    stage_params: Any,        # leaves (n_stages, ...) — sharded on stage_axis
+    x: jax.Array,             # (n_micro, B, ...) microbatched input
+    apply_fn: Callable[[Any, jax.Array], jax.Array],
+    mesh: Mesh,
+    stage_axis: str = "pod",
+    batch_axis: Optional[str] = None,   # shard B over this axis (e.g. "data")
+) -> jax.Array:
+    """Run the pipeline; returns (n_micro, B, ...) outputs (replicated over
+    the stage axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_stages = sizes[stage_axis]
+    n_micro = x.shape[0]
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def per_stage(params_loc, x_loc):
+        p = jax.tree.map(lambda a: a[0], params_loc)   # this stage's slice
+        idx = jax.lax.axis_index(stage_axis)
+
+        def tick(carry, t):
+            acts, outs = carry
+            feed = jax.lax.dynamic_index_in_dim(
+                x_loc, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            inp = jnp.where(idx == 0, feed, acts)
+            y = apply_fn(p, inp)
+            out_i = t - (n_stages - 1)
+            updated = jax.lax.dynamic_update_index_in_dim(
+                outs, y, jnp.clip(out_i, 0, n_micro - 1), 0)
+            outs = jnp.where((out_i >= 0) & (idx == n_stages - 1), updated, outs)
+            acts_next = jax.lax.ppermute(y, stage_axis, perm)
+            return (acts_next, outs), None
+
+        acts0 = jnp.zeros_like(x_loc[0])
+        outs0 = jnp.zeros_like(x_loc)
+        (_, outs), _ = jax.lax.scan(
+            tick, (acts0, outs0), jnp.arange(n_micro + n_stages - 1))
+        # Only the last stage holds real outputs; replicate across stages.
+        outs = jax.lax.psum(
+            jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs)),
+            stage_axis)
+        return outs
+
+    p_specs = jax.tree.map(lambda _: P(stage_axis), stage_params)
+    x_spec = P(None, batch_axis) if batch_axis else P()
+    return shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=x_spec,
+        check_rep=False,
+    )(stage_params, x)
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """GPipe bubble overhead: idle ticks / total ticks."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,104 @@
+"""Elastic rescale: rebuild a training job on a different device set by
+re-sharding its checkpoint — the paper's live migration applied to training
+jobs (core of the reconfiguration story: a placement change produced by the
+LP scheduler, or a failure-induced capacity change, both land here).
+
+Flow: pause → `ckpt` snapshot (or reuse the latest async one) → build the
+new mesh over the surviving/assigned devices → derive new shardings from
+the SAME rule table → `restore(..., shardings=new)` (jax.device_put handles
+the cross-layout movement) → resume at the recorded step with the
+step-indexed data pipeline.  Batch-size semantics are preserved (global
+batch is constant; per-device batch grows when the fleet shrinks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.ckpt import latest_checkpoint, read_extra, restore
+from repro.models import ModelConfig
+from repro.parallel.sharding import ShardingStrategy, default_strategy, state_specs
+from repro.train import Optimizer, state_shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+
+    def build(self, devices=None) -> Mesh:
+        devices = devices if devices is not None else jax.devices()
+        n = int(np.prod(self.shape))
+        if len(devices) < n:
+            raise ValueError(f"need {n} devices, have {len(devices)}")
+        arr = np.asarray(devices[:n]).reshape(self.shape)
+        return Mesh(arr, self.axis_names)
+
+
+def degrade_mesh_plan(plan: MeshPlan, n_lost: int) -> MeshPlan:
+    """Largest same-axis-structure mesh after losing ``n_lost`` devices:
+    shrink the leading (data-parallel) axis; model-parallel axes keep their
+    size so parameter shardings stay valid."""
+    total = int(np.prod(plan.shape))
+    remaining = total - n_lost
+    lead = plan.shape[0]
+    inner = total // lead
+    new_lead = remaining // inner
+    if new_lead < 1:
+        raise ValueError("not enough devices for even one model replica")
+    return MeshPlan((new_lead,) + plan.shape[1:], plan.axis_names)
+
+
+def reshard_restore(
+    ckpt_dir: str,
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    new_mesh: Mesh,
+    strategy: Optional[ShardingStrategy] = None,
+) -> Tuple[Dict, int, ShardingStrategy]:
+    """Restore the latest checkpoint onto ``new_mesh`` (cross-mesh reshard).
+    Returns (state, next_step, strategy)."""
+    path = latest_checkpoint(ckpt_dir)
+    if path is None:
+        raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    strategy = strategy or default_strategy(new_mesh)
+    sds = state_shapes(cfg, optimizer)
+    specs = state_specs(sds, new_mesh, strategy)
+    state = restore(path, sds, specs)
+    step = int(read_extra(path).get("step", 0))
+    return state, step, strategy
+
+
+class ElasticSupervisor:
+    """Ties the failure detector to the rescale path.
+
+    On ACTION_RESCALE: compute the degraded mesh plan, reshard-restore, and
+    hand (state, step, mesh, strategy) back to the caller to rebuild its
+    jitted step.  The LP scheduler (`core.cluster`) is consulted so the
+    shrunken job can also *move* pods if the global reconfiguration says
+    so — the paper's Step 7 closing the loop."""
+
+    def __init__(self, ckpt_dir: str, cfg: ModelConfig, optimizer: Optimizer,
+                 mesh_plan: MeshPlan, devices=None):
+        self.ckpt_dir = ckpt_dir
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.mesh_plan = mesh_plan
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.rescales: List[Tuple[int, Tuple[int, ...]]] = []
+
+    def rescale(self, n_lost_devices: int):
+        new_plan = degrade_mesh_plan(self.mesh_plan, n_lost_devices)
+        survivors = self.devices[: int(np.prod(new_plan.shape))]
+        mesh = new_plan.build(survivors)
+        state, step, strat = reshard_restore(
+            self.ckpt_dir, self.cfg, self.optimizer, mesh)
+        self.mesh_plan = new_plan
+        self.devices = survivors
+        self.rescales.append((step, new_plan.shape))
+        return state, step, mesh, strat

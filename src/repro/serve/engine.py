@@ -1,0 +1,153 @@
+"""Serving: prefill / decode steps and a batched continuous-batching engine.
+
+`make_prefill_step` / `make_decode_step` are the pjit-able pure functions the
+dry-run lowers for the prefill_32k / decode_32k / long_500k cells; the
+`ServeEngine` drives them for real requests (examples/serve_lm.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, forward, init_cache, logits_fn
+from repro.models.transformer import encode, reset_slot
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, cross_len: int = 0):
+    """(params, batch) -> (cache, last_token_logits).
+
+    batch: {"tokens": (B,S)} (+ encoder_embeds / vision_embeds / positions).
+    The cache is allocated inside (zeros) so the lowered program owns it.
+    """
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        encoder_out = None
+        if cfg.n_encoder_layers:
+            encoder_out = encode(params, batch["encoder_embeds"], cfg)
+        cache = init_cache(cfg, B, max_len, cross_len=cross_len)
+        hidden, cache, _ = forward(
+            params, tokens, cfg,
+            positions=batch.get("positions"),
+            cache=cache,
+            encoder_out=encoder_out,
+            vision_embeds=batch.get("vision_embeds"),
+        )
+        return cache, logits_fn(params, hidden[:, -1:], cfg)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, tokens (B,1)) -> (cache, logits (B,1,V))."""
+
+    def decode(params, cache, tokens):
+        hidden, cache, _ = forward(params, tokens, cfg, cache=cache)
+        return cache, logits_fn(params, hidden, cfg)
+
+    return decode
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+# ------------------------------------------------------------------ engine
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    done: bool = False
+    output: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Finished sequences free their slot; queued requests are prefilling into
+    freed slots (stop-the-world prefill — adequate for the example driver;
+    the scheduler-level placement of *engines* is what the paper's technique
+    manages, see `core.cluster`)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_len: int,
+                 eos_id: int = 0, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.cache = init_cache(cfg, batch_slots, max_len, per_slot_index=True)
+        # Per-slot write offsets (slot-local KV positions).
+        self.offsets = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._key = jax.random.PRNGKey(0)
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # Slot-level prefill: run the prompt through decode one token at a time
+    # into this slot's cache region.  Simple and exactly consistent with
+    # decode (per-slot caches share the batched buffers).
+    def _admit(self, slot: int, req: Request) -> None:
+        self.slots[slot] = req
+        self.offsets[slot] = 0
+        # Reset the slot's write offset and recurrent states (stale KV is
+        # masked by kv_len; SSM/xLSTM states must be zeroed explicitly).
+        self.cache = reset_slot(self.cache, slot)
+        req.output = []
+
+    def _slot_tokens(self) -> np.ndarray:
+        toks = np.zeros((len(self.slots), 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = int(self.offsets[i])
+            if pos < len(req.prompt):
+                toks[i, 0] = req.prompt[pos]
+            else:
+                toks[i, 0] = req.output[-1] if req.output else self.eos_id
+        return toks
+
+    def step(self) -> None:
+        # Fill free slots.
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self._admit(i, self.queue.pop(0))
+        if all(s is None for s in self.slots):
+            return
+        tokens = jnp.asarray(self._slot_tokens())
+        self.cache, logits = self._decode(self.params, self.cache, tokens)
+        self.steps += 1
+        self._key, sub = jax.random.split(self._key)
+        next_tok = np.asarray(sample(logits[:, 0], sub, self.temperature))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.offsets[i] += 1
+            pos = int(self.offsets[i])
+            if pos >= len(req.prompt):  # generating
+                req.output.append(int(next_tok[i]))
+                if (len(req.output) >= req.max_new_tokens
+                        or int(next_tok[i]) == self.eos_id
+                        or pos >= self.max_len - 1):
+                    req.done = True
+                    self.finished.append(req)
+                    self.slots[i] = None
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.queue or any(self.slots)) and self.steps < max_steps:
+            self.step()
+        return self.finished

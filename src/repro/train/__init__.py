@@ -1,0 +1,6 @@
+"""Training substrate: optimizers, train step, trainer loop."""
+from .optimizer import (  # noqa: F401
+    Optimizer, adafactor, adam8bit, adamw, cosine_schedule, global_norm,
+    make_optimizer,
+)
+from .train_step import init_state, make_train_step, state_shapes  # noqa: F401

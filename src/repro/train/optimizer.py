@@ -1,0 +1,250 @@
+"""Optimizers in raw JAX: AdamW, Adafactor (factored second moment — what
+lets the 1T-param Kimi cell fit 16 GB/chip), and block-quantized 8-bit Adam
+(distributed-memory trick; int8 states + per-block fp32 scales).
+
+Interface mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (new_params, new_state)``.
+All states are pytrees whose leaves either match the param shape (sharding
+specs propagate 1:1) or are reduced-rank factored stats (handled by
+`repro.parallel.sharding.opt_spec_for`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ------------------------------------------------------------------ AdamW --
+def adamw(
+    lr_fn,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            decay = weight_decay if p.ndim >= 2 else 0.0
+            p_new = p.astype(jnp.float32) - lr * (upd + decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer("adamw", init, update)
+
+
+# -------------------------------------------------------------- Adafactor --
+_FACTOR_MIN = 128  # factor only when both trailing dims ≥ this
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= _FACTOR_MIN and shape[-2] >= _FACTOR_MIN
+
+
+def adafactor(
+    lr_fn,
+    decay: float = 0.8,           # \hat{β}₂ exponent: 1 - step^{-decay}
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Shazeer & Stern 2018, factored second moment, no first moment."""
+
+    def init(params):
+        def stats(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"stats": jax.tree.map(stats, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+        lr = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = vr.mean(-1, keepdims=True)[..., None]
+                vhat = (vr[..., None] * vc[..., None, :]) / jnp.maximum(denom, eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * s["v"] + (1 - beta2) * g2
+                new_s = {"v": vhat}
+            u = g * jax.lax.rsqrt(vhat + eps)
+            # Update clipping (RMS ≤ threshold).
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p_new = p.astype(jnp.float32) - lr * u
+            if weight_decay and p.ndim >= 2:
+                p_new = p_new - lr * weight_decay * p.astype(jnp.float32)
+            return p_new.astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        new_p, new_s = [], []
+        for p, g, s in zip(flat_p, flat_g, flat_s):
+            pn, sn = upd(p, g, s)
+            new_p.append(pn)
+            new_s.append(sn)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"stats": jax.tree.unflatten(treedef, new_s), "step": step})
+
+    return Optimizer("adafactor", init, update)
+
+
+# -------------------------------------------------------------- 8-bit Adam --
+_Q_BLOCK = 128
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 block quantization along the last dim."""
+    pad = (-x.shape[-1]) % _Q_BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*xp.shape[:-1], -1, _Q_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    x = (q.astype(jnp.float32) * scale).reshape(*q.shape[:-2], -1)
+    return x[..., : shape[-1]].reshape(shape)
+
+
+def _quantize_sqrt(v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Non-negative second moments are quantized in the sqrt domain —
+    linear int8 rounds small v to 0 and 1/√(v+ε) explodes (measured
+    divergence on the quadratic test); sqrt compresses the dynamic range
+    (bitsandbytes uses a dynamic-exponent code for the same reason)."""
+    q, scale = _quantize(jnp.sqrt(jnp.maximum(v, 0.0)))
+    return q, scale
+
+
+def _dequantize_sqrt(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    r = _dequantize(q, scale, shape)
+    return jnp.square(r)
+
+
+def adam8bit(
+    lr_fn,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    """Adam with int8-quantized moments (Dettmers-style block quantization).
+    Cuts optimizer HBM from 8 to ~2.1 bytes/param."""
+
+    def init(params):
+        def q(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            mq, ms = _quantize(z)
+            vq, vs = _quantize_sqrt(z)
+            return {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+        return {"q": jax.tree.map(q, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            m = b1 * _dequantize(s["mq"], s["ms"], p.shape) + (1 - b1) * g
+            v = b2 * _dequantize_sqrt(s["vq"], s["vs"], p.shape) + (1 - b2) * jnp.square(g)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            decay = weight_decay if p.ndim >= 2 else 0.0
+            p_new = (p.astype(jnp.float32) - lr * (u + decay * p.astype(jnp.float32)))
+            mq, ms = _quantize(m)
+            vq, vs = _quantize_sqrt(v)
+            return p_new.astype(p.dtype), {"mq": mq, "ms": ms, "vq": vq, "vs": vs}
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["q"])
+        new_p, new_s = [], []
+        for p, g, s in zip(flat_p, flat_g, flat_s):
+            pn, sn = upd(p, g, s)
+            new_p.append(pn)
+            new_s.append(sn)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"q": jax.tree.unflatten(treedef, new_s), "step": step})
+
+    return Optimizer("adam8bit", init, update)
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100,
+                   total_steps: int = 10_000, **kw) -> Optimizer:
+    lr_fn = cosine_schedule(lr, warmup, total_steps)
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    if name == "adam8bit":
+        return adam8bit(lr_fn, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,95 @@
+"""Train-step factory: loss → grad → (optional microbatch accumulation) →
+optimizer, with remat handled inside the model (`cfg.remat`).
+
+The returned step is pure and pjit-friendly: state/batch in, state/metrics
+out.  `state_shapes` builds the matching ShapeDtypeStruct tree for the
+dry-run (no allocation)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_lm, lm_loss
+from repro.parallel.context import constrain_like_params
+from .optimizer import Optimizer, global_norm
+
+
+def init_state(key, cfg: ModelConfig, optimizer: Optimizer) -> Dict:
+    params = init_lm(key, cfg)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    loss_chunk: int = 0,
+    n_microbatch: int = 1,
+):
+    """``train_step(state, batch) -> (state, metrics)``.
+
+    With ``n_microbatch > 1`` the global batch's leading dim is split and
+    gradients are accumulated in fp32 via `lax.scan` — bounds activation
+    memory independently of the global batch size."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, loss_chunk=loss_chunk)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, loss, metrics
+
+    def accumulated(params, batch):
+        def split(x):
+            b = x.shape[0] if x.ndim >= 1 else None
+            # vision positions come as (3, B, S)
+            if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % n_microbatch == 0 \
+               and b == 3:
+                return x.reshape(3, n_microbatch, -1, *x.shape[2:]).swapaxes(0, 1)
+            return x.reshape(n_microbatch, -1, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads = constrain_like_params(grads)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            acc = constrain_like_params(acc)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = constrain_like_params(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (grads, loss_sum), metrics = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n_microbatch, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return grads, loss_sum / n_microbatch, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_microbatch > 1:
+            grads, loss, metrics = accumulated(params, batch)
+        else:
+            grads, loss, metrics = single(params, batch)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        return ({"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+                metrics)
+
+    return train_step
+
+
+def state_shapes(cfg: ModelConfig, optimizer: Optimizer) -> Dict:
+    """ShapeDtypeStruct tree of the train state — dry-run stand-in."""
+    shapes = jax.eval_shape(
+        functools.partial(init_state, cfg=cfg, optimizer=optimizer),
+        jax.random.PRNGKey(0),
+    )
+    return shapes

@@ -1,0 +1,150 @@
+"""Training loop: sharded step, async checkpointing, failure handling,
+straggler monitoring, and scheduler (reconfiguration) hooks.
+
+The Trainer is mesh-agnostic: examples run it on the host mesh (1 CPU
+device), the dry-run lowers the identical step for 256/512 chips, and
+`runtime.elastic` rebuilds it on a smaller mesh after a failure — the
+checkpoint + data pipeline are step-indexed, so a restart resumes
+deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.models import ModelConfig
+from repro.parallel.context import activation_sharding
+from repro.parallel.sharding import ShardingStrategy, batch_specs, state_specs
+from .optimizer import Optimizer, make_optimizer
+from .train_step import init_state, make_train_step, state_shapes
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    log_every: int = 10
+    loss_chunk: int = 0
+    n_microbatch: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        data: Iterable,
+        mesh=None,
+        strategy: Optional[ShardingStrategy] = None,
+        optimizer: Optional[Optimizer] = None,
+        step_hooks: Optional[List[Callable]] = None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = data
+        self.mesh = mesh
+        self.strategy = strategy
+        self.optimizer = optimizer or make_optimizer(cfg.optimizer, total_steps=tcfg.steps)
+        self.step_hooks = step_hooks or []
+        self.metrics_log: List[Dict] = []
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+                     if tcfg.ckpt_dir else None)
+        self._build()
+        if optimizer is None:
+            # Re-make with a schedule that fits the run length (a fixed
+            # 100-step warmup swallows short runs entirely).
+            self.optimizer = make_optimizer(
+                cfg.optimizer, lr=1e-3,
+                warmup=max(1, tcfg.steps // 10), total_steps=tcfg.steps)
+            self._build()
+
+    # ---------------------------------------------------------------- build
+    def _build(self) -> None:
+        step_fn = make_train_step(self.cfg, self.optimizer,
+                                  loss_chunk=self.tcfg.loss_chunk,
+                                  n_microbatch=self.tcfg.n_microbatch)
+        if self.mesh is not None and self.strategy is not None:
+            sds = state_shapes(self.cfg, self.optimizer)
+            self._state_specs = state_specs(sds, self.mesh, self.strategy)
+            self._jit_step = jax.jit(step_fn, in_shardings=(self._state_specs, None),
+                                     out_shardings=(self._state_specs, None),
+                                     donate_argnums=(0,))
+        else:
+            self._state_specs = None
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    def init_or_restore(self):
+        """Fresh init, or resume from the newest committed checkpoint."""
+        start_step = 0
+        state = None
+        if self.ckpt is not None:
+            sds = state_shapes(self.cfg, self.optimizer)
+            restored = self.ckpt.restore_latest(sds, self._state_specs)
+            if restored is not None:
+                state, extra = restored
+                start_step = int(extra.get("step", 0))
+        if state is None:
+            state = init_state(jax.random.PRNGKey(self.tcfg.seed), self.cfg,
+                               self.optimizer)
+            if self._state_specs is not None:
+                state = jax.device_put(state, self._state_specs)
+        return state, start_step
+
+    # ----------------------------------------------------------------- run
+    def run(self, state=None, start_step: int = 0):
+        if state is None:
+            state, start_step = self.init_or_restore()
+        # Step-indexed sources seek to the resume point (restart-exactness);
+        # plain iterables restart from their head.
+        seekable = hasattr(self.data, "batch_at")
+        data_it = None if seekable else iter(self.data)
+        ctx = (activation_sharding(self.mesh, self.strategy)
+               if self.mesh is not None and self.strategy is not None
+               else _null_ctx())
+        with ctx:
+            for step in range(start_step, self.tcfg.steps):
+                batch = self.data.batch_at(step) if seekable else next(data_it)
+                t0 = time.perf_counter()
+                state, metrics = self._jit_step(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                rec = {"step": step, "loss": loss, "dt_s": dt}
+                self.metrics_log.append(rec)
+                if step % self.tcfg.log_every == 0:
+                    print(f"step {step:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms")
+                for hook in self.step_hooks:
+                    hook(self, step, state, rec)
+                if (self.ckpt is not None and step > 0
+                        and step % self.tcfg.ckpt_every == 0):
+                    self.ckpt.save_async(step, state, {"step": step + 1})
+        if self.ckpt is not None:
+            self.ckpt.save_async(self.tcfg.steps, state,
+                                 {"step": self.tcfg.steps})
+            self.ckpt.wait()
+        return state
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null_ctx():
+    yield
+
+
+def make_synthetic_trainer(cfg: ModelConfig, tcfg: TrainerConfig,
+                           global_batch: int, seq_len: int, **kw) -> Trainer:
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  global_batch=global_batch, seq_len=seq_len,
+                                  seed=tcfg.seed))
+    return Trainer(cfg, tcfg, data, **kw)

@@ -1,0 +1,116 @@
+"""Fleet scheduler + adaptation controller (Steps 1–7) integration tests."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adaptation import AdaptationController
+from repro.core.cluster import (
+    FleetScheduler,
+    JobSpec,
+    PodSpec,
+    build_fleet_topology,
+)
+from repro.core.shard_search import gene_to_plan, plan_to_gene, search_plan
+from repro.launch.analytic import estimate
+from repro.launch.plans import CellPlan
+from repro.models import SHAPES_BY_NAME
+
+
+def _fleet(prices=(1.2, 1.2, 0.85)):
+    pods = [PodSpec(f"pod{i}", 256, p) for i, p in enumerate(prices)]
+    return build_fleet_topology(pods)
+
+
+class TestFleetScheduler:
+    def test_budget_prefers_cheap_pod(self):
+        sched = FleetScheduler(_fleet())
+        j = JobSpec(0, "a", "train_4k", chips=64, step_time_s=1.0,
+                    step_slo_s=None, budget_usd_month=10 ** 9)
+        # budget-only requirement → objective = response... both pods equal R
+        # → price tie-break picks the cheap pod.
+        assert sched.submit(j) == "pod2"
+
+    def test_slo_rejects_infeasible(self):
+        sched = FleetScheduler(_fleet())
+        j = JobSpec(0, "a", "train_4k", chips=64, step_time_s=5.0,
+                    step_slo_s=1.0)  # SLO below step time → impossible
+        assert sched.submit(j) is None
+        assert len(sched.engine.rejected) == 1
+
+    def test_capacity_spills_to_next_pod(self):
+        sched = FleetScheduler(_fleet(prices=(0.9, 1.2)))
+        placements = [
+            sched.submit(JobSpec(i, "a", "t", chips=128, step_time_s=1.0,
+                                 step_slo_s=None, budget_usd_month=10 ** 9))
+            for i in range(4)
+        ]
+        assert placements == ["pod0", "pod0", "pod1", "pod1"]
+
+    def test_reconfig_moves_to_freed_cheap_pod(self):
+        """The paper's dynamic: FCFS fills the cheap pod; when capacity
+        frees, reconfiguration migrates budget-bound jobs there."""
+        sched = FleetScheduler(_fleet(prices=(0.8, 2.0)), reconfig_every=10 ** 9)
+        for i in range(4):  # fill cheap pod0 (4×64=256)
+            assert sched.submit(JobSpec(i, "a", "t", chips=64, step_time_s=1.0,
+                                        step_slo_s=None,
+                                        budget_usd_month=10 ** 9)) == "pod0"
+        # next jobs land on the expensive pod
+        assert sched.submit(JobSpec(4, "a", "t", chips=64, step_time_s=1.0,
+                                    step_slo_s=None,
+                                    budget_usd_month=10 ** 9)) == "pod1"
+        sched.engine.release(0)  # a job completes
+        res = sched.recon.run(sched.engine.recent(8))
+        assert res.n_moved == 1
+        assert res.moves[0].new.node.site_id == "pod0"
+        assert res.mean_moved_ratio < 2.0
+
+
+class TestShardSearch:
+    def test_gene_roundtrip(self):
+        plan = CellPlan(n_microbatch=8, loss_chunk=512,
+                        strategy_overrides={"fsdp": "data", "seq": None})
+        assert gene_to_plan(plan_to_gene(plan)).n_microbatch == 8
+
+    def test_search_beats_or_matches_baseline(self):
+        cfg = get_config("qwen1.5-110b")
+        shape = SHAPES_BY_NAME["train_4k"]
+        res = search_plan(cfg, shape, (16, 16))
+        assert res.best_t_step <= res.baseline_t_step * 1.0 + 1e-9
+        # Big model must keep FSDP on (HBM feasibility penalty).
+        assert res.best_plan.strategy_overrides.get("fsdp") == "data"
+
+    def test_analytic_terms_positive_and_scale(self):
+        cfg = get_config("granite-3-2b")
+        shape = SHAPES_BY_NAME["train_4k"]
+        t256 = estimate(cfg, shape, (16, 16))
+        t512 = estimate(cfg, shape, (32, 16))
+        assert t256.t_compute > 0 and t256.t_memory > 0
+        assert t512.t_compute < t256.t_compute  # more chips → less per-chip
+
+
+class TestAdaptationController:
+    def test_steps_1_to_7(self):
+        ctrl = AdaptationController(FleetScheduler(_fleet()))
+        cfg = get_config("zamba2-7b")
+        shape = SHAPES_BY_NAME["train_4k"]
+        out = ctrl.run_all(cfg, shape)
+        assert "ssm_scan" in out["offload"]          # Step 2 found the SSM hotspot
+        assert out["chips"] >= 1 and out["chips"] & (out["chips"] - 1) == 0
+        assert out["pod"] is not None                # Step 5 placed it
+        assert out["t_step"] > 0
+
+    def test_sizing_monotone_in_model(self):
+        ctrl = AdaptationController()
+        small = ctrl.size_resources(get_config("qwen1.5-0.5b"),
+                                    SHAPES_BY_NAME["train_4k"])
+        big = ctrl.size_resources(get_config("qwen1.5-110b"),
+                                  SHAPES_BY_NAME["train_4k"])
+        assert big > small
+
+    def test_analysis_hotspots_by_family(self):
+        ctrl = AdaptationController()
+        a = ctrl.analyze(get_config("xlstm-1.3b"))
+        assert "mlstm_chunked" in a.kernel_hotspots
+        b = ctrl.analyze(get_config("nemotron-4-15b"))
+        assert "flash_attention" in b.kernel_hotspots

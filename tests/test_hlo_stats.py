@@ -1,0 +1,49 @@
+"""HLO analyzer calibration: exact FLOPs/wire on a known scan-matmul program
+(subprocess: needs its own device-count flag)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.hlo_stats import module_stats
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    A = jax.ShapeDtypeStruct((1024, 2048), jnp.float32)
+    B = jax.ShapeDtypeStruct((2048, 2048), jnp.float32)
+
+    def f(a, b):
+        def body(c, _):
+            return jnp.tanh(c @ b), 0
+        return jax.lax.scan(body, a, None, length=10)[0]
+
+    with mesh:
+        comp = jax.jit(
+            f,
+            in_shardings=(NamedSharding(mesh, P("data", "model")),
+                          NamedSharding(mesh, P(None, "model"))),
+            out_shardings=NamedSharding(mesh, P("data", "model")),
+        ).lower(A, B).compile()
+    s = module_stats(comp.as_text(), 16)
+    # Per-device: 10 iterations of (256,2048)@(2048,512) = 2*256*2048*512*10.
+    assert abs(s["flops"] - 5368709120.0) < 1.0, s
+    # One all-gather of (256,2048) f32 over a 4-group, 10 iterations:
+    # 2 MiB * 3/4 * 10.
+    assert abs(s["wire_bytes"] - 15728640.0) < 1.0, s
+    assert s["bytes"] > 0
+    print("CALIBRATION_OK")
+""")
+
+
+def test_analyzer_calibration_exact():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "CALIBRATION_OK" in proc.stdout

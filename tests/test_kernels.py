@@ -1,0 +1,154 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode on CPU) vs jnp oracle,
+across shapes and dtypes, plus hypothesis property tests on invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype, k):
+    x = jax.random.normal(jax.random.fold_in(KEY, k), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,Hq,Hkv,D,bq,bk", [
+        (1, 128, 4, 4, 64, 64, 64),     # MHA
+        (2, 256, 8, 2, 64, 128, 64),    # GQA 4:1
+        (2, 256, 6, 3, 32, 64, 128),    # odd head count
+        (1, 512, 4, 1, 128, 128, 128),  # MQA, MXU-aligned
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, B, S, Hq, Hkv, D, bq, bk, causal, dtype):
+        q = _rand((B, S, Hq, D), dtype, 1)
+        k = _rand((B, S, Hkv, D), dtype, 2)
+        v = _rand((B, S, Hkv, D), dtype, 3)
+        out = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_block_size_invariance(self):
+        q = _rand((1, 256, 4, 64), jnp.float32, 4)
+        k = _rand((1, 256, 2, 64), jnp.float32, 5)
+        v = _rand((1, 256, 2, 64), jnp.float32, 6)
+        outs = [np.asarray(ops.flash_attention(q, k, v, block_q=bq, block_k=bk))
+                for bq, bk in [(64, 64), (128, 64), (256, 128), (256, 256)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,Sk,Hq,Hkv,D,bk", [
+        (1, 256, 4, 4, 64, 64),
+        (2, 512, 8, 2, 64, 128),
+        (3, 384, 6, 6, 32, 128),
+    ])
+    def test_matches_ref(self, B, Sk, Hq, Hkv, D, bk, dtype):
+        q = _rand((B, 1, Hq, D), dtype, 7)
+        k = _rand((B, Sk, Hkv, D), dtype, 8)
+        v = _rand((B, Sk, Hkv, D), dtype, 9)
+        kv_len = jnp.arange(1, B + 1, dtype=jnp.int32) * (Sk // (B + 1))
+        out = ops.decode_attention(q, k, v, kv_len, block_k=bk)
+        want = ref.decode_attention_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_stale_cache_is_masked(self):
+        """Entries past kv_len must not affect the output."""
+        q = _rand((1, 1, 4, 32), jnp.float32, 10)
+        k = _rand((1, 128, 4, 32), jnp.float32, 11)
+        v = _rand((1, 128, 4, 32), jnp.float32, 12)
+        kv_len = jnp.array([64], jnp.int32)
+        out1 = ops.decode_attention(q, k, v, kv_len, block_k=64)
+        k2 = k.at[:, 64:].set(999.0)
+        v2 = v.at[:, 64:].set(-999.0)
+        out2 = ops.decode_attention(q, k2, v2, kv_len, block_k=64)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(4, 128), (2, 37, 256), (1, 5, 7, 64), (300, 512)])
+    def test_matches_ref(self, shape, dtype):
+        x = _rand(shape, dtype, 13)
+        scale = _rand((shape[-1],), dtype, 14)
+        out = ops.rms_norm(x, scale)
+        want = ref.rms_norm_ref(x, scale)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @given(rows=st.integers(1, 64), d=st.sampled_from([32, 64, 128]),
+           seed=st.integers(0, 100))
+    @settings(max_examples=15, deadline=None)
+    def test_scale_property(self, rows, d, seed):
+        """rms_norm(c·x) == rms_norm(x) for any c > 0 (scale invariance)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d))
+        scale = jnp.ones((d,))
+        a = np.asarray(ops.rms_norm(x, scale))
+        b = np.asarray(ops.rms_norm(3.7 * x, scale))
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+class TestSsmScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (1, 128, 2, 16, 8, 32),
+        (2, 256, 4, 64, 16, 64),
+        (2, 192, 3, 32, 64, 64),
+    ])
+    def test_matches_chunked_ref(self, B, S, H, P, N, chunk, dtype):
+        x = _rand((B, S, H, P), dtype, 15)
+        Bm = _rand((B, S, N), dtype, 16)
+        Cm = _rand((B, S, N), dtype, 17)
+        dt = jax.nn.softplus(_rand((B, S, H), jnp.float32, 18))
+        A_log = _rand((H,), jnp.float32, 19) * 0.5
+        D = _rand((H,), jnp.float32, 20)
+        y, s = ops.ssm_scan(x, Bm, Cm, dt, A_log, D, chunk=chunk)
+        yr, sr = ref.ssm_scan_ref(x, Bm, Cm, dt, A_log, D, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **_tol(dtype))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_chunked_ref_matches_sequential(self):
+        """The chunked oracle itself is exact vs the step-by-step scan."""
+        B, S, H, P, N = 2, 96, 3, 8, 4
+        x = _rand((B, S, H, P), jnp.float32, 21)
+        Bm = _rand((B, S, N), jnp.float32, 22)
+        Cm = _rand((B, S, N), jnp.float32, 23)
+        dt = jax.nn.softplus(_rand((B, S, H), jnp.float32, 24))
+        A_log = _rand((H,), jnp.float32, 25) * 0.5
+        D = _rand((H,), jnp.float32, 26)
+        y1, s1 = ref.ssm_scan_ref(x, Bm, Cm, dt, A_log, D, chunk=16)
+        y2, s2 = ref.ssm_scan_sequential_ref(x, Bm, Cm, dt, A_log, D)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+    def test_decay_property(self):
+        """With A → −∞-ish decay (large A·dt), state ≈ last-chunk-only: the
+        output at position i must not depend on far-past inputs."""
+        B, S, H, P, N = 1, 128, 1, 8, 4
+        x = _rand((B, S, H, P), jnp.float32, 27)
+        Bm = _rand((B, S, N), jnp.float32, 28)
+        Cm = _rand((B, S, N), jnp.float32, 29)
+        dt = jnp.full((B, S, H), 50.0)       # huge dt → decay ≈ 0
+        A_log = jnp.zeros((H,))              # A = −1 → exp(−50) per step
+        D = jnp.zeros((H,))
+        y1, _ = ops.ssm_scan(x, Bm, Cm, dt, A_log, D, chunk=32)
+        x2 = x.at[:, :64].set(123.0)         # perturb far past
+        y2, _ = ops.ssm_scan(x2, Bm, Cm, dt, A_log, D, chunk=32)
+        np.testing.assert_allclose(np.asarray(y1[:, -16:]),
+                                   np.asarray(y2[:, -16:]), atol=1e-3)

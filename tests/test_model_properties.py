@@ -1,0 +1,115 @@
+"""Model-level property tests: RoPE/M-RoPE invariants, engine slot hygiene
+for recurrent archs, causality."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import forward, init_cache, init_lm, reduced
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    apply_rope_tables,
+    rope_tables,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestRope:
+    @given(seed=st.integers(0, 100), shift=st.integers(1, 32))
+    @settings(max_examples=15, deadline=None)
+    def test_relative_position_invariance(self, seed, shift):
+        """⟨rope(q,i), rope(k,j)⟩ depends only on i−j (the RoPE property)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        q = jax.random.normal(k1, (1, 1, 1, 32))
+        k = jax.random.normal(k2, (1, 1, 1, 32))
+        def dot_at(i, j):
+            qr = apply_rope(q, jnp.array([[i]]), 10_000.0)
+            kr = apply_rope(k, jnp.array([[j]]), 10_000.0)
+            return float(jnp.sum(qr * kr))
+        a = dot_at(5, 5 + shift)
+        b = dot_at(40, 40 + shift)
+        assert a == pytest.approx(b, abs=1e-4)
+
+    def test_mrope_equals_rope_for_text(self):
+        """Identical t/h/w position ids must reduce to standard RoPE."""
+        x = jax.random.normal(KEY, (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+        a = apply_rope(x, pos, 10_000.0)
+        b = apply_mrope(x, pos3, 10_000.0, (4, 6, 6))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_hoisted_tables_match_direct(self):
+        cfg = reduced(get_config("qwen2-vl-2b"))
+        x = jax.random.normal(KEY, (2, 8, 4, cfg.d_head))
+        pos3 = jnp.broadcast_to(jnp.arange(8)[None, None], (3, 2, 8)).astype(jnp.int32)
+        direct = apply_mrope(x, pos3, cfg.rope_theta, cfg.mrope_sections)
+        tab = rope_tables(cfg, pos3)
+        np.testing.assert_allclose(np.asarray(apply_rope_tables(x, tab)),
+                                   np.asarray(direct), atol=1e-5)
+
+    def test_hoist_rope_flag_preserves_forward(self):
+        for arch in ("granite-3-2b", "qwen2-vl-2b"):
+            cfg = reduced(get_config(arch))
+            params = init_lm(KEY, cfg)
+            toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+            kwargs = {}
+            if cfg.family == "vlm":
+                P = cfg.vision_stub_patches
+                kwargs["vision_embeds"] = jax.random.normal(KEY, (2, P, cfg.d_model)) * 0.02
+                kwargs["positions"] = jnp.broadcast_to(
+                    jnp.arange(16 + P)[None, None], (3, 2, 16 + P)).astype(jnp.int32)
+            h1, _, _ = forward(params, toks, cfg, **kwargs)
+            cfg2 = dataclasses.replace(cfg, hoist_rope=True)
+            h2, _, _ = forward(params, toks, cfg2, **kwargs)
+            np.testing.assert_allclose(np.asarray(h1, np.float32),
+                                       np.asarray(h2, np.float32),
+                                       atol=2e-5, rtol=2e-4)
+
+
+class TestCausality:
+    @pytest.mark.parametrize("arch", ["granite-3-2b", "zamba2-7b", "xlstm-1.3b"])
+    def test_future_tokens_do_not_affect_past(self, arch):
+        cfg = reduced(get_config(arch))
+        params = init_lm(KEY, cfg)
+        toks = jax.random.randint(KEY, (1, 24), 0, cfg.vocab_size)
+        h1, _, _ = forward(params, toks, cfg)
+        toks2 = toks.at[0, -1].set((toks[0, -1] + 7) % cfg.vocab_size)
+        h2, _, _ = forward(params, toks2, cfg)
+        np.testing.assert_allclose(np.asarray(h1[:, :-1], np.float32),
+                                   np.asarray(h2[:, :-1], np.float32),
+                                   atol=1e-4)
+        assert not np.allclose(np.asarray(h1[:, -1], np.float32),
+                               np.asarray(h2[:, -1], np.float32))
+
+
+class TestSlotHygiene:
+    def test_recurrent_state_reset_on_admit(self):
+        """A freed slot's SSM state must not leak into the next request
+        (reset_slot correctness for hybrid archs)."""
+        from repro.serve import Request, ServeEngine
+
+        cfg = reduced(get_config("zamba2-7b"), vocab_size=64)
+        params = init_lm(KEY, cfg)
+
+        def outputs_for(prompts):
+            eng = ServeEngine(cfg, params, batch_slots=1, max_len=32, eos_id=-1)
+            outs = []
+            for i, p in enumerate(prompts):
+                eng.submit(Request(i, prompt=p, max_new_tokens=4))
+            for r in eng.run_until_done(500):
+                outs.append((r.req_id, r.output))
+            return dict(outs)
+
+        # Request B served alone vs served after a long request A in the
+        # same slot: outputs must match exactly.
+        alone = outputs_for([[9, 8, 7]])
+        after = outputs_for([[1, 2, 3, 4, 5, 6, 7, 8], [9, 8, 7]])
+        assert alone[0] == after[1]

@@ -1,0 +1,127 @@
+"""Faithful-reproduction tests against the paper's own reported numbers."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MRI_Q,
+    NAS_FT,
+    PlacementRequest,
+    enumerate_candidates,
+    run_paper_experiment,
+    build_paper_topology,
+)
+from repro.core.apps import requirement_from_pattern
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return build_paper_topology()
+
+
+def _cands_by_tier(topo, app, input_site="input0"):
+    rng = np.random.default_rng(0)
+    pattern = "c" if app is NAS_FT else "y"
+    req = PlacementRequest(0, app, input_site, requirement_from_pattern(pattern, rng))
+    out = {}
+    for c in enumerate_candidates(topo, req):
+        tier = ("cloud" if "cloud" in c.node.node_id
+                else "carrier" if "carrier" in c.node.node_id else "user")
+        out[tier] = c
+    return out
+
+
+class TestWorkedExample:
+    """Paper §4.2: NAS.FT carrier→cloud gives 6.6→7.4 s, ~¥8400→~¥7000,
+    satisfaction 2 → 1.954."""
+
+    def test_nasft_metrics(self, topo):
+        c = _cands_by_tier(topo, NAS_FT)
+        assert c["user"].response_s == pytest.approx(5.8)
+        assert c["user"].price == pytest.approx(9375.0)
+        assert c["carrier"].response_s == pytest.approx(6.6)
+        assert c["carrier"].price == pytest.approx(8412.5)  # paper: 約8400円
+        assert c["cloud"].response_s == pytest.approx(7.4)
+        assert c["cloud"].price == pytest.approx(7010.0)    # paper: 約7000円
+
+    def test_move_ratio_1954(self, topo):
+        c = _cands_by_tier(topo, NAS_FT)
+        ratio = (c["cloud"].response_s / c["carrier"].response_s
+                 + c["cloud"].price / c["carrier"].price)
+        assert ratio == pytest.approx(1.954, abs=5e-4)  # paper: 1.954
+
+    def test_mriq_metrics(self, topo):
+        c = _cands_by_tier(topo, MRI_Q)
+        assert "user" not in c  # user edge has no FPGA (paper §4.1.2)
+        assert c["carrier"].response_s == pytest.approx(3.2)
+        assert c["cloud"].response_s == pytest.approx(4.4)
+        assert c["carrier"].price == pytest.approx(15300.0)
+        assert c["cloud"].price == pytest.approx(12380.0)
+        # Requirement tension: X=4 s forces carrier, x=¥12500 forces cloud.
+        assert c["cloud"].response_s > 4.0 and c["carrier"].response_s <= 4.0
+        assert c["carrier"].price > 12_500.0 and c["cloud"].price <= 12_500.0
+
+
+class TestTopologyShape:
+    def test_paper_counts(self, topo):
+        tiers = {}
+        for s in topo.sites.values():
+            tiers[s.tier] = tiers.get(s.tier, 0) + 1
+        assert tiers == {"cloud": 5, "carrier_edge": 20, "user_edge": 60, "input": 300}
+        assert len(topo.links) == 20 + 60
+        kinds = {}
+        for n in topo.nodes.values():
+            kinds[n.kind] = kinds.get(n.kind, 0) + 1
+        # cloud 8/4/2, carrier 4/2/1, user 2/1/0
+        assert kinds["cpu"] == 5 * 8 + 20 * 4 + 60 * 2
+        assert kinds["gpu"] == 5 * 4 + 20 * 2 + 60 * 1
+        assert kinds["fpga"] == 5 * 2 + 20 * 1
+
+
+class TestFig5:
+    """Fig. 5(a): ≈10 % of the window actually moves; (b): mean X+Y ≈ 1.96,
+    roughly independent of the window size."""
+
+    @pytest.mark.parametrize("window", [100, 200, 400])
+    def test_fig5(self, window):
+        results = [run_paper_experiment(window, seed=s) for s in (0, 1, 2)]
+        fracs = [r.moved_fraction for r in results]
+        ratios = [r.mean_moved_ratio for r in results]
+        # paper: 約1割 with若干ばらつき — accept 5–18 %.
+        assert 0.05 <= np.mean(fracs) <= 0.18, fracs
+        # paper: 1.96程度 — accept ±0.02.
+        assert abs(np.mean(ratios) - 1.96) < 0.02, ratios
+
+    def test_window_insensitivity(self):
+        """Fig. 5(b) conclusion: the ratio barely depends on window size."""
+        means = []
+        for w in (100, 200, 400):
+            rs = [run_paper_experiment(w, seed=s).mean_moved_ratio for s in (0, 1)]
+            means.append(np.mean(rs))
+        assert max(means) - min(means) < 0.02
+
+    def test_solver_time_budget(self):
+        """Paper: GLPK ≤ 10 s @ 100 apps, ≤ 60 s @ 400.  Ours must be well
+        under (HiGHS or own B&B on the same formulation)."""
+        r = run_paper_experiment(400, seed=0)
+        assert r.events[0].plan_time_s < 10.0
+
+    def test_reconfig_never_violates_bounds(self):
+        """Every post-reconfiguration placement still satisfies the user's
+        original upper bounds (constraints 2–3)."""
+        from repro.core import PlacementEngine, Reconfigurator, sample_requests
+
+        topo = build_paper_topology()
+        rng = np.random.default_rng(3)
+        engine = PlacementEngine(topo)
+        for r in sample_requests(topo, 500, rng):
+            engine.place(r)
+        rec = Reconfigurator(engine)
+        rec.run(engine.recent(400))
+        for app in engine.placed.values():
+            req = app.request.requirement
+            if req.r_upper is not None:
+                assert app.response_s <= req.r_upper + 1e-9
+            if req.p_upper is not None:
+                assert app.price <= req.p_upper + 1e-9
+        assert engine.occupancy_invariants_ok()

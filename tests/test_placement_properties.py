@@ -1,0 +1,144 @@
+"""Hypothesis property tests on the placement/reconfiguration invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PlacementEngine,
+    Reconfigurator,
+    build_paper_topology,
+    sample_requests,
+)
+
+_TOPO = build_paper_topology()  # immutable; shared across examples
+
+
+def _engine_with(n_apps: int, seed: int) -> PlacementEngine:
+    rng = np.random.default_rng(seed)
+    engine = PlacementEngine(_TOPO)
+    for r in sample_requests(_TOPO, n_apps, rng):
+        engine.place(r)
+    return engine
+
+
+@given(seed=st.integers(0, 500), n=st.integers(5, 60))
+@settings(max_examples=20, deadline=None)
+def test_placement_respects_all_constraints(seed, n):
+    """(2)(3): every admitted app meets its bounds; (4)(5): no resource is
+    over capacity; occupancy bookkeeping is exact."""
+    engine = _engine_with(n, seed)
+    for app in engine.placed.values():
+        req = app.request.requirement
+        if req.r_upper is not None:
+            assert app.response_s <= req.r_upper + 1e-9
+        if req.p_upper is not None:
+            assert app.price <= req.p_upper + 1e-9
+    assert engine.occupancy_invariants_ok()
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_greedy_equals_milp_placement(seed):
+    """The argmin placement IS the single-app LP optimum (same objective
+    value; tie-broken placements may differ in node id only)."""
+    rng = np.random.default_rng(seed)
+    reqs = sample_requests(_TOPO, 12, rng)
+    e1, e2 = PlacementEngine(_TOPO), PlacementEngine(_TOPO)
+    for r in reqs:
+        a = e1.place(r)
+        b = e2.place_via_milp(r)
+        assert (a is None) == (b is None)
+        if a is not None:
+            metric = (lambda x: x.response_s) if r.requirement.objective == "response" \
+                else (lambda x: x.price)
+            assert metric(a) == pytest.approx(metric(b))
+
+
+@given(seed=st.integers(0, 300), window=st.sampled_from([20, 50, 100]))
+@settings(max_examples=10, deadline=None)
+def test_reconfig_properties(seed, window):
+    """Reconfiguration: never hurts the objective (S ≤ 2·|window|), keeps
+    bounds and capacity, and every executed move strictly improves its user
+    by more than the migration penalty."""
+    engine = _engine_with(150, seed)
+    rec = Reconfigurator(engine, move_penalty=0.01)
+    res = rec.plan(engine.recent(window))
+    assert res.s_after <= res.s_before + 1e-6
+    for m in res.moves:
+        assert m.ratio < 2.0 - 0.01 + 1e-9  # strictly better than penalty
+    rec.apply(res)
+    assert engine.occupancy_invariants_ok()
+    for app in engine.placed.values():
+        req = app.request.requirement
+        if req.r_upper is not None:
+            assert app.response_s <= req.r_upper + 1e-9
+        if req.p_upper is not None:
+            assert app.price <= req.p_upper + 1e-9
+
+
+@given(seed=st.integers(0, 300))
+@settings(max_examples=8, deadline=None)
+def test_reconfig_idempotent(seed):
+    """A second reconfiguration right after an applied one finds ~nothing
+    (the fleet is at a fixed point for the same window)."""
+    engine = _engine_with(120, seed)
+    rec = Reconfigurator(engine, move_penalty=0.01)
+    window = engine.recent(80)
+    rec.run(window)
+    second = rec.plan(window)
+    assert second.n_moved == 0
+
+
+def test_migration_handles_swap_cycles():
+    """Two apps exchanging (full) sibling nodes must still be executable —
+    the planner breaks the cycle with one stop-and-copy step.
+
+    In a tree topology a swap can only occur between nodes both apps can
+    reach, i.e. sibling nodes at a shared ancestor site: we fill the two
+    cloud0 FPGA servers (10 MRI-Q slots each) and swap one app across."""
+    from repro.core.migration import Move, plan_and_apply
+    from repro.core import MRI_Q, PlacementRequest, enumerate_candidates
+    from repro.core.apps import requirement_from_pattern
+
+    rng = np.random.default_rng(0)
+    engine = PlacementEngine(_TOPO)
+
+    def cand_for(req, node_id):
+        return [c for c in enumerate_candidates(_TOPO, req)
+                if c.node.node_id == node_id][0]
+
+    # 10 apps pinned to cloud0_fpga0 (inputs 0..9) and 10 to cloud0_fpga1
+    # (inputs 10..19): both servers end up exactly full.
+    for i in range(20):
+        req = PlacementRequest(i, MRI_Q, f"input{i}", requirement_from_pattern("Y", rng))
+        node = "cloud0_fpga0" if i < 10 else "cloud0_fpga1"
+        engine.commit(req, cand_for(req, node))
+    assert engine.node_remaining("cloud0_fpga0") == pytest.approx(0.0)
+    assert engine.node_remaining("cloud0_fpga1") == pytest.approx(0.0)
+
+    a, b = engine.placed[0], engine.placed[10]
+    cand_a_new = cand_for(a.request, "cloud0_fpga1")
+    cand_b_new = cand_for(b.request, "cloud0_fpga0")
+    moves = [Move(0, a.candidate, cand_a_new, 1.9),
+             Move(10, b.candidate, cand_b_new, 1.9)]
+    steps = plan_and_apply(engine, moves)
+    assert len(steps) == 2
+    assert any(s.mode == "stop_and_copy" for s in steps)
+    assert engine.occupancy_invariants_ok()
+    assert engine.placed[0].candidate.node.node_id == "cloud0_fpga1"
+    assert engine.placed[10].candidate.node.node_id == "cloud0_fpga0"
+
+
+def test_ga_finds_planted_optimum():
+    """GA sanity: recovers a planted bitstring optimum (paper §3.1 search)."""
+    from repro.core import GeneticSearch, GaConfig
+
+    rng = np.random.default_rng(0)
+    target = tuple(int(x) for x in rng.integers(0, 2, size=16))
+    fit = lambda g: -sum(a != b for a, b in zip(g, target))
+    ga = GeneticSearch([2] * 16, fit, GaConfig(population=30, generations=40),
+                       rng=np.random.default_rng(1))
+    res = ga.run()
+    assert res.best_fitness == 0  # exact recovery
+    assert res.best_gene == target

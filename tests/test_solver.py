@@ -1,0 +1,107 @@
+"""Solver substrate tests: own simplex + B&B vs scipy HiGHS, and
+hypothesis property tests on random placement MILPs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simplex import solve_lp
+from repro.core.solver import MilpProblem, solve_milp
+
+
+class TestSimplex:
+    def test_basic_lp(self):
+        # min -x-y st x+y<=1 → obj -1
+        res = solve_lp(np.array([-1.0, -1.0]), np.array([[1.0, 1.0]]), np.array([1.0]))
+        assert res.ok and res.objective == pytest.approx(-1.0)
+
+    def test_equality(self):
+        # min x+2y st x+y=1, x<=0.3 → x=.3,y=.7, obj 1.7
+        res = solve_lp(
+            np.array([1.0, 2.0]),
+            A_ub=np.array([[1.0, 0.0]]), b_ub=np.array([0.3]),
+            A_eq=np.array([[1.0, 1.0]]), b_eq=np.array([1.0]),
+        )
+        assert res.ok and res.objective == pytest.approx(1.7)
+
+    def test_infeasible(self):
+        res = solve_lp(
+            np.array([1.0]),
+            A_ub=np.array([[1.0]]), b_ub=np.array([1.0]),
+            A_eq=np.array([[1.0]]), b_eq=np.array([2.0]),
+        )
+        assert res.status == "infeasible"
+
+    def test_unbounded(self):
+        res = solve_lp(np.array([-1.0]), A_ub=np.array([[-1.0]]), b_ub=np.array([0.0]))
+        assert res.status == "unbounded"
+
+    def test_upper_bounds(self):
+        res = solve_lp(np.array([-1.0, -1.0]), ub=np.array([2.0, 3.0]))
+        assert res.ok and res.objective == pytest.approx(-5.0)
+
+    @given(
+        n=st.integers(2, 6),
+        m=st.integers(1, 5),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_matches_scipy_linprog(self, n, m, seed):
+        from scipy.optimize import linprog
+
+        rng = np.random.default_rng(seed)
+        c = rng.normal(size=n)
+        A = rng.normal(size=(m, n))
+        b = rng.uniform(0.5, 3.0, size=m)  # x=0 always feasible
+        ub = rng.uniform(0.5, 4.0, size=n)
+        ours = solve_lp(c, A, b, ub=ub)
+        ref = linprog(c, A_ub=A, b_ub=b, bounds=[(0, u) for u in ub], method="highs")
+        assert ours.ok == ref.success
+        if ours.ok:
+            assert ours.objective == pytest.approx(ref.fun, abs=1e-6)
+
+
+def _random_assignment_milp(rng, n_apps=4, n_slots=3):
+    """Small random 'placement' MILP: each app picks one slot, capacities."""
+    n = n_apps * n_slots
+    c = rng.uniform(0.5, 3.0, size=n)
+    A_eq = np.zeros((n_apps, n))
+    for i in range(n_apps):
+        A_eq[i, i * n_slots:(i + 1) * n_slots] = 1.0
+    b_eq = np.ones(n_apps)
+    usage = rng.uniform(0.3, 1.0, size=n_apps)
+    A_ub = np.zeros((n_slots, n))
+    for s in range(n_slots):
+        for i in range(n_apps):
+            A_ub[s, i * n_slots + s] = usage[i]
+    b_ub = rng.uniform(1.0, 3.0, size=n_slots)
+    return MilpProblem(c=c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                       integrality=np.ones(n))
+
+
+class TestMilp:
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_bnb_matches_highs(self, seed):
+        rng = np.random.default_rng(seed)
+        p = _random_assignment_milp(rng)
+        r_bnb = solve_milp(p, backend="bnb")
+        r_hi = solve_milp(p, backend="highs")
+        assert r_bnb.status == r_hi.status
+        if r_bnb.ok:
+            assert r_bnb.objective == pytest.approx(r_hi.objective, abs=1e-6)
+            # solution is integral and feasible
+            x = r_bnb.x
+            assert np.allclose(x, np.round(x), atol=1e-6)
+            assert (p.A_ub @ x <= p.b_ub + 1e-6).all()
+            assert np.allclose(p.A_eq @ x, p.b_eq, atol=1e-6)
+
+    def test_infeasible_milp(self):
+        p = MilpProblem(
+            c=np.array([1.0, 1.0]),
+            A_ub=np.array([[1.0, 1.0]]), b_ub=np.array([0.5]),
+            A_eq=np.array([[1.0, 1.0]]), b_eq=np.array([1.0]),
+            integrality=np.ones(2),
+        )
+        for backend in ("bnb", "highs"):
+            assert solve_milp(p, backend=backend).status == "infeasible"
