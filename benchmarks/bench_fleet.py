@@ -1,55 +1,79 @@
-"""Fleet-scheduler benchmark: the paper's technique driving a TPU pod fleet.
+"""Fleet-runtime benchmark: scenario × policy sweep of the continuous-
+operation simulator (`repro.fleet`).
 
-Builds a heterogeneous fleet (pods at different $/chip-h), submits a job
-mix derived from the dry-run roofline table, and reports admission,
-utilization, and the reconfiguration gain — the TPU instantiation of
-fig. 5."""
+Each cell runs one scenario (paper-steady-state, diurnal, flash-crowd,
+node-outage, hetero-expansion) under one reconfiguration policy (the
+paper's MILP vs greedy / hillclimb / GA) and reports the paper's fig. 5
+quantities as time series aggregates: moved ratio, mean moved-app
+satisfaction X+Y, solver latency, plus migration makespan/overlap.
+
+``run()`` prints the CSV rows for `benchmarks.run`; ``sweep()`` returns
+machine-readable dict rows for ``benchmarks.run --json`` → BENCH_fleet.json.
+"""
 
 from __future__ import annotations
 
-import os
 import time
-from typing import List
+from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.cluster import (
-    FleetScheduler,
-    JobSpec,
-    PodSpec,
-    build_fleet_topology,
-    jobs_from_dryrun,
-)
+DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga")
 
 
-def run() -> List[str]:
-    rows: List[str] = []
-    pods = [PodSpec(f"pod{i}", 256, price, gen) for i, (price, gen) in
-            enumerate([(1.2, "v5e")] * 4 + [(0.9, "v5e-spot")] * 2 + [(2.1, "v5p")] * 2)]
-    topo = build_fleet_topology(pods)
-    sched = FleetScheduler(topo, reconfig_every=8, window=24)
+def sweep(
+    scenarios: Optional[Sequence[str]] = None,
+    policies: Sequence[str] = DEFAULT_POLICIES,
+    seed: int = 0,
+    with_ticks: bool = True,
+) -> List[Dict]:
+    """One row per (scenario, policy) cell."""
+    from repro.fleet import SCENARIOS, build_scenario, get_policy
 
-    results_path = "results/dryrun_single.json"
-    if os.path.exists(results_path):
-        jobs = jobs_from_dryrun(results_path, chips=64)
-    else:  # synthetic mix when the dry-run table is absent
-        rng = np.random.default_rng(0)
-        jobs = [JobSpec(i, f"arch{i % 5}", "train_4k", chips=64,
-                        step_time_s=float(rng.uniform(0.5, 5.0)),
-                        step_slo_s=float(rng.uniform(2.0, 10.0)),
-                        budget_usd_month=float(rng.uniform(5e4, 3e5)))
-                for i in range(30)]
-    t0 = time.perf_counter()
-    placed = sum(1 for j in jobs if sched.submit(j) is not None)
-    dt = time.perf_counter() - t0
-    util = sched.utilization()
-    rows.append(f"fleet_admission,jobs={len(jobs)},placed={placed},"
-                f"rejected={len(jobs) - placed},s={dt:.3f}")
-    rows.append("fleet_utilization," + ",".join(
-        f"{pod}={u:.2f}" for pod, u in sorted(util.items())))
-    res = sched.recon.run(sched.engine.recent(sched.window))
-    rows.append(f"fleet_reconfig,window={len(res.window)},moved={res.n_moved},"
-                f"gain={res.gain:.4f},mean_ratio={res.mean_moved_ratio:.4f},"
-                f"migrations={len(res.migration_steps)}")
-    assert sched.engine.occupancy_invariants_ok()
+    rows: List[Dict] = []
+    for sc in scenarios or sorted(SCENARIOS):
+        for pol in policies:
+            spec = build_scenario(sc, seed=seed)
+            runtime = spec.make_runtime(get_policy(pol))
+            t0 = time.perf_counter()
+            tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
+            wall = time.perf_counter() - t0
+            d = tel.to_dict()
+            # Overlap averaged over ticks that actually migrated; idle ticks
+            # would dilute the link-parallelism statistic.
+            migrated = [t for t in d["ticks"] if t["migration_makespan_s"] > 0]
+            overlap = (sum(t["migration_overlap"] for t in migrated)
+                       / len(migrated)) if migrated else 0.0
+            row = {
+                "scenario": sc,
+                "policy": pol,
+                "seed": seed,
+                "wall_s": round(wall, 3),
+                "fingerprint": tel.fingerprint(),
+                **d["counters"],
+                **d["summary"],
+                "mean_migration_makespan_s": round(
+                    sum(t["migration_makespan_s"] for t in d["ticks"])
+                    / max(len(d["ticks"]), 1), 6),
+                "mean_migration_overlap": round(overlap, 6),
+            }
+            if with_ticks:
+                row["ticks_series"] = d["ticks"]
+            rows.append(row)
     return rows
+
+
+def run(seed: int = 0) -> List[str]:
+    """CSV rows for the default `benchmarks.run` text mode."""
+    out: List[str] = []
+    for r in sweep(seed=seed, with_ticks=False):
+        out.append(
+            f"fleet_{r['scenario']},policy={r['policy']},"
+            f"arrivals={r['arrivals']},admitted={r['admitted']},"
+            f"rejected={r['rejected']},moves={r['moves']},"
+            f"mean_ratio={r['mean_moved_ratio']:.4f},"
+            f"gain={r['total_gain']:.3f},"
+            f"solver_s={r['mean_solver_time_s']:.4f},"
+            f"makespan_s={r['mean_migration_makespan_s']:.2f},"
+            f"overlap={r['mean_migration_overlap']:.2f},"
+            f"wall_s={r['wall_s']:.2f}"
+        )
+    return out

@@ -1,23 +1,55 @@
 """Benchmark driver — one section per paper table/claim.
 
   bench_paper    — fig. 5(a)/(b) + solver-time claims (§4.2)
-  bench_fleet    — the technique on a TPU pod fleet (TPU fig. 5 analogue)
+  bench_fleet    — fleet-runtime scenario × policy sweep (repro.fleet)
   bench_roofline — §Roofline table from the dry-run artifacts
   bench_kernels  — Pallas kernels (interpret) vs jnp refs
 
-Prints ``name,key=value,...`` CSV rows.
+Default mode prints ``name,key=value,...`` CSV rows for every section.
+``--json`` runs the fleet sweep only and writes machine-readable rows
+(one per scenario × policy cell, with per-tick telemetry series) to
+``BENCH_fleet.json``.
 """
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def run_json(out_path: str, seed: int) -> int:
+    from benchmarks.bench_fleet import DEFAULT_POLICIES, sweep
+
+    rows = sweep(seed=seed)
+    doc = {
+        "benchmark": "fleet_runtime",
+        "seed": seed,
+        "policies": list(DEFAULT_POLICIES),
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {out_path}: {len(rows)} scenario×policy rows")
+    ok = 0
+    for r in rows:
+        flag = ""
+        if r["scenario"] == "paper-steady-state" and r["policy"] == "milp":
+            # Paper fig. 5(b): moved-app mean X+Y ≈ 1.96.
+            in_env = abs(r["mean_moved_ratio"] - 1.96) <= 0.15
+            flag = f"  [paper envelope ±0.15: {'OK' if in_env else 'MISS'}]"
+            ok |= 0 if in_env else 1
+        print(f"  {r['scenario']:20s} {r['policy']:10s} "
+              f"ratio={r['mean_moved_ratio']:.4f} moves={r['moves']:4d} "
+              f"gain={r['total_gain']:8.3f} wall={r['wall_s']:.2f}s{flag}")
+    return ok
+
+
+def run_csv(seed: int = 0) -> int:
     from benchmarks import bench_fleet, bench_kernels, bench_paper, bench_roofline
 
     sections = [
         ("paper", bench_paper.run),
-        ("fleet", bench_fleet.run),
+        ("fleet", lambda: bench_fleet.run(seed=seed)),
         ("roofline", bench_roofline.run),
         ("kernels", bench_kernels.run),
     ]
@@ -31,8 +63,18 @@ def main() -> None:
             failed += 1
             traceback.print_exc()
             print(f"{name},ERROR")
-    if failed:
-        sys.exit(1)
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="run the fleet sweep and write BENCH_fleet.json")
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="output path for --json (default: BENCH_fleet.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    sys.exit(run_json(args.out, args.seed) if args.json else run_csv(args.seed))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,51 @@
+"""Continuous-operation fleet runtime, end to end:
+
+  1. compile a scenario (event schedule over a topology) — here the
+     node-outage story: steady paper workload, then cloud GPUs fail
+     mid-run and recover later;
+  2. drive it through the discrete-event runtime under two policies —
+     the paper's MILP vs a no-op control — and
+  3. print the per-tick telemetry so the adaptation is visible: moved
+     apps, satisfaction of moved apps (fig. 5(b) quantity), migration
+     makespan with link-overlap, utilization.
+
+    PYTHONPATH=src python examples/fleet_runtime_demo.py [scenario]
+"""
+
+import sys
+
+from repro.fleet import SCENARIOS, build_scenario, get_policy
+
+
+def run_one(name: str, policy_name: str, seed: int = 0):
+    spec = build_scenario(name, seed=seed)
+    runtime = spec.make_runtime(get_policy(policy_name))
+    tel = runtime.run(spec.event_queue(), scenario=name, seed=seed)
+    return tel
+
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "node-outage"
+    if name not in SCENARIOS:
+        raise SystemExit(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+
+    print(f"scenario: {name}\n")
+    for policy in ("milp", "noop"):
+        tel = run_one(name, policy)
+        c = tel.counters
+        print(f"--- policy = {policy} ---")
+        print(f"{'t':>9} {'trigger':>9} {'alive':>5} {'moved':>5} "
+              f"{'X+Y moved':>9} {'mksp s':>7} {'ovlp':>5} {'util':>5}")
+        for t in tel.ticks:
+            print(f"{t.t:9.0f} {t.trigger:>9} {t.n_alive:5d} {t.n_moved:5d} "
+                  f"{t.mean_moved_ratio:9.4f} {t.migration_makespan_s:7.1f} "
+                  f"{t.migration_overlap:5.2f} {t.utilization:5.2f}")
+        print(f"totals: {c['arrivals']} arrivals, {c['admitted']} admitted, "
+              f"{c['rejected']} rejected, {c['departures']} departed, "
+              f"{c['failover_moved']} failed over, {c['moves']} moved")
+        print(f"mean moved-app satisfaction X+Y = {tel.mean_moved_ratio:.4f} "
+              f"(2.0 = unchanged; paper fig. 5(b) ≈ 1.96)\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,13 +21,47 @@ import shutil
 import tempfile
 from typing import Any, Dict, List, Optional, Tuple
 
+import zlib
+
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # pragma: no cover - availability depends on environment
+    import zstandard
+except ImportError:  # fall back to stdlib zlib (slower, but zero extra deps)
+    zstandard = None
 
 _COMMIT = "COMMIT"
 _SHARD_BYTES = 256 * 1024 * 1024  # flush a shard file at ~256 MB
+_DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+_CODEC_EXT = {"zstd": "zst", "zlib": "zz"}
+
+
+def _compress_fn(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("zstd checkpoint requested but zstandard not installed")
+        return zstandard.ZstdCompressor(level=3).compress
+    if codec == "zlib":
+        return lambda payload: zlib.compress(payload, 6)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress_fn(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _shard_name(shard_id: int, codec: str) -> str:
+    return f"shard_{shard_id:04d}.msgpack.{_CODEC_EXT[codec]}"
 
 
 def _path_str(path) -> str:
@@ -39,13 +73,15 @@ def save(directory: str, step: int, tree: Any, extra: Optional[Dict] = None) -> 
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory or ".")
+    codec = _DEFAULT_CODEC
     manifest: Dict[str, Any] = {
         "step": step,
         "treedef": None,  # reconstructed from leaf paths
         "leaves": [],
         "extra": extra or {},
+        "codec": codec,
     }
-    cctx = zstandard.ZstdCompressor(level=3)
+    compress = _compress_fn(codec)
     shard_id, buf, buf_bytes = 0, [], 0
 
     def flush():
@@ -53,8 +89,8 @@ def save(directory: str, step: int, tree: Any, extra: Optional[Dict] = None) -> 
         if not buf:
             return
         payload = msgpack.packb(buf, use_bin_type=True)
-        with open(os.path.join(tmp, f"shard_{shard_id:04d}.msgpack.zst"), "wb") as f:
-            f.write(cctx.compress(payload))
+        with open(os.path.join(tmp, _shard_name(shard_id, codec)), "wb") as f:
+            f.write(compress(payload))
         shard_id += 1
         buf, buf_bytes = [], 0
 
@@ -102,14 +138,15 @@ def latest_checkpoint(directory: str) -> Optional[str]:
 def _load_raw(path: str) -> Dict[str, np.ndarray]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")  # pre-codec checkpoints were zstd
+    decompress = _decompress_fn(codec)
     by_shard: Dict[int, List[Dict]] = {}
     for leaf in manifest["leaves"]:
         by_shard.setdefault(leaf["shard"], []).append(leaf)
     out: Dict[str, np.ndarray] = {}
     for shard, leaves in by_shard.items():
-        with open(os.path.join(path, f"shard_{shard:04d}.msgpack.zst"), "rb") as f:
-            items = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        with open(os.path.join(path, _shard_name(shard, codec)), "rb") as f:
+            items = msgpack.unpackb(decompress(f.read()), raw=False)
         data = {i["path"]: i["data"] for i in items}
         for leaf in leaves:
             arr = np.frombuffer(data[leaf["path"]], dtype=leaf["dtype"])

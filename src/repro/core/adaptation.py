@@ -110,14 +110,17 @@ class AdaptationController:
 
     # Step 7 -----------------------------------------------------------
     def operate(self) -> List:
-        """One reconfiguration window; returns migration directives."""
+        """One reconfiguration window through the scheduler's configured
+        policy + migration executor; returns the scheduled migrations."""
         if self.scheduler is None:
             return []
-        res = self.scheduler.recon.run(
-            self.scheduler.engine.recent(self.scheduler.window))
-        if res.accepted:
-            self.scheduler.migrations.extend(res.migration_steps)
-        return res.migration_steps
+        sched = self.scheduler
+        res = sched.policy.plan(sched.engine, sched.engine.recent(sched.window))
+        if not res.accepted:
+            return []
+        schedule = sched.executor.execute(sched.engine, res)
+        sched.migrations.extend(schedule.items)
+        return schedule.items
 
     # ------------------------------------------------------------------
     def run_all(self, cfg: ModelConfig, shape: ShapeConfig,

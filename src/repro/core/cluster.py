@@ -118,13 +118,23 @@ class FleetScheduler:
 
     Jobs are placed FCFS under their SLO/budget bounds (Step 5); every
     ``reconfig_every`` admissions, the most recent ``window`` jobs are
-    jointly re-optimized (Step 7) and accepted moves are returned as
+    jointly re-optimized (Step 7) through a pluggable policy
+    (`fleet.policies`: "milp" — the paper's exact solver — "greedy",
+    "hillclimb", "ga") and accepted moves are executed via the
+    bandwidth-aware migration executor; the resulting schedule entries are
     migration directives for `runtime.elastic`."""
 
     def __init__(self, topo: Topology, reconfig_every: int = 16,
-                 window: int = 32, move_penalty: float = 0.01):
+                 window: int = 32, move_penalty: float = 0.01,
+                 policy: str = "milp", state_mb: float = 64.0):
+        # Imported here: repro.fleet builds on repro.core (not the reverse).
+        from repro.fleet.executor import MigrationExecutor
+        from repro.fleet.policies import get_policy
+
         self.engine = PlacementEngine(topo, all_sites=True)
         self.recon = Reconfigurator(self.engine, move_penalty=move_penalty)
+        self.policy = get_policy(policy, move_penalty=move_penalty)
+        self.executor = MigrationExecutor(state_mb=state_mb)
         self.reconfig_every = reconfig_every
         self.window = window
         self.admitted = 0
@@ -138,9 +148,10 @@ class FleetScheduler:
         if placed is not None:
             result = placed.candidate.node.site_id
         if self.admitted % self.reconfig_every == 0:
-            res = self.recon.run(self.engine.recent(self.window))
+            res = self.policy.plan(self.engine, self.engine.recent(self.window))
             if res.accepted:
-                self.migrations.extend(res.migration_steps)
+                schedule = self.executor.execute(self.engine, res)
+                self.migrations.extend(schedule.items)
         return result
 
     def utilization(self) -> Dict[str, float]:

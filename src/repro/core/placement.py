@@ -15,7 +15,7 @@ reconfiguration layer (`core.reconfig`) and the TPU-fleet scheduler
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -63,6 +63,24 @@ class PlacementEngine:
         self.placed: Dict[int, PlacedApp] = {}
         self.placement_order: List[int] = []   # req_ids in admission order
         self.rejected: List[PlacementRequest] = []
+        self.offline_nodes: Set[str] = set()   # failed nodes (fleet runtime)
+
+    # ----------------------------------------------------------- node state
+    def set_node_online(self, node_id: str, online: bool) -> None:
+        """Mark a device node failed/recovered.  Offline nodes accept no new
+        placements; evicting the apps already on them is the caller's job
+        (`fleet.runtime` re-places or drops them)."""
+        if node_id not in self.topo.nodes:
+            raise KeyError(f"unknown node {node_id}")
+        if online:
+            self.offline_nodes.discard(node_id)
+        else:
+            self.offline_nodes.add(node_id)
+
+    def apps_on_node(self, node_id: str) -> List[int]:
+        """req_ids currently hosted on ``node_id`` (admission order)."""
+        return [r for r in self.placement_order
+                if self.placed[r].candidate.node.node_id == node_id]
 
     # ------------------------------------------------------------ capacity
     def node_remaining(self, node_id: str) -> float:
@@ -72,6 +90,8 @@ class PlacementEngine:
         return self.topo.links[link_id].bandwidth_mbps - self.link_used[link_id]
 
     def fits(self, request: PlacementRequest, cand: Candidate) -> bool:
+        if cand.node.node_id in self.offline_nodes:
+            return False
         if self.node_remaining(cand.node.node_id) < request.app.device_usage - 1e-9:
             return False
         for link in cand.links:
@@ -85,12 +105,17 @@ class PlacementEngine:
             self.link_used[link.link_id] += sign * request.app.bandwidth_mbps
 
     # ----------------------------------------------------------- placement
-    def feasible_candidates(self, request: PlacementRequest) -> List[Candidate]:
-        """Constraints (2)–(5) applied to the raw candidate set."""
+    def enumerate_feasible(self, request: PlacementRequest) -> List[Candidate]:
+        """Constraints (2)–(3) + node-online filter, *ignoring* capacity —
+        the candidate set reconfiguration policies optimize over."""
         cands = enumerate_candidates(self.topo, request, self.allow_cpu_fallback,
                                      all_sites=self.all_sites)
         cands = filter_candidates(request, cands)
-        return [c for c in cands if self.fits(request, c)]
+        return [c for c in cands if c.node.node_id not in self.offline_nodes]
+
+    def feasible_candidates(self, request: PlacementRequest) -> List[Candidate]:
+        """Constraints (2)–(5) applied to the raw candidate set."""
+        return [c for c in self.enumerate_feasible(request) if self.fits(request, c)]
 
     def place(self, request: PlacementRequest) -> Optional[PlacedApp]:
         """Sequential LP placement.  Returns None (and records the
@@ -163,6 +188,25 @@ class PlacementEngine:
         app = self.placed.pop(req_id)
         self._occupy(app.request, app.candidate, -1.0)
         self.placement_order.remove(req_id)
+
+    def free_capacity_excluding(
+        self, window: Sequence[int]
+    ) -> Tuple[Dict[str, float], Dict[str, float]]:
+        """Remaining (node, link) capacity with window apps lifted out — the
+        resource pool a joint re-placement of the window may use (non-window
+        apps stay pinned).  Shared by the MILP and the heuristic policies."""
+        node_cap: Dict[str, float] = {
+            nid: self.node_remaining(nid) for nid in self.topo.nodes
+        }
+        link_cap: Dict[str, float] = {
+            lid: self.link_remaining(lid) for lid in self.topo.links
+        }
+        for req_id in window:
+            placed = self.placed[req_id]
+            node_cap[placed.candidate.node.node_id] += placed.request.app.device_usage
+            for l in placed.candidate.links:
+                link_cap[l.link_id] += placed.request.app.bandwidth_mbps
+        return node_cap, link_cap
 
     # ------------------------------------------------------------- queries
     def recent(self, n: int) -> List[int]:

@@ -20,10 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
-from .apps import enumerate_candidates
-from .lp import AppVars, build_joint_milp, filter_candidates
+from .lp import AppVars, build_joint_milp
 from .migration import MigrationStep, Move, plan_and_apply
 from .placement import PlacementEngine
 from .satisfaction import AppSatisfaction, mean_moved_ratio, window_sum
@@ -77,13 +76,10 @@ class Reconfigurator:
         out: List[AppVars] = []
         for req_id in window:
             placed = self.engine.placed[req_id]
-            cands = enumerate_candidates(
-                self.engine.topo, placed.request, self.engine.allow_cpu_fallback,
-                all_sites=self.engine.all_sites,
-            )
-            cands = filter_candidates(placed.request, cands)
             # The current placement is always a candidate (it satisfied the
-            # bounds at admission), so the MILP can never be infeasible.
+            # bounds at admission and its node is online), so the MILP can
+            # never be infeasible.
+            cands = self.engine.enumerate_feasible(placed.request)
             out.append(
                 AppVars(
                     request=placed.request,
@@ -97,18 +93,7 @@ class Reconfigurator:
 
     def _free_capacity_excluding(self, window: Sequence[int]) -> tuple:
         """Remaining capacity with window apps lifted out (they re-place)."""
-        node_cap: Dict[str, float] = {
-            nid: self.engine.node_remaining(nid) for nid in self.engine.topo.nodes
-        }
-        link_cap: Dict[str, float] = {
-            lid: self.engine.link_remaining(lid) for lid in self.engine.topo.links
-        }
-        for req_id in window:
-            placed = self.engine.placed[req_id]
-            node_cap[placed.candidate.node.node_id] += placed.request.app.device_usage
-            for l in placed.candidate.links:
-                link_cap[l.link_id] += placed.request.app.bandwidth_mbps
-        return node_cap, link_cap
+        return self.engine.free_capacity_excluding(window)
 
     # ---------------------------------------------------------------- plan
     def plan(self, window: Sequence[int]) -> ReconfigResult:

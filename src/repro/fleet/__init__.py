@@ -1,0 +1,36 @@
+"""Continuous-operation fleet runtime (the paper's reconfigurator as a
+service over a changing fleet).
+
+  events    — arrival/departure/drift/failure event model + deterministic queue
+  runtime   — discrete-event loop over a `PlacementEngine`
+  policies  — one `ReconfigPolicy` interface over MILP / greedy / hillclimb / GA
+  executor  — bandwidth-aware migration scheduling (link-overlap aware)
+  scenarios — paper-steady-state, diurnal, flash-crowd, node-outage,
+              hetero-expansion
+  telemetry — per-tick time series + deterministic fingerprints
+"""
+
+from .events import (  # noqa: F401
+    AppArrival,
+    AppDeparture,
+    DemandDrift,
+    Event,
+    EventQueue,
+    NodeFailure,
+    NodeRecovery,
+    ReconfigTick,
+)
+from .executor import MigrationExecutor, MigrationSchedule, ScheduledMigration  # noqa: F401
+from .policies import (  # noqa: F401
+    POLICIES,
+    GaPolicy,
+    GreedyPolicy,
+    HillClimbPolicy,
+    MilpPolicy,
+    NoOpPolicy,
+    ReconfigPolicy,
+    get_policy,
+)
+from .runtime import FleetRuntime, RuntimeConfig  # noqa: F401
+from .scenarios import SCENARIOS, ScenarioSpec, build_scenario  # noqa: F401
+from .telemetry import Telemetry, TickRecord  # noqa: F401

@@ -1,0 +1,95 @@
+"""Event model of the continuous-operation fleet runtime.
+
+The paper evaluates one reconfiguration over a frozen population (§4); a
+real fleet never freezes: apps arrive and leave, demand drifts, nodes fail
+and recover.  This module defines the discrete events that drive the
+simulator (`fleet.runtime`) and a deterministic priority queue over them.
+
+Determinism contract: event order is a total order on ``(time, seq)`` where
+``seq`` is the insertion counter — two runs that push the same events in the
+same order process them identically, which is what the replay tests assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterable, Iterator, List, Optional, Tuple
+
+from repro.core.apps import PlacementRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base class; concrete events below."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AppArrival(Event):
+    """A user submits ``request``; if admitted and ``lifetime_s`` is set, a
+    matching `AppDeparture` is self-scheduled by the runtime."""
+
+    request: PlacementRequest
+    lifetime_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AppDeparture(Event):
+    req_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DemandDrift(Event):
+    """Demand of one running app changes: its bandwidth/data footprint is
+    multiplied by ``scale`` and the app is re-admitted under its original
+    bounds.  ``selector`` picks the victim deterministically (index into the
+    alive list modulo its length) so generators need not know which apps are
+    still alive at fire time."""
+
+    selector: int
+    scale: float
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure(Event):
+    node_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeRecovery(Event):
+    node_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconfigTick(Event):
+    """Forced reconfiguration (scenarios use it for time-driven ticks; the
+    runtime also self-triggers every ``reconfig_every`` admissions)."""
+
+
+class EventQueue:
+    """Min-heap of ``(time, seq, event)`` with deterministic tie-breaking."""
+
+    def __init__(self, events: Iterable[Tuple[float, Event]] = ()) -> None:
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq = 0
+        for t, ev in events:
+            self.push(t, ev)
+
+    def push(self, time_s: float, event: Event) -> None:
+        heapq.heappush(self._heap, (float(time_s), self._seq, event))
+        self._seq += 1
+
+    def pop(self) -> Tuple[float, Event]:
+        t, _, ev = heapq.heappop(self._heap)
+        return t, ev
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self) -> Iterator[Tuple[float, Event]]:
+        """Drain in order (consumes the queue)."""
+        while self._heap:
+            yield self.pop()

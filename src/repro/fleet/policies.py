@@ -1,0 +1,304 @@
+"""Pluggable reconfiguration policies behind one interface.
+
+The paper solves the window re-placement exactly (MILP, eqs. 1–5).  To
+benchmark that choice head-to-head, every optimizer in the repo is exposed
+through the same contract:
+
+    policy.plan(engine, window) -> ReconfigResult      # trial only
+
+* ``milp``      — the paper's joint MILP (`core.reconfig.Reconfigurator`)
+* ``greedy``    — one pass, each app takes its best feasible candidate
+* ``hillclimb`` — steepest-descent single-app moves until a local optimum
+* ``ga``        — `core.ga.GeneticSearch` over per-app candidate genes
+* ``noop``      — never moves anything (control baseline)
+
+Contract (checked by the conformance tests): ``plan`` must NOT mutate the
+engine; the result's moves must start from the app's live candidate, must
+jointly fit the capacity pool `engine.free_capacity_excluding(window)`,
+``satisfaction`` covers every window app, and ``s_before == 2·|window|``.
+Executing an accepted plan is the migration executor's job
+(`fleet.executor`), not the policy's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Type
+
+import numpy as np
+
+from repro.core.apps import AppProfile, Candidate
+from repro.core.ga import GaConfig, GeneticSearch
+from repro.core.migration import Move
+from repro.core.placement import PlacedApp, PlacementEngine
+from repro.core.reconfig import ReconfigResult, Reconfigurator
+from repro.core.satisfaction import AppSatisfaction, window_sum
+
+
+# ------------------------------------------------------------------ helpers
+@dataclasses.dataclass
+class _WindowApp:
+    placed: PlacedApp
+    candidates: List[Candidate]
+    current_idx: int
+
+
+class _Shadow:
+    """Scratch capacity pool for trial moves (never touches the engine)."""
+
+    def __init__(self, node_cap: Dict[str, float], link_cap: Dict[str, float]):
+        self.node = dict(node_cap)
+        self.link = dict(link_cap)
+
+    def occupy(self, app: AppProfile, cand: Candidate, sign: float) -> None:
+        self.node[cand.node.node_id] -= sign * app.device_usage
+        for l in cand.links:
+            self.link[l.link_id] -= sign * app.bandwidth_mbps
+
+    def fits(self, app: AppProfile, cand: Candidate) -> bool:
+        if self.node[cand.node.node_id] < app.device_usage - 1e-9:
+            return False
+        return all(self.link[l.link_id] >= app.bandwidth_mbps - 1e-9
+                   for l in cand.links)
+
+
+def _window_context(engine: PlacementEngine, window: Sequence[int]) -> List[_WindowApp]:
+    out: List[_WindowApp] = []
+    for req_id in window:
+        placed = engine.placed[req_id]
+        cands = engine.enumerate_feasible(placed.request)
+        try:
+            cur = cands.index(placed.candidate)
+        except ValueError:  # defensive: live candidate always re-enumerates
+            cands = [placed.candidate] + cands
+            cur = 0
+        out.append(_WindowApp(placed, cands, cur))
+    return out
+
+
+def _ratio(placed: PlacedApp, cand: Candidate) -> float:
+    return cand.response_s / placed.response_s + cand.price / placed.price
+
+
+def _result_from_assignment(
+    window: Sequence[int],
+    ctx: List[_WindowApp],
+    assignment: Sequence[int],
+    accept_threshold: float,
+    t0: float,
+) -> ReconfigResult:
+    moves: List[Move] = []
+    sat: List[AppSatisfaction] = []
+    for wa, choice in zip(ctx, assignment):
+        cand = wa.candidates[choice]
+        placed = wa.placed
+        sat.append(AppSatisfaction(
+            placed.req_id,
+            r_before=placed.response_s, r_after=cand.response_s,
+            p_before=placed.price, p_after=cand.price,
+        ))
+        if cand.node.node_id != placed.candidate.node.node_id:
+            moves.append(Move(placed.req_id, placed.candidate, cand,
+                              _ratio(placed, cand)))
+    s_before = 2.0 * len(ctx)
+    s_after = window_sum(sat)
+    accepted = bool(moves) and (s_before - s_after) > accept_threshold
+    return ReconfigResult(list(window), moves, sat, s_before, s_after,
+                          accepted, None, time.perf_counter() - t0)
+
+
+# ------------------------------------------------------------------- policies
+class ReconfigPolicy:
+    """Interface: trial-solve the joint re-placement of ``window``."""
+
+    name: str = "base"
+
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0):
+        self.move_penalty = move_penalty
+        self.accept_threshold = accept_threshold
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+        raise NotImplementedError
+
+    def _cost(self, wa: _WindowApp, choice: int) -> float:
+        """eq. (1) summand + migration penalty relative to the LIVE node."""
+        cand = wa.candidates[choice]
+        pen = self.move_penalty if (
+            cand.node.node_id != wa.placed.candidate.node.node_id) else 0.0
+        return _ratio(wa.placed, cand) + pen
+
+
+class NoOpPolicy(ReconfigPolicy):
+    """Control: measures what continuous operation looks like without the
+    paper's contribution."""
+
+    name = "noop"
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+        t0 = time.perf_counter()
+        ctx = _window_context(engine, window)
+        return _result_from_assignment(window, ctx, [wa.current_idx for wa in ctx],
+                                       self.accept_threshold, t0)
+
+
+class MilpPolicy(ReconfigPolicy):
+    """The paper's exact joint MILP."""
+
+    name = "milp"
+
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
+                 backend: str = "auto", time_limit_s: float = 60.0):
+        super().__init__(move_penalty, accept_threshold)
+        self.backend = backend
+        self.time_limit_s = time_limit_s
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+        recon = Reconfigurator(
+            engine, move_penalty=self.move_penalty,
+            accept_threshold=self.accept_threshold,
+            backend=self.backend, time_limit_s=self.time_limit_s,
+        )
+        return recon.plan(window)
+
+
+class GreedyPolicy(ReconfigPolicy):
+    """One pass in window order: each app takes its cheapest feasible
+    candidate given what earlier apps already grabbed.  O(window · cands)."""
+
+    name = "greedy"
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+        t0 = time.perf_counter()
+        ctx = _window_context(engine, window)
+        shadow = _Shadow(*engine.free_capacity_excluding(window))
+        for wa in ctx:  # charge the live assignment; apps are lifted out 1-by-1
+            shadow.occupy(wa.placed.request.app, wa.candidates[wa.current_idx], +1.0)
+        assignment: List[int] = []
+        for wa in ctx:
+            app = wa.placed.request.app
+            shadow.occupy(app, wa.candidates[wa.current_idx], -1.0)
+            best, best_cost = wa.current_idx, self._cost(wa, wa.current_idx)
+            for j in range(len(wa.candidates)):
+                if j == wa.current_idx:
+                    continue
+                cost = self._cost(wa, j)
+                if cost < best_cost - 1e-12 and shadow.fits(app, wa.candidates[j]):
+                    best, best_cost = j, cost
+            shadow.occupy(app, wa.candidates[best], +1.0)
+            assignment.append(best)
+        return _result_from_assignment(window, ctx, assignment,
+                                       self.accept_threshold, t0)
+
+
+class HillClimbPolicy(ReconfigPolicy):
+    """Steepest descent on the joint objective: repeatedly apply the single
+    app-to-candidate reassignment with the largest decrease until a local
+    optimum (or ``max_iters``)."""
+
+    name = "hillclimb"
+
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
+                 max_iters: int = 400):
+        super().__init__(move_penalty, accept_threshold)
+        self.max_iters = max_iters
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+        t0 = time.perf_counter()
+        ctx = _window_context(engine, window)
+        shadow = _Shadow(*engine.free_capacity_excluding(window))
+        assignment = [wa.current_idx for wa in ctx]
+        for wa in ctx:  # charge the starting assignment
+            shadow.occupy(wa.placed.request.app, wa.candidates[wa.current_idx], +1.0)
+        for _ in range(self.max_iters):
+            best_delta, best_i, best_j = 1e-12, -1, -1
+            for i, wa in enumerate(ctx):
+                app = wa.placed.request.app
+                cur_cost = self._cost(wa, assignment[i])
+                shadow.occupy(app, wa.candidates[assignment[i]], -1.0)
+                for j in range(len(wa.candidates)):
+                    if j == assignment[i]:
+                        continue
+                    delta = cur_cost - self._cost(wa, j)
+                    if delta > best_delta and shadow.fits(app, wa.candidates[j]):
+                        best_delta, best_i, best_j = delta, i, j
+                shadow.occupy(app, wa.candidates[assignment[i]], +1.0)
+            if best_i < 0:
+                break
+            wa = ctx[best_i]
+            shadow.occupy(wa.placed.request.app, wa.candidates[assignment[best_i]], -1.0)
+            shadow.occupy(wa.placed.request.app, wa.candidates[best_j], +1.0)
+            assignment[best_i] = best_j
+        return _result_from_assignment(window, ctx, assignment,
+                                       self.accept_threshold, t0)
+
+
+class GaPolicy(ReconfigPolicy):
+    """`core.ga.GeneticSearch` over the assignment space: one locus per
+    window app, alphabet = its top-``k_candidates`` options (current always
+    included); capacity violations are penalized, and an infeasible winner
+    falls back to the do-nothing assignment."""
+
+    name = "ga"
+
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
+                 k_candidates: int = 5, seed: int = 0,
+                 config: Optional[GaConfig] = None):
+        super().__init__(move_penalty, accept_threshold)
+        self.k_candidates = k_candidates
+        self.seed = seed
+        self.config = config or GaConfig(population=24, generations=16)
+        self._calls = 0
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+        t0 = time.perf_counter()
+        ctx = _window_context(engine, window)
+        # Prune each app's choices to its k best (by penalized cost), with
+        # the live candidate always at locus value 0.
+        for wa in ctx:
+            order = sorted(range(len(wa.candidates)),
+                           key=lambda j: (self._cost(wa, j),
+                                          wa.candidates[j].node.node_id))
+            keep = [wa.current_idx] + [j for j in order
+                                       if j != wa.current_idx][: self.k_candidates - 1]
+            wa.candidates = [wa.candidates[j] for j in keep]
+            wa.current_idx = 0
+        node_cap, link_cap = engine.free_capacity_excluding(window)
+
+        def fitness(gene) -> float:
+            shadow = _Shadow(node_cap, link_cap)
+            total = 0.0
+            for wa, g in zip(ctx, gene):
+                total += self._cost(wa, g)
+                shadow.occupy(wa.placed.request.app, wa.candidates[g], +1.0)
+            overflow = sum(-v for v in shadow.node.values() if v < -1e-9)
+            overflow += sum(-v for v in shadow.link.values() if v < -1e-9)
+            return -(total + 100.0 * overflow)
+
+        rng = np.random.default_rng((self.seed, self._calls))
+        self._calls += 1
+        search = GeneticSearch([len(wa.candidates) for wa in ctx], fitness,
+                               config=self.config, rng=rng)
+        res = search.run(seed_genes=[tuple(0 for _ in ctx)])
+        assignment = list(res.best_gene)
+        shadow = _Shadow(node_cap, link_cap)
+        for wa, g in zip(ctx, assignment):
+            shadow.occupy(wa.placed.request.app, wa.candidates[g], +1.0)
+        if any(v < -1e-9 for v in shadow.node.values()) or any(
+                v < -1e-9 for v in shadow.link.values()):
+            assignment = [0] * len(ctx)  # infeasible winner → do nothing
+        return _result_from_assignment(window, ctx, assignment,
+                                       self.accept_threshold, t0)
+
+
+POLICIES: Dict[str, Type[ReconfigPolicy]] = {
+    p.name: p for p in (MilpPolicy, GreedyPolicy, HillClimbPolicy, GaPolicy, NoOpPolicy)
+}
+
+
+def get_policy(name: str, **kwargs) -> ReconfigPolicy:
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; have {sorted(POLICIES)}") from None
+    return cls(**kwargs)

@@ -1,0 +1,182 @@
+"""Discrete-event continuous-operation runtime.
+
+Drives the paper's reconfigurator *over time* instead of once: a stream of
+arrival / departure / drift / failure events mutates the fleet, and every
+``reconfig_every`` admissions (plus after failures and recoveries) the
+configured `ReconfigPolicy` trial-solves the recent-apps window; accepted
+plans are executed through the bandwidth-aware `MigrationExecutor`.
+
+The runtime is fully deterministic given its event queue: all randomness
+lives in the scenario generators (`fleet.scenarios`), and per-tick telemetry
+fingerprints are reproducible (see `fleet.telemetry`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.apps import PlacementRequest
+from repro.core.placement import PlacementEngine
+from repro.core.topology import TIER_INPUT, Topology
+
+from .events import (
+    AppArrival,
+    AppDeparture,
+    DemandDrift,
+    Event,
+    EventQueue,
+    NodeFailure,
+    NodeRecovery,
+    ReconfigTick,
+)
+from .executor import MigrationExecutor, MigrationSchedule
+from .policies import ReconfigPolicy
+from .telemetry import Telemetry, TickRecord
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    reconfig_every: int = 100      # admissions between scheduled reconfigs
+    window: int = 100              # most-recent-N re-placement window
+    state_mb: float = 64.0         # migrated state per app
+    reconfig_on_failure: bool = True
+    check_invariants: bool = True  # occupancy audit after every tick
+
+
+class FleetRuntime:
+    """Event loop over a `PlacementEngine` + policy + migration executor."""
+
+    def __init__(
+        self,
+        topo: Topology,
+        policy: ReconfigPolicy,
+        config: Optional[RuntimeConfig] = None,
+        all_sites: bool = False,
+    ) -> None:
+        self.engine = PlacementEngine(topo, all_sites=all_sites)
+        self.policy = policy
+        self.config = config or RuntimeConfig()
+        self.executor = MigrationExecutor(state_mb=self.config.state_mb)
+        self.now = 0.0
+        self._since_reconfig = 0
+
+    # ------------------------------------------------------------------ run
+    def run(self, events: EventQueue, scenario: str = "", seed: int = 0) -> Telemetry:
+        tel = Telemetry(scenario, self.policy.name, seed)
+        while events:
+            self.now, ev = events.pop()
+            self._dispatch(ev, events, tel)
+        return tel
+
+    def _dispatch(self, ev: Event, events: EventQueue, tel: Telemetry) -> None:
+        c = tel.counters
+        if isinstance(ev, AppArrival):
+            c["arrivals"] += 1
+            placed = self.engine.place(ev.request)
+            if placed is None:
+                c["rejected"] += 1
+                return
+            c["admitted"] += 1
+            if ev.lifetime_s is not None:
+                events.push(self.now + ev.lifetime_s, AppDeparture(ev.request.req_id))
+            self._since_reconfig += 1
+            if self._since_reconfig >= self.config.reconfig_every:
+                self._tick("arrivals", tel)
+        elif isinstance(ev, AppDeparture):
+            # The app may already be gone (failure eviction that found no
+            # new home) — departures are idempotent.
+            if ev.req_id in self.engine.placed:
+                self.engine.release(ev.req_id)
+                c["departures"] += 1
+        elif isinstance(ev, DemandDrift):
+            alive = self.engine.placement_order
+            if not alive:
+                return
+            req_id = alive[ev.selector % len(alive)]
+            c["drifts"] += 1
+            if not self._readmit(req_id, scale=ev.scale):
+                c["drift_evicted"] += 1
+        elif isinstance(ev, NodeFailure):
+            c["failures"] += 1
+            self.engine.set_node_online(ev.node_id, False)
+            for req_id in self.engine.apps_on_node(ev.node_id):
+                if self._readmit(req_id):
+                    c["failover_moved"] += 1
+                else:
+                    c["failover_lost"] += 1
+            if self.config.reconfig_on_failure:
+                self._tick("failure", tel)
+        elif isinstance(ev, NodeRecovery):
+            c["recoveries"] += 1
+            self.engine.set_node_online(ev.node_id, True)
+            if self.config.reconfig_on_failure:
+                self._tick("recovery", tel)
+        elif isinstance(ev, ReconfigTick):
+            self._tick("tick", tel)
+        else:
+            raise TypeError(f"unknown event {ev!r}")
+
+    # -------------------------------------------------------------- helpers
+    def _readmit(self, req_id: int, scale: float = 1.0) -> bool:
+        """Release ``req_id`` and place it again (drift rescaling its
+        bandwidth/data footprint).  Returns False if no home was found —
+        the app is lost (recorded in ``engine.rejected``)."""
+        placed = self.engine.placed[req_id]
+        req = placed.request
+        if scale != 1.0:
+            app = dataclasses.replace(
+                req.app,
+                bandwidth_mbps=req.app.bandwidth_mbps * scale,
+                data_mb=req.app.data_mb * scale,
+            )
+            req = PlacementRequest(req.req_id, app, req.input_site, req.requirement)
+        self.engine.release(req_id)
+        return self.engine.place(req) is not None
+
+    def _utilization(self) -> tuple:
+        """(aggregate, max) used/capacity over online nodes of the device
+        kinds the current population actually consumes."""
+        kinds = {a.request.app.device_kind for a in self.engine.placed.values()}
+        used = cap = 0.0
+        worst = 0.0
+        for nid, node in self.engine.topo.nodes.items():
+            if nid in self.engine.offline_nodes or node.kind not in kinds:
+                continue
+            if self.engine.topo.sites[node.site_id].tier == TIER_INPUT:
+                continue
+            used += self.engine.node_used[nid]
+            cap += node.capacity
+            worst = max(worst, self.engine.node_used[nid] / node.capacity)
+        return (used / cap if cap else 0.0), worst
+
+    def _tick(self, trigger: str, tel: Telemetry) -> None:
+        self._since_reconfig = 0
+        window = self.engine.recent(min(self.config.window,
+                                        len(self.engine.placement_order)))
+        if not window:
+            return
+        res = self.policy.plan(self.engine, window)
+        schedule = MigrationSchedule([], self.config.state_mb)
+        if res.accepted and res.moves:
+            schedule = self.executor.execute(self.engine, res)
+            tel.counters["moves"] += res.n_moved
+        util, util_max = self._utilization()
+        tel.ticks.append(TickRecord(
+            t=self.now,
+            trigger=trigger,
+            n_alive=len(self.engine.placed),
+            window=len(window),
+            n_moved=res.n_moved if res.accepted else 0,
+            accepted=res.accepted,
+            gain=res.gain if res.accepted else 0.0,
+            mean_moved_ratio=res.mean_moved_ratio if res.accepted else 2.0,
+            solver_time_s=res.plan_time_s,
+            migration_makespan_s=schedule.makespan_s,
+            migration_overlap=schedule.overlap_factor,
+            total_downtime_s=schedule.total_downtime_s,
+            utilization=util,
+            utilization_max=util_max,
+        ))
+        if self.config.check_invariants and not self.engine.occupancy_invariants_ok():
+            raise AssertionError("occupancy invariants violated after tick")

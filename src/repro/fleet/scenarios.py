@@ -1,0 +1,181 @@
+"""Scenario library for the continuous-operation runtime.
+
+Each scenario deterministically (seeded rng) compiles to a topology + event
+schedule + runtime config:
+
+* ``paper-steady-state`` — the paper's workload run as a *service*: Poisson
+  arrivals of the §4.1 app mix with exponential lifetimes, reconfiguration
+  every 100 admissions over the recent-100 window.  ≥1000 arrivals.
+* ``diurnal``            — sinusoidally modulated arrival rate (day/night
+  load swing) plus demand drift on running apps.
+* ``flash-crowd``        — background trickle + a burst of short-lived apps
+  concentrated on one user-edge region (hot links/devices).
+* ``node-outage``        — steady state, then cloud GPU nodes fail mid-run
+  and recover later (failover + re-optimization on recovery).
+* ``hetero-expansion``   — a TPU pod fleet where cheap capacity comes online
+  mid-run (modeled as recovery of initially-failed pods); reconfiguration
+  should migrate budget-bound jobs onto it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.apps import PlacementRequest, sample_requests
+from repro.core.cluster import JobSpec, PodSpec, build_fleet_topology
+from repro.core.topology import Topology, build_paper_topology
+
+from .events import (
+    AppArrival,
+    DemandDrift,
+    Event,
+    EventQueue,
+    NodeFailure,
+    NodeRecovery,
+)
+from .policies import ReconfigPolicy
+from .runtime import FleetRuntime, RuntimeConfig
+
+
+@dataclasses.dataclass
+class ScenarioSpec:
+    name: str
+    topo: Topology
+    events: List[Tuple[float, Event]]
+    config: RuntimeConfig
+    all_sites: bool = False   # fleet topologies place across the whole tree
+
+    def event_queue(self) -> EventQueue:
+        return EventQueue(self.events)
+
+    def make_runtime(self, policy: ReconfigPolicy) -> FleetRuntime:
+        return FleetRuntime(self.topo, policy, config=self.config,
+                            all_sites=self.all_sites)
+
+
+def _poisson_arrivals(
+    topo: Topology,
+    rng: np.random.Generator,
+    n: int,
+    mean_interarrival_s: float,
+    mean_lifetime_s: float,
+    start_id: int = 0,
+    t0: float = 0.0,
+) -> List[Tuple[float, Event]]:
+    reqs = sample_requests(topo, n, rng, start_id=start_id)
+    out: List[Tuple[float, Event]] = []
+    t = t0
+    for req in reqs:
+        t += float(rng.exponential(mean_interarrival_s))
+        out.append((t, AppArrival(req, float(rng.exponential(mean_lifetime_s)))))
+    return out
+
+
+# ----------------------------------------------------------------- scenarios
+def paper_steady_state(seed: int = 0, n_arrivals: int = 1100) -> ScenarioSpec:
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    events = _poisson_arrivals(topo, rng, n_arrivals,
+                               mean_interarrival_s=10.0,
+                               mean_lifetime_s=4_000.0)
+    return ScenarioSpec("paper-steady-state", topo, events,
+                        RuntimeConfig(reconfig_every=100, window=100))
+
+
+def diurnal(seed: int = 0, n_arrivals: int = 600, period_s: float = 4_000.0) -> ScenarioSpec:
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    reqs = sample_requests(topo, n_arrivals, rng)
+    events: List[Tuple[float, Event]] = []
+    t = 0.0
+    for i, req in enumerate(reqs):
+        # Rate swings ±80 % around the base over one "day".
+        rate = 1.0 + 0.8 * np.sin(2.0 * np.pi * t / period_s)
+        t += float(rng.exponential(8.0 / max(rate, 0.2)))
+        events.append((t, AppArrival(req, float(rng.exponential(1_500.0)))))
+        if i % 25 == 24:  # demand drift on a random running app
+            scale = float(rng.choice([0.5, 1.5, 2.0]))
+            events.append((t, DemandDrift(int(rng.integers(10_000)), scale)))
+    return ScenarioSpec("diurnal", topo, events,
+                        RuntimeConfig(reconfig_every=60, window=80))
+
+
+def flash_crowd(seed: int = 0, n_background: int = 350, n_burst: int = 150) -> ScenarioSpec:
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    events = _poisson_arrivals(topo, rng, n_background,
+                               mean_interarrival_s=16.0,
+                               mean_lifetime_s=3_000.0)
+    burst_t0 = events[len(events) // 2][0]   # burst lands mid-run
+    hot_sites = [f"input{i}" for i in range(5)]  # one user-edge region
+    burst = sample_requests(topo, n_burst, rng, start_id=n_background)
+    t = burst_t0
+    for req in burst:
+        t += float(rng.exponential(0.4))     # ~150 arrivals in ~60 s
+        req = dataclasses.replace(
+            req, input_site=hot_sites[int(rng.integers(len(hot_sites)))])
+        events.append((t, AppArrival(req, float(rng.exponential(600.0)))))
+    return ScenarioSpec("flash-crowd", topo, events,
+                        RuntimeConfig(reconfig_every=50, window=100))
+
+
+def node_outage(seed: int = 0, n_arrivals: int = 500) -> ScenarioSpec:
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    events = _poisson_arrivals(topo, rng, n_arrivals,
+                               mean_interarrival_s=10.0,
+                               mean_lifetime_s=4_000.0)
+    horizon = events[-1][0]
+    for k, node in enumerate(("cloud0_gpu0", "cloud0_gpu1", "cloud1_fpga0")):
+        events.append((horizon * 0.5 + k, NodeFailure(node)))
+        events.append((horizon * 0.8 + k, NodeRecovery(node)))
+    return ScenarioSpec("node-outage", topo, events,
+                        RuntimeConfig(reconfig_every=80, window=100))
+
+
+def hetero_expansion(seed: int = 0, n_jobs: int = 140) -> ScenarioSpec:
+    """TPU fleet: expensive pods serve first; cheap pods come online later."""
+    rng = np.random.default_rng(seed)
+    pods = [PodSpec("tokyo-a", 256, 1.2), PodSpec("tokyo-b", 256, 1.2),
+            PodSpec("osaka-v5p", 256, 2.1),
+            PodSpec("spot-a", 256, 0.8), PodSpec("spot-b", 256, 0.8)]
+    topo = build_fleet_topology(pods)
+    events: List[Tuple[float, Event]] = []
+    # The spot pods are "not yet provisioned": fail them before any arrival.
+    for pod in ("spot-a", "spot-b"):
+        events.append((0.0, NodeFailure(f"{pod}_tpu")))
+    t = 0.0
+    for i in range(n_jobs):
+        t += float(rng.exponential(30.0))
+        step = float(rng.uniform(0.5, 5.0))
+        job = JobSpec(i, f"arch{i % 5}", "train_4k", chips=32,
+                      step_time_s=step,
+                      step_slo_s=None if i % 2 else step * 3.0,
+                      budget_usd_month=float(rng.uniform(5e4, 3e5)) if i % 2 else None)
+        events.append((t, AppArrival(job.request(), float(rng.exponential(900.0)))))
+    horizon = t
+    for k, pod in enumerate(("spot-a", "spot-b")):   # expansion lands mid-run
+        events.append((horizon * 0.55 + k, NodeRecovery(f"{pod}_tpu")))
+    return ScenarioSpec("hetero-expansion", topo, events,
+                        RuntimeConfig(reconfig_every=16, window=32),
+                        all_sites=True)
+
+
+SCENARIOS: Dict[str, Callable[..., ScenarioSpec]] = {
+    "paper-steady-state": paper_steady_state,
+    "diurnal": diurnal,
+    "flash-crowd": flash_crowd,
+    "node-outage": node_outage,
+    "hetero-expansion": hetero_expansion,
+}
+
+
+def build_scenario(name: str, seed: int = 0, **kwargs) -> ScenarioSpec:
+    try:
+        fn = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}") from None
+    return fn(seed=seed, **kwargs)

@@ -1,0 +1,100 @@
+"""Per-tick telemetry time series of a continuous-operation run.
+
+A *tick* is one reconfiguration event.  Each tick snapshots the paper's
+quantities (moved ratio, mean moved-app satisfaction X+Y, solver latency)
+plus operational ones (alive population, utilization, migration makespan).
+`Telemetry.fingerprint()` hashes the canonical JSON — the determinism tests
+assert fixed seed → identical fingerprint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class TickRecord:
+    t: float                       # sim time of the tick
+    trigger: str                   # "arrivals" | "failure" | "recovery" | "tick"
+    n_alive: int
+    window: int
+    n_moved: int
+    accepted: bool
+    gain: float
+    mean_moved_ratio: float        # fig. 5(b) quantity, 2.0 when nothing moved
+    solver_time_s: float
+    migration_makespan_s: float
+    migration_overlap: float
+    total_downtime_s: float
+    utilization: float             # Σ used / Σ capacity over online nodes
+    utilization_max: float         # hottest online node
+
+    @property
+    def moved_ratio(self) -> float:
+        """fig. 5(a) quantity: fraction of the window that actually moved."""
+        return self.n_moved / self.window if self.window else 0.0
+
+
+@dataclasses.dataclass
+class Telemetry:
+    scenario: str
+    policy: str
+    seed: int
+    ticks: List[TickRecord] = dataclasses.field(default_factory=list)
+    counters: Dict[str, int] = dataclasses.field(default_factory=lambda: {
+        "arrivals": 0, "admitted": 0, "rejected": 0, "departures": 0,
+        "drifts": 0, "drift_evicted": 0, "failures": 0, "recoveries": 0,
+        "failover_moved": 0, "failover_lost": 0, "moves": 0,
+    })
+
+    # ------------------------------------------------------------ summaries
+    @property
+    def mean_moved_ratio(self) -> float:
+        """Move-weighted mean X+Y over all ticks (the fig. 5(b) aggregate)."""
+        n = sum(t.n_moved for t in self.ticks)
+        if not n:
+            return 2.0
+        return sum(t.n_moved * t.mean_moved_ratio for t in self.ticks) / n
+
+    @property
+    def mean_solver_time_s(self) -> float:
+        if not self.ticks:
+            return 0.0
+        return sum(t.solver_time_s for t in self.ticks) / len(self.ticks)
+
+    @property
+    def total_gain(self) -> float:
+        return sum(t.gain for t in self.ticks if t.accepted)
+
+    def to_dict(self) -> Dict:
+        return {
+            "scenario": self.scenario,
+            "policy": self.policy,
+            "seed": self.seed,
+            "counters": dict(self.counters),
+            "summary": {
+                "ticks": len(self.ticks),
+                "mean_moved_ratio": round(self.mean_moved_ratio, 6),
+                "mean_solver_time_s": round(self.mean_solver_time_s, 6),
+                "total_gain": round(self.total_gain, 6),
+                "total_moves": self.counters["moves"],
+            },
+            "ticks": [
+                {k: (round(v, 9) if isinstance(v, float) else v)
+                 for k, v in dataclasses.asdict(t).items()}
+                for t in self.ticks
+            ],
+        }
+
+    def fingerprint(self) -> str:
+        """Stable digest of everything except wall-clock solver latency."""
+        d = self.to_dict()
+        d["summary"].pop("mean_solver_time_s", None)
+        for t in d["ticks"]:
+            t.pop("solver_time_s", None)
+        return hashlib.sha256(
+            json.dumps(d, sort_keys=True).encode()
+        ).hexdigest()

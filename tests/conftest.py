@@ -1,0 +1,40 @@
+"""Shared test config.
+
+If ``hypothesis`` is not installed (the CI image only bakes the jax_pallas
+toolchain), install a minimal stub so property-test modules still *collect*
+and their non-property tests run; ``@given`` tests skip with a reason.
+"""
+
+import sys
+import types
+
+import pytest
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _given(*_a, **_k):
+        def deco(fn):
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def _settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    stub = types.ModuleType("hypothesis")
+    stub.given = _given
+    stub.settings = _settings
+    stub.strategies = _Strategy()
+    stub.__stub__ = True
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: (lambda *a, **k: None)
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = strategies

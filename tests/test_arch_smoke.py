@@ -42,6 +42,7 @@ class TestArchSmoke:
         assert jnp.isfinite(loss), f"{arch}: loss not finite"
         assert float(loss) > 0
 
+    @pytest.mark.slow
     def test_train_step_updates_params(self, arch):
         cfg = reduced(get_config(arch))
         opt = make_optimizer(cfg.optimizer, lr=1e-3, warmup=1, total_steps=10)
@@ -58,6 +59,7 @@ class TestArchSmoke:
             f"{arch}: params did not change"
         assert int(state["step"]) == 1
 
+    @pytest.mark.slow
     def test_decode_matches_full_forward(self, arch):
         cfg = reduced(get_config(arch))
         if cfg.n_experts:

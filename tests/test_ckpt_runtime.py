@@ -69,6 +69,7 @@ class TestCheckpoint:
         got, extra = mgr.restore_latest(sds)
         assert extra["step"] == 4
 
+    @pytest.mark.slow
     def test_restart_resumes_deterministically(self, tmp_path):
         """Train 12 steps straight vs CRASH mid-run + resume-from-ckpt: the
         post-resume loss trace must match the uninterrupted run exactly

@@ -1,6 +1,8 @@
 """int8 error-feedback gradient compression tests (8-device subprocess)."""
 
 import os
+
+import pytest
 import subprocess
 import sys
 import textwrap
@@ -49,6 +51,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_compressed_psum_error_feedback():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

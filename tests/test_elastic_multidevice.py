@@ -7,6 +7,8 @@ restored state is bit-identical and training proceeds.
 """
 
 import os
+
+import pytest
 import subprocess
 import sys
 import textwrap
@@ -68,6 +70,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_elastic_rescale_8_devices(tmp_path):
     env = dict(os.environ)
     env["CKPT_DIR"] = str(tmp_path)

@@ -91,6 +91,7 @@ class TestCausality:
 
 
 class TestSlotHygiene:
+    @pytest.mark.slow
     def test_recurrent_state_reset_on_admit(self):
         """A freed slot's SSM state must not leak into the next request
         (reset_slot correctness for hybrid archs)."""

@@ -3,6 +3,8 @@ capacity on a real 8-device mesh (subprocess; would have caught the §Perf
 kimi-iteration-2 bug where ff-partial psums mixed data shards)."""
 
 import os
+
+import pytest
 import subprocess
 import sys
 import textwrap
@@ -60,6 +62,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_reference():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -2,6 +2,8 @@
 reference on a real 8-device (4-stage pod × 2-data) mesh (subprocess)."""
 
 import os
+
+import pytest
 import subprocess
 import sys
 import textwrap
@@ -63,6 +65,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_pipeline_forward_and_grads_exact():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -80,6 +80,7 @@ class TestTrainingLoss:
         last = np.mean([m["loss"] for m in trainer.metrics_log[-5:]])
         assert last < first - 0.2, f"no learning: {first:.3f} → {last:.3f}"
 
+    @pytest.mark.slow
     def test_microbatched_grads_match_full(self):
         cfg = reduced(get_config("granite-3-2b"))
         opt = make_optimizer("adamw", lr=1e-3)
