@@ -1,11 +1,14 @@
 """Fleet-runtime benchmark: scenario × policy sweep of the continuous-
 operation simulator (`repro.fleet`).
 
-Each cell runs one scenario (paper-steady-state, diurnal, flash-crowd,
-node-outage, hetero-expansion) under one reconfiguration policy (the
-paper's MILP vs greedy / hillclimb / GA) and reports the paper's fig. 5
-quantities as time series aggregates: moved ratio, mean moved-app
-satisfaction X+Y, solver latency, plus migration makespan/overlap.
+Each cell runs one scenario (paper-steady-state, diurnal-streams,
+flash-crowd[-during-reconfig], node/site-outage, flapping-node,
+hetero-expansion) under one reconfiguration policy (the paper's MILP vs
+greedy / hillclimb / GA / adaptive) and reports the paper's fig. 5
+quantities as time-series aggregates: moved ratio, mean moved-app
+satisfaction X+Y (raw and traffic-weighted), solver latency, plus the
+time-extended migration accounting (started / completed / aborted
+transfers, mean transfer duration, total downtime, in-flight collisions).
 
 ``run()`` prints the CSV rows for `benchmarks.run`; ``sweep()`` returns
 machine-readable dict rows for ``benchmarks.run --json`` → BENCH_fleet.json.
@@ -16,7 +19,32 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Sequence
 
-DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga")
+DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga", "adaptive")
+
+
+def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
+          scenario_kwargs: Optional[Dict] = None) -> Dict:
+    from repro.fleet import build_scenario, get_policy
+
+    spec = build_scenario(sc, seed=seed, **(scenario_kwargs or {}))
+    runtime = spec.make_runtime(get_policy(pol))
+    t0 = time.perf_counter()
+    tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
+    wall = time.perf_counter() - t0
+    d = tel.to_dict()
+    row = {
+        "scenario": sc,
+        "policy": pol,
+        "seed": seed,
+        "wall_s": round(wall, 3),
+        "fingerprint": tel.fingerprint(),
+        **d["counters"],
+        **d["summary"],
+    }
+    if with_ticks:
+        row["ticks_series"] = d["ticks"]
+        row["migrations_series"] = d["migrations"]
+    return row
 
 
 def sweep(
@@ -26,39 +54,28 @@ def sweep(
     with_ticks: bool = True,
 ) -> List[Dict]:
     """One row per (scenario, policy) cell."""
-    from repro.fleet import SCENARIOS, build_scenario, get_policy
+    from repro.fleet import SCENARIOS
 
     rows: List[Dict] = []
     for sc in scenarios or sorted(SCENARIOS):
         for pol in policies:
-            spec = build_scenario(sc, seed=seed)
-            runtime = spec.make_runtime(get_policy(pol))
-            t0 = time.perf_counter()
-            tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
-            wall = time.perf_counter() - t0
-            d = tel.to_dict()
-            # Overlap averaged over ticks that actually migrated; idle ticks
-            # would dilute the link-parallelism statistic.
-            migrated = [t for t in d["ticks"] if t["migration_makespan_s"] > 0]
-            overlap = (sum(t["migration_overlap"] for t in migrated)
-                       / len(migrated)) if migrated else 0.0
-            row = {
-                "scenario": sc,
-                "policy": pol,
-                "seed": seed,
-                "wall_s": round(wall, 3),
-                "fingerprint": tel.fingerprint(),
-                **d["counters"],
-                **d["summary"],
-                "mean_migration_makespan_s": round(
-                    sum(t["migration_makespan_s"] for t in d["ticks"])
-                    / max(len(d["ticks"]), 1), 6),
-                "mean_migration_overlap": round(overlap, 6),
-            }
-            if with_ticks:
-                row["ticks_series"] = d["ticks"]
-            rows.append(row)
+            rows.append(_cell(sc, pol, seed, with_ticks))
     return rows
+
+
+def smoke(seed: int = 0) -> List[Dict]:
+    """CI sanity slice: two fast cells with every moving part exercised
+    (request streams, in-flight migrations, adaptive switching)."""
+    return [
+        _cell("paper-steady-state", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 250}),
+        _cell("diurnal-streams", "adaptive", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 200}),
+    ]
+
+
+def _fmt_ratio(v) -> str:
+    return f"{v:.4f}" if v is not None else "nan"
 
 
 def run(seed: int = 0) -> List[str]:
@@ -69,11 +86,15 @@ def run(seed: int = 0) -> List[str]:
             f"fleet_{r['scenario']},policy={r['policy']},"
             f"arrivals={r['arrivals']},admitted={r['admitted']},"
             f"rejected={r['rejected']},moves={r['moves']},"
-            f"mean_ratio={r['mean_moved_ratio']:.4f},"
+            f"mean_ratio={_fmt_ratio(r['mean_moved_ratio'])},"
+            f"mean_ratio_w={_fmt_ratio(r['mean_moved_ratio_weighted'])},"
             f"gain={r['total_gain']:.3f},"
             f"solver_s={r['mean_solver_time_s']:.4f},"
-            f"makespan_s={r['mean_migration_makespan_s']:.2f},"
-            f"overlap={r['mean_migration_overlap']:.2f},"
+            f"migrations={r['migrations_completed']}/{r['migrations_started']},"
+            f"aborted={r['migrations_aborted']},"
+            f"mig_dur_s={_fmt_ratio(r['mean_migration_duration_s'])},"
+            f"downtime_s={r['total_downtime_s']:.1f},"
+            f"arr_inflight={r['arrivals_inflight']},"
             f"wall_s={r['wall_s']:.2f}"
         )
     return out

@@ -28,11 +28,13 @@ def bench_fig5(seeds=(0, 1, 2)) -> List[str]:
             e = r.events[0]
             moved.append(e.n_moved)
             frac.append(e.n_moved / e.n_target)
-            ratio.append(e.mean_moved_ratio)
+            if e.mean_moved_ratio is not None:   # None when nothing moved
+                ratio.append(e.mean_moved_ratio)
             times.append(e.plan_time_s)
+        mean_ratio = f"{np.mean(ratio):.4f}" if ratio else "nan"
         rows.append(
             f"fig5,window={window},moved={np.mean(moved):.1f},"
-            f"moved_frac={np.mean(frac):.3f},mean_ratio={np.mean(ratio):.4f},"
+            f"moved_frac={np.mean(frac):.3f},mean_ratio={mean_ratio},"
             f"solver_s={np.mean(times):.3f}"
         )
     return rows

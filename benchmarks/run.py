@@ -7,14 +7,20 @@
 
 Default mode prints ``name,key=value,...`` CSV rows for every section.
 ``--json`` runs the fleet sweep only and writes machine-readable rows
-(one per scenario × policy cell, with per-tick telemetry series) to
-``BENCH_fleet.json``.
+(one per scenario × policy cell, with per-tick and per-migration telemetry
+series) to ``BENCH_fleet.json``.  ``--smoke`` runs a 2-cell CI sanity
+slice (fast scenarios, request streams + adaptive policy) and exits
+non-zero on any failure.
 """
 
 import argparse
 import json
 import sys
 import traceback
+
+
+def _ratio(v):
+    return f"{v:.4f}" if v is not None else "nan"
 
 
 def run_json(out_path: str, seed: int) -> int:
@@ -35,13 +41,34 @@ def run_json(out_path: str, seed: int) -> int:
         flag = ""
         if r["scenario"] == "paper-steady-state" and r["policy"] == "milp":
             # Paper fig. 5(b): moved-app mean X+Y ≈ 1.96.
-            in_env = abs(r["mean_moved_ratio"] - 1.96) <= 0.15
+            in_env = (r["mean_moved_ratio"] is not None
+                      and abs(r["mean_moved_ratio"] - 1.96) <= 0.15)
             flag = f"  [paper envelope ±0.15: {'OK' if in_env else 'MISS'}]"
             ok |= 0 if in_env else 1
-        print(f"  {r['scenario']:20s} {r['policy']:10s} "
-              f"ratio={r['mean_moved_ratio']:.4f} moves={r['moves']:4d} "
+        print(f"  {r['scenario']:28s} {r['policy']:10s} "
+              f"ratio={_ratio(r['mean_moved_ratio'])} "
+              f"ratio_w={_ratio(r['mean_moved_ratio_weighted'])} "
+              f"moves={r['moves']:4d} "
+              f"migs={r['migrations_completed']:3d}/{r['migrations_started']:3d} "
+              f"abort={r['migrations_aborted']:2d} "
               f"gain={r['total_gain']:8.3f} wall={r['wall_s']:.2f}s{flag}")
     return ok
+
+
+def run_smoke(seed: int) -> int:
+    from benchmarks.bench_fleet import smoke
+
+    rows = smoke(seed=seed)
+    bad = 0
+    for r in rows:
+        ok = r["admitted"] > 0 and r["ticks"] > 0
+        bad |= 0 if ok else 1
+        print(f"  {r['scenario']:28s} {r['policy']:10s} "
+              f"admitted={r['admitted']} ticks={r['ticks']} "
+              f"migs={r['migrations_completed']} "
+              f"ratio={_ratio(r['mean_moved_ratio'])} "
+              f"[{'OK' if ok else 'FAIL'}]")
+    return bad
 
 
 def run_csv(seed: int = 0) -> int:
@@ -70,10 +97,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", action="store_true",
                     help="run the fleet sweep and write BENCH_fleet.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI sanity slice of the fleet sweep")
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="output path for --json (default: BENCH_fleet.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.smoke:
+        sys.exit(run_smoke(args.seed))
     sys.exit(run_json(args.out, args.seed) if args.json else run_csv(args.seed))
 
 

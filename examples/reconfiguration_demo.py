@@ -61,9 +61,10 @@ def main():
 
     # ---- 3. reconfiguration trial (eq. 1) ----
     res = sched.recon.plan(sched.engine.recent(24))
+    mmr = res.mean_moved_ratio   # None when the trial moves nothing
     print(f"\nreconfig trial: S {res.s_before:.3f} → {res.s_after:.3f} "
           f"(gain {res.gain:.3f}), {res.n_moved} moves, "
-          f"mean X+Y of moved = {res.mean_moved_ratio:.4f}")
+          f"mean X+Y of moved = {f'{mmr:.4f}' if mmr is not None else 'n/a'}")
     for mv in res.moves:
         print(f"  move job {mv.req_id}: {mv.old.node.site_id} → "
               f"{mv.new.node.site_id}  (ratio {mv.ratio:.4f})")

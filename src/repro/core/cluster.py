@@ -128,13 +128,13 @@ class FleetScheduler:
                  window: int = 32, move_penalty: float = 0.01,
                  policy: str = "milp", state_mb: float = 64.0):
         # Imported here: repro.fleet builds on repro.core (not the reverse).
-        from repro.fleet.executor import MigrationExecutor
+        from repro.fleet.executor import InstantExecutor
         from repro.fleet.policies import get_policy
 
         self.engine = PlacementEngine(topo, all_sites=True)
         self.recon = Reconfigurator(self.engine, move_penalty=move_penalty)
         self.policy = get_policy(policy, move_penalty=move_penalty)
-        self.executor = MigrationExecutor(state_mb=state_mb)
+        self.executor = InstantExecutor(state_mb=state_mb)
         self.reconfig_every = reconfig_every
         self.window = window
         self.admitted = 0

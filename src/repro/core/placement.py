@@ -31,6 +31,10 @@ from .solver import solve_milp
 from .topology import Topology
 
 
+STATE_PLACED = "placed"
+STATE_MIGRATING = "migrating"
+
+
 @dataclasses.dataclass
 class PlacedApp:
     """A running deployment and the metrics it was admitted with."""
@@ -40,6 +44,7 @@ class PlacedApp:
     # Most recent metrics (updated when the app is migrated).
     response_s: float
     price: float
+    state: str = STATE_PLACED
 
     @property
     def req_id(self) -> int:
@@ -64,6 +69,13 @@ class PlacementEngine:
         self.placement_order: List[int] = []   # req_ids in admission order
         self.rejected: List[PlacementRequest] = []
         self.offline_nodes: Set[str] = set()   # failed nodes (fleet runtime)
+        # In-flight migrations (fleet runtime): destination reservation per
+        # migrating app.  While a pre-copy transfer runs, BOTH the source
+        # candidate and the destination reservation are occupied (the
+        # double-booking window); a suspended app (stop-and-copy) holds only
+        # its destination reservation once the transfer starts.
+        self.in_flight: Dict[int, Candidate] = {}
+        self.suspended: Set[int] = set()       # source occupancy released
 
     # ----------------------------------------------------------- node state
     def set_node_online(self, node_id: str, online: bool) -> None:
@@ -78,9 +90,17 @@ class PlacementEngine:
             self.offline_nodes.add(node_id)
 
     def apps_on_node(self, node_id: str) -> List[int]:
-        """req_ids currently hosted on ``node_id`` (admission order)."""
+        """req_ids whose *source* copy lives on ``node_id`` (admission
+        order).  Suspended apps hold no source copy; in-flight destination
+        reservations are tracked separately (`migrations_to_node`)."""
         return [r for r in self.placement_order
-                if self.placed[r].candidate.node.node_id == node_id]
+                if self.placed[r].candidate.node.node_id == node_id
+                and r not in self.suspended]
+
+    def migrations_to_node(self, node_id: str) -> List[int]:
+        """req_ids with an in-flight destination reservation on ``node_id``."""
+        return sorted(r for r, cand in self.in_flight.items()
+                      if cand.node.node_id == node_id)
 
     # ------------------------------------------------------------ capacity
     def node_remaining(self, node_id: str) -> float:
@@ -165,6 +185,91 @@ class PlacementEngine:
         self.placement_order.append(request.req_id)
         return app
 
+    # ------------------------------------------- migration (time-extended)
+    def is_migrating(self, req_id: int) -> bool:
+        """True while the app has an in-flight transfer, is suspended, or
+        is marked MIGRATING with a move still waiting for capacity."""
+        return (req_id in self.in_flight or req_id in self.suspended
+                or self.placed[req_id].state == STATE_MIGRATING)
+
+    def begin_move(self, req_id: int, new_cand: Candidate) -> bool:
+        """Reserve ``new_cand`` for an in-flight migration of ``req_id``.
+
+        Pre-copy semantics: the source stays occupied, so over the transfer
+        window the app is double-booked.  Returns False (no state change)
+        when the destination does not currently fit."""
+        app = self.placed[req_id]
+        if req_id in self.in_flight:
+            raise ValueError(f"app {req_id} already has an in-flight move")
+        if not self.fits(app.request, new_cand):
+            return False
+        self._occupy(app.request, new_cand, +1.0)
+        self.in_flight[req_id] = new_cand
+        app.state = STATE_MIGRATING
+        return True
+
+    def commit_move(self, req_id: int) -> PlacedApp:
+        """Finalize an in-flight migration: the destination reservation
+        becomes the live placement and the source copy (if any) is freed."""
+        app = self.placed[req_id]
+        new_cand = self.in_flight.pop(req_id)
+        if req_id in self.suspended:
+            self.suspended.discard(req_id)   # source already released
+        else:
+            self._occupy(app.request, app.candidate, -1.0)
+        app.candidate = new_cand
+        app.response_s = new_cand.response_s
+        app.price = new_cand.price
+        app.state = STATE_PLACED
+        return app
+
+    def abort_move(self, req_id: int) -> PlacedApp:
+        """Roll back an in-flight migration: drop the destination
+        reservation.  A non-suspended app keeps running on its source; a
+        suspended app is left homeless (the caller must re-place or drop
+        it — it stays ``suspended`` until then)."""
+        app = self.placed[req_id]
+        new_cand = self.in_flight.pop(req_id)
+        self._occupy(app.request, new_cand, -1.0)
+        if req_id not in self.suspended:
+            app.state = STATE_PLACED
+        return app
+
+    def suspend(self, req_id: int) -> PlacedApp:
+        """Release ``req_id``'s source occupancy (stop-and-copy: the app is
+        paused and its resources freed while it waits for / runs its
+        transfer).  Used to break migration cycles."""
+        app = self.placed[req_id]
+        if req_id in self.suspended:
+            raise ValueError(f"app {req_id} already suspended")
+        self._occupy(app.request, app.candidate, -1.0)
+        self.suspended.add(req_id)
+        app.state = STATE_MIGRATING
+        return app
+
+    def resume_at_source(self, req_id: int) -> bool:
+        """Try to un-suspend ``req_id`` back onto its source candidate.
+        Returns False when the freed capacity has been taken meanwhile."""
+        app = self.placed[req_id]
+        if not self.fits(app.request, app.candidate):
+            return False
+        self._occupy(app.request, app.candidate, +1.0)
+        self.suspended.discard(req_id)
+        app.state = STATE_PLACED
+        return True
+
+    def drop(self, req_id: int) -> None:
+        """Remove a homeless suspended app (rollback found no capacity)."""
+        if req_id not in self.suspended:
+            raise ValueError(f"drop() is only for suspended apps; use release()")
+        app = self.placed.pop(req_id)
+        self.suspended.discard(req_id)
+        dest = self.in_flight.pop(req_id, None)
+        if dest is not None:
+            self._occupy(app.request, dest, -1.0)
+        self.placement_order.remove(req_id)
+        self.rejected.append(app.request)
+
     # ----------------------------------------------------------- migration
     def apply_move(self, req_id: int, new_cand: Candidate) -> PlacedApp:
         """Re-home a running app (capacity-checked; used by migration plans)."""
@@ -186,7 +291,12 @@ class PlacementEngine:
 
     def release(self, req_id: int) -> None:
         app = self.placed.pop(req_id)
-        self._occupy(app.request, app.candidate, -1.0)
+        if req_id not in self.suspended:
+            self._occupy(app.request, app.candidate, -1.0)
+        self.suspended.discard(req_id)
+        dest = self.in_flight.pop(req_id, None)
+        if dest is not None:
+            self._occupy(app.request, dest, -1.0)
         self.placement_order.remove(req_id)
 
     def free_capacity_excluding(
@@ -213,13 +323,26 @@ class PlacementEngine:
         """The ``n`` most recently placed req_ids (reconfiguration window)."""
         return list(self.placement_order[-n:])
 
+    def recent_stable(self, n: int) -> List[int]:
+        """The ``n`` most recently placed req_ids that are NOT mid-migration
+        — the window reconfiguration policies may plan over (in-flight apps
+        are pinned until their transfer completes or aborts)."""
+        stable = [r for r in self.placement_order if not self.is_migrating(r)]
+        return stable[-n:]
+
     def occupancy_invariants_ok(self) -> bool:
         """True iff recomputing occupancy from the registry matches state."""
         node = {n: 0.0 for n in self.topo.nodes}
         link = {l: 0.0 for l in self.topo.links}
-        for app in self.placed.values():
-            node[app.candidate.node.node_id] += app.request.app.device_usage
-            for l in app.candidate.links:
+        for req_id, app in self.placed.items():
+            if req_id not in self.suspended:
+                node[app.candidate.node.node_id] += app.request.app.device_usage
+                for l in app.candidate.links:
+                    link[l.link_id] += app.request.app.bandwidth_mbps
+        for req_id, cand in self.in_flight.items():
+            app = self.placed[req_id]
+            node[cand.node.node_id] += app.request.app.device_usage
+            for l in cand.links:
                 link[l.link_id] += app.request.app.bandwidth_mbps
         ok_n = all(abs(node[k] - self.node_used[k]) < 1e-6 for k in node)
         ok_l = all(abs(link[k] - self.link_used[k]) < 1e-6 for k in link)

@@ -22,10 +22,19 @@ import dataclasses
 import time
 from typing import List, Optional, Sequence
 
+from typing import Dict, Mapping
+
 from .lp import AppVars, build_joint_milp
 from .migration import MigrationStep, Move, plan_and_apply
 from .placement import PlacementEngine
-from .satisfaction import AppSatisfaction, mean_moved_ratio, window_sum
+from .satisfaction import (
+    AppSatisfaction,
+    mean_moved_ratio,
+    normalize_weights,
+    weighted_mean_moved_ratio,
+    weighted_window_sum,
+    window_sum,
+)
 from .solver import MilpResult, solve_milp
 
 
@@ -34,12 +43,13 @@ class ReconfigResult:
     window: List[int]
     moves: List[Move]
     satisfaction: List[AppSatisfaction]  # for ALL window apps under the plan
-    s_before: float
+    s_before: float                      # traffic-weighted when weights set
     s_after: float
     accepted: bool
     solver: Optional[MilpResult]
     plan_time_s: float
     migration_steps: List[MigrationStep] = dataclasses.field(default_factory=list)
+    weights: Optional[Dict[int, float]] = None  # normalized (mean 1) or None
 
     @property
     def n_moved(self) -> int:
@@ -50,8 +60,14 @@ class ReconfigResult:
         return self.s_before - self.s_after
 
     @property
-    def mean_moved_ratio(self) -> float:
+    def mean_moved_ratio(self) -> Optional[float]:
         return mean_moved_ratio(self.satisfaction)
+
+    @property
+    def mean_moved_ratio_weighted(self) -> Optional[float]:
+        if self.weights is None:
+            return self.mean_moved_ratio
+        return weighted_mean_moved_ratio(self.satisfaction, self.weights)
 
 
 class Reconfigurator:
@@ -72,10 +88,15 @@ class Reconfigurator:
         self.time_limit_s = time_limit_s
 
     # -------------------------------------------------------------- window
-    def _window_app_vars(self, window: Sequence[int]) -> List[AppVars]:
+    def _window_app_vars(
+        self, window: Sequence[int], weights: Optional[Dict[int, float]] = None
+    ) -> List[AppVars]:
         out: List[AppVars] = []
         for req_id in window:
             placed = self.engine.placed[req_id]
+            # Traffic weighting folds into the MILP coefficients by scaling
+            # the baselines: w·(R_a/R_b + P_a/P_b) == R_a/(R_b/w) + P_a/(P_b/w).
+            w = weights.get(req_id, 1.0) if weights else 1.0
             # The current placement is always a candidate (it satisfied the
             # bounds at admission and its node is online), so the MILP can
             # never be infeasible.
@@ -85,8 +106,8 @@ class Reconfigurator:
                     request=placed.request,
                     candidates=cands,
                     current_node_id=placed.candidate.node.node_id,
-                    r_before=placed.response_s,
-                    p_before=placed.price,
+                    r_before=placed.response_s / w,
+                    p_before=placed.price / w,
                 )
             )
         return out
@@ -96,12 +117,19 @@ class Reconfigurator:
         return self.engine.free_capacity_excluding(window)
 
     # ---------------------------------------------------------------- plan
-    def plan(self, window: Sequence[int]) -> ReconfigResult:
+    def plan(
+        self,
+        window: Sequence[int],
+        weights: Optional[Mapping[int, float]] = None,
+    ) -> ReconfigResult:
         """Trial calculation (試行計算): solve eq. (1)–(5) over the window
-        without touching the fleet."""
+        without touching the fleet.  ``weights`` (per-app traffic weights,
+        normalized internally to mean 1) bias the objective toward
+        heavily-loaded apps."""
         t0 = time.perf_counter()
         window = list(window)
-        app_vars = self._window_app_vars(window)
+        norm = normalize_weights(window, weights) if weights is not None else None
+        app_vars = self._window_app_vars(window, norm)
         node_cap, link_cap = self._free_capacity_excluding(window)
         problem, index = build_joint_milp(
             app_vars, node_cap, link_cap, move_penalty=self.move_penalty
@@ -117,7 +145,8 @@ class Reconfigurator:
                 for r in window
             ]
             return ReconfigResult(window, [], sat, 2.0 * len(window), 2.0 * len(window),
-                                  False, res, time.perf_counter() - t0)
+                                  False, res, time.perf_counter() - t0,
+                                  weights=norm)
 
         choices = index.decode(res.x)
         moves: List[Move] = []
@@ -136,11 +165,11 @@ class Reconfigurator:
                 ratio = cand.response_s / placed.response_s + cand.price / placed.price
                 moves.append(Move(av.request.req_id, placed.candidate, cand, ratio))
         s_before = 2.0 * len(window)         # ratio of the do-nothing plan
-        s_after = window_sum(sat)
+        s_after = weighted_window_sum(sat, norm) if norm else window_sum(sat)
         accepted = (s_before - s_after) > self.accept_threshold
         return ReconfigResult(
             window, moves, sat, s_before, s_after, accepted, res,
-            time.perf_counter() - t0,
+            time.perf_counter() - t0, weights=norm,
         )
 
     # --------------------------------------------------------------- apply

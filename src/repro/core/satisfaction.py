@@ -1,14 +1,19 @@
-"""User-satisfaction metric of paper eq. (1).
+"""User-satisfaction metric of paper eq. (1), plus traffic weighting.
 
 Per app k the paper scores a reconfiguration by
 ``X + Y = R_after/R_before + P_after/P_before`` — 2.0 means "unchanged";
 lower is better.  The reconfiguration objective minimizes the window sum.
+
+The fleet runtime extends eq. (1) with *traffic weights*: each app's term
+is scaled by its current request rate (normalized to mean 1 over the
+window, so the do-nothing baseline stays ``2·|window|``), making
+heavily-loaded apps dominate the objective.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,9 +39,51 @@ def window_sum(entries: Sequence[AppSatisfaction]) -> float:
     return sum(e.ratio for e in entries)
 
 
-def mean_moved_ratio(entries: Sequence[AppSatisfaction]) -> float:
-    """Paper fig. 5(b): mean X+Y over apps that actually moved."""
+def mean_moved_ratio(entries: Sequence[AppSatisfaction]) -> Optional[float]:
+    """Paper fig. 5(b): mean X+Y over apps that actually moved.
+
+    Returns None when nothing moved — aggregators must skip it, not fold a
+    sentinel into their means."""
     moved = [e for e in entries if (e.r_after, e.p_after) != (e.r_before, e.p_before)]
     if not moved:
-        return 2.0
+        return None
     return sum(e.ratio for e in moved) / len(moved)
+
+
+def normalize_weights(
+    window: Sequence[int], weights: Optional[Mapping[int, float]]
+) -> Dict[int, float]:
+    """Per-app traffic weights scaled to mean 1 over ``window``.  Missing
+    entries count as 1.0; non-positive weights are clamped to a tiny
+    positive value (a zero-rate app still keeps a vanishing stake in the
+    objective rather than a neutral one).  With the mean-1 convention
+    ``Σ_k w_k·2 == 2·|window|``: the do-nothing baseline of the weighted
+    objective equals the unweighted one."""
+    raw = {r: max(float(weights.get(r, 1.0)), 1e-9) if weights else 1.0
+           for r in window}
+    total = sum(raw.values())
+    if not window or total <= 0.0:
+        return {r: 1.0 for r in window}
+    scale = len(window) / total
+    return {r: w * scale for r, w in raw.items()}
+
+
+def weighted_window_sum(
+    entries: Sequence[AppSatisfaction], weights: Mapping[int, float]
+) -> float:
+    """Traffic-weighted S of eq. (1): Σ_k w_k · (X_k + Y_k)."""
+    return sum(weights.get(e.req_id, 1.0) * e.ratio for e in entries)
+
+
+def weighted_mean_moved_ratio(
+    entries: Sequence[AppSatisfaction], weights: Mapping[int, float]
+) -> Optional[float]:
+    """Traffic-weighted fig. 5(b): Σ w·ratio / Σ w over moved apps, or None
+    when nothing moved."""
+    moved = [e for e in entries if (e.r_after, e.p_after) != (e.r_before, e.p_before)]
+    if not moved:
+        return None
+    wsum = sum(weights.get(e.req_id, 1.0) for e in moved)
+    if wsum <= 0.0:
+        return None
+    return sum(weights.get(e.req_id, 1.0) * e.ratio for e in moved) / wsum

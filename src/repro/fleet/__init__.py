@@ -1,13 +1,21 @@
 """Continuous-operation fleet runtime (the paper's reconfigurator as a
-service over a changing fleet).
+service over a changing fleet, with load-bearing simulated time).
 
-  events    — arrival/departure/drift/failure event model + deterministic queue
-  runtime   — discrete-event loop over a `PlacementEngine`
-  policies  — one `ReconfigPolicy` interface over MILP / greedy / hillclimb / GA
-  executor  — bandwidth-aware migration scheduling (link-overlap aware)
-  scenarios — paper-steady-state, diurnal, flash-crowd, node-outage,
+  events    — arrival/departure/rate/failure/migration event model,
+              per-app `RateCurve` request streams, deterministic queue
+  runtime   — discrete-event loop over a `PlacementEngine`; apps gain a
+              MIGRATING state while their transfer is in flight
+  policies  — one `ReconfigPolicy` interface over MILP / greedy /
+              hillclimb / GA / adaptive (online MILP↔greedy switching),
+              all traffic-weight aware
+  executor  — link-capacity reservation ledger: transfers occupy fair-share
+              link bandwidth over sim time, double-book source+destination,
+              and roll back on destination failure
+  scenarios — paper-steady-state, diurnal-streams, flash-crowd(+during-
+              reconfig), node-outage, site-outage, flapping-node,
               hetero-expansion
-  telemetry — per-tick time series + deterministic fingerprints
+  telemetry — per-tick + per-migration time series, deterministic
+              fingerprints, NaN-safe satisfaction aggregation
 """
 
 from .events import (  # noqa: F401
@@ -16,13 +24,24 @@ from .events import (  # noqa: F401
     DemandDrift,
     Event,
     EventQueue,
+    MigrationComplete,
+    MigrationStart,
     NodeFailure,
     NodeRecovery,
+    RateCurve,
     ReconfigTick,
+    RequestRateUpdate,
 )
-from .executor import MigrationExecutor, MigrationSchedule, ScheduledMigration  # noqa: F401
+from .executor import (  # noqa: F401
+    InstantExecutor,
+    MigrationExecutor,
+    MigrationSchedule,
+    ScheduledMigration,
+    Transfer,
+)
 from .policies import (  # noqa: F401
     POLICIES,
+    AdaptivePolicy,
     GaPolicy,
     GreedyPolicy,
     HillClimbPolicy,
@@ -33,4 +52,4 @@ from .policies import (  # noqa: F401
 )
 from .runtime import FleetRuntime, RuntimeConfig  # noqa: F401
 from .scenarios import SCENARIOS, ScenarioSpec, build_scenario  # noqa: F401
-from .telemetry import Telemetry, TickRecord  # noqa: F401
+from .telemetry import MigrationRecord, Telemetry, TickRecord  # noqa: F401

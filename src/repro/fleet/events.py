@@ -2,21 +2,51 @@
 
 The paper evaluates one reconfiguration over a frozen population (§4); a
 real fleet never freezes: apps arrive and leave, demand drifts, nodes fail
-and recover.  This module defines the discrete events that drive the
-simulator (`fleet.runtime`) and a deterministic priority queue over them.
+and recover — and, since this refactor, *migrations take time*: accepted
+moves emit `MigrationStart` / `MigrationComplete` events back into the
+queue, and per-app request streams (`RateCurve`) are sampled by periodic
+`RequestRateUpdate` events instead of step `DemandDrift` rescaling.
 
 Determinism contract: event order is a total order on ``(time, seq)`` where
 ``seq`` is the insertion counter — two runs that push the same events in the
 same order process them identically, which is what the replay tests assert.
+Events the runtime self-schedules (departures, migration completions, rate
+samples) inherit determinism from the deterministic dispatch order.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Iterable, Iterator, List, Optional, Tuple
 
 from repro.core.apps import PlacementRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class RateCurve:
+    """Per-app request-rate curve: diurnal sinusoid × burst segments.
+
+    ``rate(t)`` is a dimensionless load multiplier applied to the app's
+    admission-time bandwidth/data footprint; it also serves as the app's
+    traffic weight in the reconfiguration objective."""
+
+    base: float = 1.0
+    amplitude: float = 0.0      # diurnal swing as a fraction of base (0..1)
+    period_s: float = 4_000.0
+    phase: float = 0.0          # radians
+    bursts: Tuple[Tuple[float, float, float], ...] = ()  # (t0_s, dur_s, mult)
+
+    def rate(self, t_s: float) -> float:
+        r = self.base
+        if self.amplitude:
+            r *= 1.0 + self.amplitude * math.sin(
+                2.0 * math.pi * t_s / self.period_s + self.phase)
+        for t0, dur, mult in self.bursts:
+            if t0 <= t_s < t0 + dur:
+                r *= mult
+        return max(r, 1e-3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,10 +57,14 @@ class Event:
 @dataclasses.dataclass(frozen=True)
 class AppArrival(Event):
     """A user submits ``request``; if admitted and ``lifetime_s`` is set, a
-    matching `AppDeparture` is self-scheduled by the runtime."""
+    matching `AppDeparture` is self-scheduled by the runtime.  An optional
+    ``rate_curve`` turns the app into a request *stream*: its footprint is
+    admitted at ``curve.rate(t_arrival)`` and resampled by every
+    `RequestRateUpdate`."""
 
     request: PlacementRequest
     lifetime_s: Optional[float] = None
+    rate_curve: Optional[RateCurve] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,11 +74,12 @@ class AppDeparture(Event):
 
 @dataclasses.dataclass(frozen=True)
 class DemandDrift(Event):
-    """Demand of one running app changes: its bandwidth/data footprint is
+    """Legacy step rescaling: one running app's bandwidth/data footprint is
     multiplied by ``scale`` and the app is re-admitted under its original
     bounds.  ``selector`` picks the victim deterministically (index into the
-    alive list modulo its length) so generators need not know which apps are
-    still alive at fire time."""
+    alive list modulo its length).  Superseded by `RateCurve` +
+    `RequestRateUpdate` for continuous request streams; kept for targeted
+    shock tests."""
 
     selector: int
     scale: float
@@ -64,6 +99,37 @@ class NodeRecovery(Event):
 class ReconfigTick(Event):
     """Forced reconfiguration (scenarios use it for time-driven ticks; the
     runtime also self-triggers every ``reconfig_every`` admissions)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationStart(Event):
+    """Marker emitted by the executor when a transfer actually begins
+    occupying link bandwidth (may be later than the tick that planned it,
+    if the move had to wait for capacity)."""
+
+    req_id: int
+    mode: str        # "precopy" | "stop_and_copy"
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationComplete(Event):
+    """Self-scheduled by the executor at the transfer's projected finish.
+    ``gen`` guards against staleness: whenever link contention changes, the
+    executor re-projects every active transfer under a fresh generation and
+    completions carrying an old ``gen`` are ignored."""
+
+    req_id: int
+    gen: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRateUpdate(Event):
+    """Periodic request-stream sampler: re-evaluates every alive app's
+    `RateCurve` at the current time and rescales its footprint.  Self-
+    reschedules every ``every_s`` until ``horizon_s``."""
+
+    every_s: float
+    horizon_s: float
 
 
 class EventQueue:

@@ -1,31 +1,338 @@
-"""Bandwidth-aware migration executor.
+"""Link-capacity reservation ledger for in-flight migrations.
 
 An accepted reconfiguration plan is a *set* of moves; executing it costs
-real network time.  The executor:
+real network time, and since this refactor that time is simulated rather
+than merely reported.  The `MigrationExecutor` is a ledger of active
+transfers over the topology's links:
 
-1. orders + applies the moves through the live-migration planner
-   (`core.migration.plan_and_apply` — pre-copy when the destination fits,
-   stop-and-copy to break swap cycles), mutating the engine; then
-2. charges each move its transfer time — state size over the slowest link
-   on its path — on a per-link timeline: moves whose paths share a link
-   serialize on it, moves with disjoint link sets overlap fully.
+* an accepted move starts as a **pre-copy** transfer when its destination
+  currently fits — the source stays occupied until the transfer finishes,
+  so the app is *double-booked* over the transfer window;
+* moves whose destination is full wait; whenever a transfer completes, the
+  freed capacity is offered to the waiting queue.  A stalled cycle (e.g.
+  two apps swapping full nodes) is broken by **suspending** the best
+  waiting app (stop-and-copy: its source occupancy is released and the app
+  takes downtime for the full transfer);
+* concurrent transfers sharing a link get a **fair share** of its
+  bandwidth — each transfer's rate is ``min over its links of
+  bandwidth / n_active_on_link`` — so contention slows transfers down
+  instead of pre-serializing them.  Whenever the active set changes, every
+  transfer's remaining bytes are re-projected and a fresh
+  `MigrationComplete` generation is scheduled; stale completions are
+  ignored;
+* a **destination node failure** aborts the transfers headed there: a
+  pre-copy move rolls back to its source, a suspended app must be
+  re-placed by the runtime (or is lost).
 
-The resulting schedule (start/end per move, makespan, overlap factor) is
-what the runtime reports as migration cost per tick; makespan is the
-fleet-visible duration of the reconfiguration, downtime the user-visible
-pause per app.
+The old executor's instantaneous semantics survive as `InstantExecutor`
+for the synchronous `FleetScheduler` path (`core.cluster`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.migration import MigrationStep, plan_and_apply
-from repro.core.placement import PlacementEngine
+from repro.core.migration import MigrationStep, Move, plan_and_apply
+from repro.core.placement import (
+    STATE_MIGRATING,
+    STATE_PLACED,
+    PlacementEngine,
+)
 from repro.core.reconfig import ReconfigResult
 
+from .events import EventQueue, MigrationComplete, MigrationStart
+from .telemetry import MigrationRecord
 
+MODE_PRECOPY = "precopy"
+MODE_STOP_AND_COPY = "stop_and_copy"
+
+
+# --------------------------------------------------------------- transfers
+@dataclasses.dataclass
+class Transfer:
+    """One in-flight state copy occupying link bandwidth over sim time."""
+
+    move: Move
+    mode: str                       # MODE_PRECOPY | MODE_STOP_AND_COPY
+    links: Tuple[str, ...]          # link ids the copy traverses
+    mbits_remaining: float
+    started_s: float
+    last_update_s: float
+    rate_mbps: float = 0.0
+    gen: int = -1                   # matches the live MigrationComplete
+
+    @property
+    def req_id(self) -> int:
+        return self.move.req_id
+
+
+def _transfer_links(move: Move) -> Tuple[str, ...]:
+    """Links the copy occupies: old path (drain) ∪ new path (fill)."""
+    ids = {l.link_id for l in move.old.links}
+    ids |= {l.link_id for l in move.new.links}
+    return tuple(sorted(ids))
+
+
+class MigrationExecutor:
+    """Reservation ledger driving accepted plans through simulated time.
+
+    The runtime owns the event loop; the executor mutates the engine's
+    migration state (`begin_move` / `commit_move` / `abort_move` /
+    `suspend`) and schedules its own `MigrationComplete` events.
+    """
+
+    def __init__(self, state_mb: float = 64.0):
+        self.state_mb = state_mb
+        self.active: Dict[int, Transfer] = {}
+        self.waiting: List[Move] = []        # accepted, not yet transferring
+        self.records: List[MigrationRecord] = []
+        self.moves_dropped = 0               # accepted moves never executed
+        self._gen = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_inflight(self) -> int:
+        """Apps mid-migration: transferring or suspended-waiting."""
+        return len(self.active) + len(self.waiting)
+
+    def link_shares(self) -> Dict[str, int]:
+        """Active transfer count per link (the contention the ledger bills)."""
+        counts: Dict[str, int] = {}
+        for tr in self.active.values():
+            for lid in tr.links:
+                counts[lid] = counts.get(lid, 0) + 1
+        return counts
+
+    # ------------------------------------------------------------ plan API
+    def begin(
+        self,
+        engine: PlacementEngine,
+        result: ReconfigResult,
+        now: float,
+        events: EventQueue,
+    ) -> int:
+        """Admit an accepted plan's moves into the ledger; returns how many
+        transfers started immediately (the rest wait for capacity)."""
+        if not result.accepted or not result.moves:
+            return 0
+        self._advance(now)   # bank progress before contention changes rates
+        before = len(self.active)
+        for mv in sorted(result.moves, key=lambda m: (m.ratio, m.req_id)):
+            if engine.is_migrating(mv.req_id):   # defensive; windows skip these
+                self.moves_dropped += 1
+                continue
+            self.waiting.append(mv)
+            engine.placed[mv.req_id].state = STATE_MIGRATING
+        self._pump(engine, now, events)
+        return len(self.active) - before
+
+    # --------------------------------------------------------- event hooks
+    def on_complete(
+        self,
+        engine: PlacementEngine,
+        req_id: int,
+        gen: int,
+        now: float,
+        events: EventQueue,
+    ) -> Optional[MigrationRecord]:
+        """Handle a `MigrationComplete`; returns the record, or None when
+        the event is stale (superseded by a contention re-projection)."""
+        tr = self.active.get(req_id)
+        if tr is None or tr.gen != gen:
+            return None
+        self._advance(now)
+        del self.active[req_id]
+        engine.commit_move(req_id)
+        duration = now - tr.started_s
+        # Pre-copy pauses for one dirty-page round (~5 % of the copy);
+        # stop-and-copy pauses for the whole transfer.
+        downtime = 0.05 * duration if tr.mode == MODE_PRECOPY else duration
+        rec = MigrationRecord(req_id, tr.mode, "completed",
+                              tr.started_s, now, downtime)
+        self.records.append(rec)
+        self._reschedule(engine, now, events)
+        self._pump(engine, now, events)
+        return rec
+
+    def on_node_failure(
+        self,
+        engine: PlacementEngine,
+        node_id: str,
+        now: float,
+        events: EventQueue,
+    ) -> Tuple[List[int], List[int]]:
+        """Abort migrations touching a failed node.
+
+        Returns ``(rolled_back, homeless)``: apps whose pre-copy transfer
+        to/through the node was aborted (they keep running on their
+        source), and suspended apps whose destination died mid-copy (the
+        runtime must re-place or drop them)."""
+        self._advance(now)
+        rolled_back: List[int] = []
+        homeless: List[int] = []
+        for req_id in sorted(self.active):
+            tr = self.active[req_id]
+            dest = tr.move.new.node.node_id
+            src = tr.move.old.node.node_id
+            if dest != node_id and src != node_id:
+                continue
+            del self.active[req_id]
+            engine.abort_move(req_id)
+            # A suspended (stop-and-copy) app served nothing for the whole
+            # transfer; a pre-copy app kept running on its source.
+            down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
+            self.records.append(MigrationRecord(
+                req_id, tr.mode, "aborted", tr.started_s, now, down))
+            if req_id in engine.suspended:
+                homeless.append(req_id)
+            elif src != node_id:
+                rolled_back.append(req_id)
+            # src == node_id: the app rolls back onto a dead source — the
+            # runtime's normal eviction pass (`apps_on_node`) picks it up.
+        for mv in list(self.waiting):
+            if node_id in (mv.new.node.node_id, mv.old.node.node_id):
+                self.waiting.remove(mv)
+                self._resolve_waiting_drop(engine, mv, homeless)
+        self._reschedule(engine, now, events)
+        self._pump(engine, now, events)
+        return rolled_back, homeless
+
+    def cancel(self, engine: PlacementEngine, req_id: int, now: float,
+               events: EventQueue) -> bool:
+        """Withdraw ``req_id`` from the ledger (departure mid-migration).
+        The caller releases the engine side."""
+        tr = self.active.pop(req_id, None)
+        touched = tr is not None
+        if tr is not None:
+            self._advance(now)
+            down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
+            self.records.append(MigrationRecord(
+                req_id, tr.mode, "cancelled", tr.started_s, now, down))
+        for mv in list(self.waiting):
+            if mv.req_id == req_id:
+                self.waiting.remove(mv)
+                self.moves_dropped += 1   # accepted but never transferred
+                touched = True
+        if tr is not None:
+            self._reschedule(engine, now, events)
+            self._pump(engine, now, events)
+        return touched
+
+    def on_capacity_freed(self, engine: PlacementEngine, now: float,
+                          events: EventQueue) -> None:
+        """Offer freed capacity (departures, recoveries) to waiting moves."""
+        if self.waiting:
+            self._advance(now)
+            self._pump(engine, now, events)
+
+    # ------------------------------------------------------------ internals
+    def _resolve_waiting_drop(self, engine: PlacementEngine, mv: Move,
+                              homeless: List[int]) -> None:
+        """A waiting move was dropped; restore its app's state."""
+        self.moves_dropped += 1
+        if mv.req_id not in engine.placed:
+            return
+        if mv.req_id in engine.suspended:
+            if not engine.resume_at_source(mv.req_id):
+                homeless.append(mv.req_id)
+        else:
+            engine.placed[mv.req_id].state = STATE_PLACED
+
+    def _advance(self, now: float) -> None:
+        """Progress every active transfer to ``now`` at its current rate."""
+        for tr in self.active.values():
+            dt = now - tr.last_update_s
+            if dt > 0.0:
+                tr.mbits_remaining = max(tr.mbits_remaining - tr.rate_mbps * dt, 0.0)
+            tr.last_update_s = now
+
+    def _reschedule(self, engine: PlacementEngine, now: float,
+                    events: EventQueue) -> None:
+        """Recompute fair-share rates and re-project completions under a
+        fresh generation (stale `MigrationComplete`s become no-ops)."""
+        counts = self.link_shares()
+        links = engine.topo.links
+        for req_id in sorted(self.active):
+            tr = self.active[req_id]
+            tr.rate_mbps = min(
+                (links[lid].bandwidth_mbps / counts[lid] for lid in tr.links),
+                default=100.0,
+            )
+            self._gen += 1
+            tr.gen = self._gen
+            eta = now + tr.mbits_remaining / max(tr.rate_mbps, 1e-9)
+            events.push(eta, MigrationComplete(req_id, tr.gen))
+
+    def _start(self, engine: PlacementEngine, mv: Move, mode: str, now: float,
+               events: EventQueue) -> None:
+        tr = Transfer(
+            move=mv,
+            mode=mode,
+            links=_transfer_links(mv),
+            mbits_remaining=self.state_mb * 8.0,
+            started_s=now,
+            last_update_s=now,
+        )
+        self.active[mv.req_id] = tr
+        events.push(now, MigrationStart(mv.req_id, mode))
+
+    def _stale(self, engine: PlacementEngine, mv: Move) -> bool:
+        """A waiting move is stale once its app departed or was re-homed
+        (failure eviction / drift readmission) away from the move's source."""
+        placed = engine.placed.get(mv.req_id)
+        if placed is None:
+            return True
+        if mv.req_id in engine.suspended:
+            return False                     # suspended apps sit off-node
+        return placed.candidate.node.node_id != mv.old.node.node_id
+
+    def _pump(self, engine: PlacementEngine, now: float,
+              events: EventQueue) -> None:
+        """Start every waiting move that fits; break stalls by suspension.
+
+        Terminates: each iteration either starts a transfer, drops a stale
+        move, suspends one app (at most once per app), or exits."""
+        while True:
+            progressed = False
+            for mv in list(self.waiting):
+                if self._stale(engine, mv):
+                    self.waiting.remove(mv)
+                    self.moves_dropped += 1
+                    if mv.req_id in engine.placed and not engine.is_migrating(mv.req_id):
+                        engine.placed[mv.req_id].state = STATE_PLACED
+                    progressed = True
+                    continue
+                if engine.begin_move(mv.req_id, mv.new):
+                    mode = (MODE_STOP_AND_COPY if mv.req_id in engine.suspended
+                            else MODE_PRECOPY)
+                    self.waiting.remove(mv)
+                    self._start(engine, mv, mode, now, events)
+                    progressed = True
+            if progressed:
+                self._reschedule(engine, now, events)
+                continue
+            if self.active or not self.waiting:
+                return
+            # Stall with no transfer in flight: a capacity cycle.  Suspend
+            # the best not-yet-suspended waiting app (stop-and-copy) to
+            # break it; if everything is already suspended, the plan is
+            # unexecutable — roll the suspended apps back.
+            pending = [mv for mv in self.waiting
+                       if mv.req_id not in engine.suspended]
+            if pending:
+                best = min(pending, key=lambda m: (m.ratio, m.req_id))
+                engine.suspend(best.req_id)
+                continue
+            for mv in list(self.waiting):
+                self.waiting.remove(mv)
+                self.moves_dropped += 1
+                if mv.req_id in engine.placed and not engine.resume_at_source(mv.req_id):
+                    engine.drop(mv.req_id)
+            return
+
+
+# ----------------------------------------------------- legacy instant path
 @dataclasses.dataclass(frozen=True)
 class ScheduledMigration:
     step: MigrationStep
@@ -69,23 +376,18 @@ def _transfer_time(step: MigrationStep, state_mb: float) -> float:
     return state_mb * 8.0 / bw
 
 
-def _shared_links(step: MigrationStep) -> Sequence[str]:
-    """Links the transfer occupies: old path (drain) ∪ new path (fill)."""
-    ids = {l.link_id for l in step.move.old.links}
-    ids |= {l.link_id for l in step.move.new.links}
-    return sorted(ids)
-
-
-class MigrationExecutor:
-    """Executes accepted plans on an engine and prices them in time."""
+class InstantExecutor:
+    """Apply an accepted plan within the calling tick (the pre-refactor
+    semantics): moves mutate the engine immediately through the
+    live-migration planner and are *priced* on per-link serialization
+    timelines without occupying simulated time.  Used by the synchronous
+    `FleetScheduler` (`core.cluster`); the fleet runtime uses the
+    time-extended `MigrationExecutor`."""
 
     def __init__(self, state_mb: float = 64.0):
         self.state_mb = state_mb
 
     def execute(self, engine: PlacementEngine, result: ReconfigResult) -> MigrationSchedule:
-        """Apply ``result``'s moves (capacity-safely, in planner order) and
-        schedule their transfers on the link timelines.  Also records the
-        executed steps on ``result.migration_steps``."""
         if not result.accepted or not result.moves:
             return MigrationSchedule([], self.state_mb)
         steps = plan_and_apply(engine, result.moves, state_mb=self.state_mb)
@@ -93,7 +395,7 @@ class MigrationExecutor:
         link_free: Dict[str, float] = {}   # link_id → earliest idle time
         items: List[ScheduledMigration] = []
         for step in steps:
-            links = _shared_links(step)
+            links = _transfer_links(step.move)
             start = max((link_free.get(l, 0.0) for l in links), default=0.0)
             dur = _transfer_time(step, self.state_mb)
             for l in links:

@@ -4,13 +4,20 @@ The paper solves the window re-placement exactly (MILP, eqs. 1–5).  To
 benchmark that choice head-to-head, every optimizer in the repo is exposed
 through the same contract:
 
-    policy.plan(engine, window) -> ReconfigResult      # trial only
+    policy.plan(engine, window, weights=None) -> ReconfigResult  # trial only
 
 * ``milp``      — the paper's joint MILP (`core.reconfig.Reconfigurator`)
 * ``greedy``    — one pass, each app takes its best feasible candidate
 * ``hillclimb`` — steepest-descent single-app moves until a local optimum
 * ``ga``        — `core.ga.GeneticSearch` over per-app candidate genes
+* ``adaptive``  — MILP until the rolling solver latency blows a budget,
+                  then greedy until it recovers (online policy switching)
 * ``noop``      — never moves anything (control baseline)
+
+``weights`` are per-app traffic weights (requests/s multipliers from the
+request-stream model); they are normalized to mean 1 over the window so
+heavily-loaded apps dominate the objective while the do-nothing baseline
+stays ``2·|window|``.
 
 Contract (checked by the conformance tests): ``plan`` must NOT mutate the
 engine; the result's moves must start from the app's live candidate, must
@@ -24,7 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Type
+from collections import deque
+from typing import Dict, List, Mapping, Optional, Sequence, Type
 
 import numpy as np
 
@@ -33,7 +41,11 @@ from repro.core.ga import GaConfig, GeneticSearch
 from repro.core.migration import Move
 from repro.core.placement import PlacedApp, PlacementEngine
 from repro.core.reconfig import ReconfigResult, Reconfigurator
-from repro.core.satisfaction import AppSatisfaction, window_sum
+from repro.core.satisfaction import (
+    AppSatisfaction,
+    normalize_weights,
+    weighted_window_sum,
+)
 
 
 # ------------------------------------------------------------------ helpers
@@ -87,6 +99,7 @@ def _result_from_assignment(
     assignment: Sequence[int],
     accept_threshold: float,
     t0: float,
+    weights: Optional[Dict[int, float]] = None,
 ) -> ReconfigResult:
     moves: List[Move] = []
     sat: List[AppSatisfaction] = []
@@ -101,11 +114,13 @@ def _result_from_assignment(
         if cand.node.node_id != placed.candidate.node.node_id:
             moves.append(Move(placed.req_id, placed.candidate, cand,
                               _ratio(placed, cand)))
-    s_before = 2.0 * len(ctx)
-    s_after = window_sum(sat)
+    s_before = 2.0 * len(ctx)   # normalized weights keep the baseline here
+    s_after = (weighted_window_sum(sat, weights) if weights
+               else sum(s.ratio for s in sat))
     accepted = bool(moves) and (s_before - s_after) > accept_threshold
     return ReconfigResult(list(window), moves, sat, s_before, s_after,
-                          accepted, None, time.perf_counter() - t0)
+                          accepted, None, time.perf_counter() - t0,
+                          weights=weights)
 
 
 # ------------------------------------------------------------------- policies
@@ -118,15 +133,22 @@ class ReconfigPolicy:
         self.move_penalty = move_penalty
         self.accept_threshold = accept_threshold
 
-    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+    def plan(
+        self,
+        engine: PlacementEngine,
+        window: Sequence[int],
+        weights: Optional[Mapping[int, float]] = None,
+    ) -> ReconfigResult:
         raise NotImplementedError
 
-    def _cost(self, wa: _WindowApp, choice: int) -> float:
-        """eq. (1) summand + migration penalty relative to the LIVE node."""
+    def _cost(self, wa: _WindowApp, choice: int, w: float = 1.0) -> float:
+        """Traffic-weighted eq. (1) summand + migration penalty relative to
+        the LIVE node (the penalty is per *move*, so it stays unweighted —
+        matching the MILP encoding)."""
         cand = wa.candidates[choice]
         pen = self.move_penalty if (
             cand.node.node_id != wa.placed.candidate.node.node_id) else 0.0
-        return _ratio(wa.placed, cand) + pen
+        return w * _ratio(wa.placed, cand) + pen
 
 
 class NoOpPolicy(ReconfigPolicy):
@@ -135,11 +157,13 @@ class NoOpPolicy(ReconfigPolicy):
 
     name = "noop"
 
-    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         t0 = time.perf_counter()
         ctx = _window_context(engine, window)
+        norm = normalize_weights(window, weights) if weights is not None else None
         return _result_from_assignment(window, ctx, [wa.current_idx for wa in ctx],
-                                       self.accept_threshold, t0)
+                                       self.accept_threshold, t0, norm)
 
 
 class MilpPolicy(ReconfigPolicy):
@@ -153,13 +177,14 @@ class MilpPolicy(ReconfigPolicy):
         self.backend = backend
         self.time_limit_s = time_limit_s
 
-    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         recon = Reconfigurator(
             engine, move_penalty=self.move_penalty,
             accept_threshold=self.accept_threshold,
             backend=self.backend, time_limit_s=self.time_limit_s,
         )
-        return recon.plan(window)
+        return recon.plan(window, weights=weights)
 
 
 class GreedyPolicy(ReconfigPolicy):
@@ -168,27 +193,30 @@ class GreedyPolicy(ReconfigPolicy):
 
     name = "greedy"
 
-    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         t0 = time.perf_counter()
         ctx = _window_context(engine, window)
+        norm = normalize_weights(window, weights) if weights is not None else None
         shadow = _Shadow(*engine.free_capacity_excluding(window))
         for wa in ctx:  # charge the live assignment; apps are lifted out 1-by-1
             shadow.occupy(wa.placed.request.app, wa.candidates[wa.current_idx], +1.0)
         assignment: List[int] = []
         for wa in ctx:
             app = wa.placed.request.app
+            w = norm[wa.placed.req_id] if norm else 1.0
             shadow.occupy(app, wa.candidates[wa.current_idx], -1.0)
-            best, best_cost = wa.current_idx, self._cost(wa, wa.current_idx)
+            best, best_cost = wa.current_idx, self._cost(wa, wa.current_idx, w)
             for j in range(len(wa.candidates)):
                 if j == wa.current_idx:
                     continue
-                cost = self._cost(wa, j)
+                cost = self._cost(wa, j, w)
                 if cost < best_cost - 1e-12 and shadow.fits(app, wa.candidates[j]):
                     best, best_cost = j, cost
             shadow.occupy(app, wa.candidates[best], +1.0)
             assignment.append(best)
         return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0)
+                                       self.accept_threshold, t0, norm)
 
 
 class HillClimbPolicy(ReconfigPolicy):
@@ -203,9 +231,11 @@ class HillClimbPolicy(ReconfigPolicy):
         super().__init__(move_penalty, accept_threshold)
         self.max_iters = max_iters
 
-    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         t0 = time.perf_counter()
         ctx = _window_context(engine, window)
+        norm = normalize_weights(window, weights) if weights is not None else None
         shadow = _Shadow(*engine.free_capacity_excluding(window))
         assignment = [wa.current_idx for wa in ctx]
         for wa in ctx:  # charge the starting assignment
@@ -214,12 +244,13 @@ class HillClimbPolicy(ReconfigPolicy):
             best_delta, best_i, best_j = 1e-12, -1, -1
             for i, wa in enumerate(ctx):
                 app = wa.placed.request.app
-                cur_cost = self._cost(wa, assignment[i])
+                w = norm[wa.placed.req_id] if norm else 1.0
+                cur_cost = self._cost(wa, assignment[i], w)
                 shadow.occupy(app, wa.candidates[assignment[i]], -1.0)
                 for j in range(len(wa.candidates)):
                     if j == assignment[i]:
                         continue
-                    delta = cur_cost - self._cost(wa, j)
+                    delta = cur_cost - self._cost(wa, j, w)
                     if delta > best_delta and shadow.fits(app, wa.candidates[j]):
                         best_delta, best_i, best_j = delta, i, j
                 shadow.occupy(app, wa.candidates[assignment[i]], +1.0)
@@ -230,7 +261,7 @@ class HillClimbPolicy(ReconfigPolicy):
             shadow.occupy(wa.placed.request.app, wa.candidates[best_j], +1.0)
             assignment[best_i] = best_j
         return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0)
+                                       self.accept_threshold, t0, norm)
 
 
 class GaPolicy(ReconfigPolicy):
@@ -250,14 +281,17 @@ class GaPolicy(ReconfigPolicy):
         self.config = config or GaConfig(population=24, generations=16)
         self._calls = 0
 
-    def plan(self, engine: PlacementEngine, window: Sequence[int]) -> ReconfigResult:
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         t0 = time.perf_counter()
         ctx = _window_context(engine, window)
+        norm = normalize_weights(window, weights) if weights is not None else None
+        wts = [norm[wa.placed.req_id] if norm else 1.0 for wa in ctx]
         # Prune each app's choices to its k best (by penalized cost), with
         # the live candidate always at locus value 0.
-        for wa in ctx:
+        for wa, w in zip(ctx, wts):
             order = sorted(range(len(wa.candidates)),
-                           key=lambda j: (self._cost(wa, j),
+                           key=lambda j: (self._cost(wa, j, w),
                                           wa.candidates[j].node.node_id))
             keep = [wa.current_idx] + [j for j in order
                                        if j != wa.current_idx][: self.k_candidates - 1]
@@ -268,8 +302,8 @@ class GaPolicy(ReconfigPolicy):
         def fitness(gene) -> float:
             shadow = _Shadow(node_cap, link_cap)
             total = 0.0
-            for wa, g in zip(ctx, gene):
-                total += self._cost(wa, g)
+            for wa, w, g in zip(ctx, wts, gene):
+                total += self._cost(wa, g, w)
                 shadow.occupy(wa.placed.request.app, wa.candidates[g], +1.0)
             overflow = sum(-v for v in shadow.node.values() if v < -1e-9)
             overflow += sum(-v for v in shadow.link.values() if v < -1e-9)
@@ -288,11 +322,58 @@ class GaPolicy(ReconfigPolicy):
                 v < -1e-9 for v in shadow.link.values()):
             assignment = [0] * len(ctx)  # infeasible winner → do nothing
         return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0)
+                                       self.accept_threshold, t0, norm)
+
+
+class AdaptivePolicy(ReconfigPolicy):
+    """Online policy switching: run the exact MILP while it is affordable,
+    fall back to the greedy heuristic when the rolling mean ``plan_time_s``
+    over the last ``k`` plans exceeds ``budget_s``, and switch back once
+    the rolling mean recovers below ``budget_s × recover_frac``.
+
+    While the fast policy runs, its (cheap) plan times flow into the same
+    rolling window, so the mean decays and the controller re-tries the
+    MILP — the classic hysteresis loop of an online solver governor.
+    NOTE: switching depends on wall-clock solver latency, so adaptive runs
+    are NOT covered by the telemetry-fingerprint determinism contract."""
+
+    name = "adaptive"
+
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
+                 budget_s: float = 0.25, k: int = 5, recover_frac: float = 0.5,
+                 **milp_kwargs):
+        super().__init__(move_penalty, accept_threshold)
+        self.budget_s = budget_s
+        self.recover_frac = recover_frac
+        self.slow: ReconfigPolicy = MilpPolicy(move_penalty, accept_threshold,
+                                               **milp_kwargs)
+        self.fast: ReconfigPolicy = GreedyPolicy(move_penalty, accept_threshold)
+        self.using_fast = False
+        self.switches = 0
+        self._times: deque = deque(maxlen=max(int(k), 1))
+
+    @property
+    def active_name(self) -> str:
+        return self.fast.name if self.using_fast else self.slow.name
+
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
+        pol = self.fast if self.using_fast else self.slow
+        res = pol.plan(engine, window, weights)
+        self._times.append(res.plan_time_s)
+        mean = sum(self._times) / len(self._times)
+        if not self.using_fast and mean > self.budget_s:
+            self.using_fast = True
+            self.switches += 1
+        elif self.using_fast and mean <= self.budget_s * self.recover_frac:
+            self.using_fast = False
+            self.switches += 1
+        return res
 
 
 POLICIES: Dict[str, Type[ReconfigPolicy]] = {
-    p.name: p for p in (MilpPolicy, GreedyPolicy, HillClimbPolicy, GaPolicy, NoOpPolicy)
+    p.name: p for p in (MilpPolicy, GreedyPolicy, HillClimbPolicy, GaPolicy,
+                        AdaptivePolicy, NoOpPolicy)
 }
 
 

@@ -1,20 +1,30 @@
-"""Discrete-event continuous-operation runtime.
+"""Discrete-event continuous-operation runtime with load-bearing time.
 
-Drives the paper's reconfigurator *over time* instead of once: a stream of
-arrival / departure / drift / failure events mutates the fleet, and every
+Drives the paper's reconfigurator *over time*: a stream of arrival /
+departure / rate-sample / failure events mutates the fleet, and every
 ``reconfig_every`` admissions (plus after failures and recoveries) the
-configured `ReconfigPolicy` trial-solves the recent-apps window; accepted
-plans are executed through the bandwidth-aware `MigrationExecutor`.
+configured `ReconfigPolicy` trial-solves the recent-apps window — skipping
+apps that are mid-migration — weighting each app by its current request
+rate.  Accepted plans do NOT complete inside the tick: the
+`MigrationExecutor` ledger starts transfers that occupy fractional link
+bandwidth over ``[t, t+dur)``, emits `MigrationStart` / `MigrationComplete`
+events back into the queue, and holds source-side occupancy until the copy
+finishes (the double-booking window).  Arrivals, departures, rate swings
+and node failures therefore *interleave* with in-flight moves — a flash
+crowd can land mid-reconfiguration, and a destination failure aborts and
+rolls back the transfers headed there.
 
 The runtime is fully deterministic given its event queue: all randomness
-lives in the scenario generators (`fleet.scenarios`), and per-tick telemetry
-fingerprints are reproducible (see `fleet.telemetry`).
+lives in the scenario generators (`fleet.scenarios`), and per-tick
+telemetry fingerprints are reproducible (see `fleet.telemetry`) — except
+under the `adaptive` policy, whose switching keys off wall-clock solver
+latency by design.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.core.apps import PlacementRequest
 from repro.core.placement import PlacementEngine
@@ -26,11 +36,15 @@ from .events import (
     DemandDrift,
     Event,
     EventQueue,
+    MigrationComplete,
+    MigrationStart,
     NodeFailure,
     NodeRecovery,
+    RateCurve,
     ReconfigTick,
+    RequestRateUpdate,
 )
-from .executor import MigrationExecutor, MigrationSchedule
+from .executor import MigrationExecutor
 from .policies import ReconfigPolicy
 from .telemetry import Telemetry, TickRecord
 
@@ -42,10 +56,11 @@ class RuntimeConfig:
     state_mb: float = 64.0         # migrated state per app
     reconfig_on_failure: bool = True
     check_invariants: bool = True  # occupancy audit after every tick
+    rate_epsilon: float = 0.05     # min relative rate change worth re-admitting
 
 
 class FleetRuntime:
-    """Event loop over a `PlacementEngine` + policy + migration executor."""
+    """Event loop over a `PlacementEngine` + policy + migration ledger."""
 
     def __init__(
         self,
@@ -60,79 +75,161 @@ class FleetRuntime:
         self.executor = MigrationExecutor(state_mb=self.config.state_mb)
         self.now = 0.0
         self._since_reconfig = 0
+        self._events = EventQueue()   # bound to the live queue by run()
+        # Request-stream state: per-app curve and the rate its footprint is
+        # currently admitted at (1.0 for apps without a curve).
+        self._curves: Dict[int, RateCurve] = {}
+        self._rates: Dict[int, float] = {}
 
     # ------------------------------------------------------------------ run
     def run(self, events: EventQueue, scenario: str = "", seed: int = 0) -> Telemetry:
         tel = Telemetry(scenario, self.policy.name, seed)
+        self._events = events
         while events:
             self.now, ev = events.pop()
             self._dispatch(ev, events, tel)
+        tel.counters["migrations_dropped"] = self.executor.moves_dropped
+        tel.migrations = list(self.executor.records)
         return tel
 
     def _dispatch(self, ev: Event, events: EventQueue, tel: Telemetry) -> None:
         c = tel.counters
         if isinstance(ev, AppArrival):
-            c["arrivals"] += 1
-            placed = self.engine.place(ev.request)
-            if placed is None:
-                c["rejected"] += 1
-                return
-            c["admitted"] += 1
-            if ev.lifetime_s is not None:
-                events.push(self.now + ev.lifetime_s, AppDeparture(ev.request.req_id))
-            self._since_reconfig += 1
-            if self._since_reconfig >= self.config.reconfig_every:
-                self._tick("arrivals", tel)
+            self._on_arrival(ev, events, tel)
         elif isinstance(ev, AppDeparture):
             # The app may already be gone (failure eviction that found no
             # new home) — departures are idempotent.
             if ev.req_id in self.engine.placed:
+                if self.engine.is_migrating(ev.req_id):
+                    self.executor.cancel(self.engine, ev.req_id, self.now, events)
+                    c["migrations_cancelled"] += 1
+                self._forget(ev.req_id)
                 self.engine.release(ev.req_id)
                 c["departures"] += 1
+                self.executor.on_capacity_freed(self.engine, self.now, events)
         elif isinstance(ev, DemandDrift):
-            alive = self.engine.placement_order
+            alive = [r for r in self.engine.placement_order
+                     if not self.engine.is_migrating(r)]
             if not alive:
                 return
             req_id = alive[ev.selector % len(alive)]
             c["drifts"] += 1
             if not self._readmit(req_id, scale=ev.scale):
                 c["drift_evicted"] += 1
+        elif isinstance(ev, RequestRateUpdate):
+            self._on_rate_update(ev, events, tel)
+        elif isinstance(ev, MigrationStart):
+            c["migrations_started"] += 1
+        elif isinstance(ev, MigrationComplete):
+            rec = self.executor.on_complete(self.engine, ev.req_id, ev.gen,
+                                            self.now, events)
+            if rec is not None:
+                c["migrations_completed"] += 1
         elif isinstance(ev, NodeFailure):
-            c["failures"] += 1
-            self.engine.set_node_online(ev.node_id, False)
-            for req_id in self.engine.apps_on_node(ev.node_id):
-                if self._readmit(req_id):
-                    c["failover_moved"] += 1
-                else:
-                    c["failover_lost"] += 1
-            if self.config.reconfig_on_failure:
-                self._tick("failure", tel)
+            self._on_failure(ev, events, tel)
         elif isinstance(ev, NodeRecovery):
             c["recoveries"] += 1
             self.engine.set_node_online(ev.node_id, True)
+            self.executor.on_capacity_freed(self.engine, self.now, events)
             if self.config.reconfig_on_failure:
-                self._tick("recovery", tel)
+                self._tick("recovery", tel, events)
         elif isinstance(ev, ReconfigTick):
-            self._tick("tick", tel)
+            self._tick("tick", tel, events)
         else:
             raise TypeError(f"unknown event {ev!r}")
 
+    # --------------------------------------------------------------- events
+    def _on_arrival(self, ev: AppArrival, events: EventQueue, tel: Telemetry) -> None:
+        c = tel.counters
+        c["arrivals"] += 1
+        inflight = self.executor.n_inflight > 0
+        if inflight:
+            c["arrivals_inflight"] += 1
+        req = ev.request
+        rate0 = 1.0
+        if ev.rate_curve is not None:
+            rate0 = ev.rate_curve.rate(self.now)
+            req = _scaled_request(req, rate0)
+        placed = self.engine.place(req)
+        if placed is None:
+            c["rejected"] += 1
+            if inflight:
+                c["rejected_inflight"] += 1
+            return
+        c["admitted"] += 1
+        if ev.rate_curve is not None:
+            self._curves[req.req_id] = ev.rate_curve
+        self._rates[req.req_id] = rate0
+        if ev.lifetime_s is not None:
+            events.push(self.now + ev.lifetime_s, AppDeparture(req.req_id))
+        self._since_reconfig += 1
+        if self._since_reconfig >= self.config.reconfig_every:
+            self._tick("arrivals", tel, events)
+
+    def _on_rate_update(self, ev: RequestRateUpdate, events: EventQueue,
+                        tel: Telemetry) -> None:
+        c = tel.counters
+        for req_id in list(self.engine.placement_order):
+            curve = self._curves.get(req_id)
+            if curve is None or self.engine.is_migrating(req_id):
+                continue
+            cur = self._rates.get(req_id, 1.0)
+            target = curve.rate(self.now)
+            if abs(target - cur) <= self.config.rate_epsilon * cur:
+                continue
+            c["rate_updates"] += 1
+            if self._readmit(req_id, scale=target / cur):
+                self._rates[req_id] = target
+            else:
+                c["rate_evicted"] += 1
+        if self.now + ev.every_s <= ev.horizon_s:
+            events.push(self.now + ev.every_s, ev)
+
+    def _on_failure(self, ev: NodeFailure, events: EventQueue, tel: Telemetry) -> None:
+        c = tel.counters
+        c["failures"] += 1
+        self.engine.set_node_online(ev.node_id, False)
+        # First let the ledger abort transfers touching the dead node …
+        rolled_back, homeless = self.executor.on_node_failure(
+            self.engine, ev.node_id, self.now, events)
+        c["migrations_aborted"] += len(rolled_back) + len(homeless)
+        c["migration_rollbacks"] += len(rolled_back)
+        for req_id in homeless:
+            # Suspended app whose destination died: its source slot is gone
+            # too, so re-place it anywhere (or lose it).
+            if self._readmit(req_id):
+                c["failover_moved"] += 1
+            else:
+                c["migration_lost"] += 1
+        # … then evict the apps whose live copy sat on the node.
+        for req_id in self.engine.apps_on_node(ev.node_id):
+            if self._readmit(req_id):
+                c["failover_moved"] += 1
+            else:
+                c["failover_lost"] += 1
+        if self.config.reconfig_on_failure:
+            self._tick("failure", tel, events)
+
     # -------------------------------------------------------------- helpers
+    def _forget(self, req_id: int) -> None:
+        self._curves.pop(req_id, None)
+        self._rates.pop(req_id, None)
+
     def _readmit(self, req_id: int, scale: float = 1.0) -> bool:
-        """Release ``req_id`` and place it again (drift rescaling its
-        bandwidth/data footprint).  Returns False if no home was found —
-        the app is lost (recorded in ``engine.rejected``)."""
+        """Release ``req_id`` and place it again (rescaling its bandwidth/
+        data footprint).  Returns False if no home was found — the app is
+        lost (recorded in ``engine.rejected``).  Never called on a
+        mid-migration app: the runtime cancels/aborts its transfer first."""
         placed = self.engine.placed[req_id]
         req = placed.request
         if scale != 1.0:
-            app = dataclasses.replace(
-                req.app,
-                bandwidth_mbps=req.app.bandwidth_mbps * scale,
-                data_mb=req.app.data_mb * scale,
-            )
-            req = PlacementRequest(req.req_id, app, req.input_site, req.requirement)
+            req = _scaled_request(req, scale)
         self.engine.release(req_id)
-        return self.engine.place(req) is not None
+        ok = self.engine.place(req) is not None
+        if not ok:
+            self._forget(req_id)
+        self.executor.on_capacity_freed(self.engine, self.now, self._events)
+        return ok
 
     def _utilization(self) -> tuple:
         """(aggregate, max) used/capacity over online nodes of the device
@@ -150,16 +247,22 @@ class FleetRuntime:
             worst = max(worst, self.engine.node_used[nid] / node.capacity)
         return (used / cap if cap else 0.0), worst
 
-    def _tick(self, trigger: str, tel: Telemetry) -> None:
+    def _mean_rate(self) -> float:
+        if not self.engine.placed:
+            return 0.0
+        return sum(self._rates.get(r, 1.0) for r in self.engine.placed) / len(
+            self.engine.placed)
+
+    def _tick(self, trigger: str, tel: Telemetry, events: EventQueue) -> None:
         self._since_reconfig = 0
-        window = self.engine.recent(min(self.config.window,
-                                        len(self.engine.placement_order)))
+        window = self.engine.recent_stable(self.config.window)
         if not window:
             return
-        res = self.policy.plan(self.engine, window)
-        schedule = MigrationSchedule([], self.config.state_mb)
+        weights = {r: self._rates.get(r, 1.0) for r in window}
+        res = self.policy.plan(self.engine, window, weights=weights)
+        n_started = 0
         if res.accepted and res.moves:
-            schedule = self.executor.execute(self.engine, res)
+            n_started = self.executor.begin(self.engine, res, self.now, events)
             tel.counters["moves"] += res.n_moved
         util, util_max = self._utilization()
         tel.ticks.append(TickRecord(
@@ -170,13 +273,24 @@ class FleetRuntime:
             n_moved=res.n_moved if res.accepted else 0,
             accepted=res.accepted,
             gain=res.gain if res.accepted else 0.0,
-            mean_moved_ratio=res.mean_moved_ratio if res.accepted else 2.0,
+            mean_moved_ratio=res.mean_moved_ratio if res.accepted else None,
+            mean_moved_ratio_weighted=(res.mean_moved_ratio_weighted
+                                       if res.accepted else None),
+            mean_rate=self._mean_rate(),
             solver_time_s=res.plan_time_s,
-            migration_makespan_s=schedule.makespan_s,
-            migration_overlap=schedule.overlap_factor,
-            total_downtime_s=schedule.total_downtime_s,
+            n_started=n_started,
+            n_inflight=self.executor.n_inflight,
             utilization=util,
             utilization_max=util_max,
         ))
         if self.config.check_invariants and not self.engine.occupancy_invariants_ok():
             raise AssertionError("occupancy invariants violated after tick")
+
+
+def _scaled_request(req: PlacementRequest, scale: float) -> PlacementRequest:
+    app = dataclasses.replace(
+        req.app,
+        bandwidth_mbps=req.app.bandwidth_mbps * scale,
+        data_mb=req.app.data_mb * scale,
+    )
+    return PlacementRequest(req.req_id, app, req.input_site, req.requirement)

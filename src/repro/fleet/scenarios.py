@@ -3,24 +3,33 @@
 Each scenario deterministically (seeded rng) compiles to a topology + event
 schedule + runtime config:
 
-* ``paper-steady-state`` — the paper's workload run as a *service*: Poisson
-  arrivals of the §4.1 app mix with exponential lifetimes, reconfiguration
-  every 100 admissions over the recent-100 window.  ≥1000 arrivals.
-* ``diurnal``            — sinusoidally modulated arrival rate (day/night
-  load swing) plus demand drift on running apps.
-* ``flash-crowd``        — background trickle + a burst of short-lived apps
-  concentrated on one user-edge region (hot links/devices).
-* ``node-outage``        — steady state, then cloud GPU nodes fail mid-run
-  and recover later (failover + re-optimization on recovery).
-* ``hetero-expansion``   — a TPU pod fleet where cheap capacity comes online
-  mid-run (modeled as recovery of initially-failed pods); reconfiguration
-  should migrate budget-bound jobs onto it.
+* ``paper-steady-state``   — the paper's workload run as a *service*:
+  Poisson arrivals of the §4.1 app mix with exponential lifetimes,
+  reconfiguration every 100 admissions over the recent-100 window.
+* ``diurnal-streams``      — every app is a request *stream*: per-app
+  diurnal `RateCurve`s (shared day/night phase, random amplitude, a few
+  viral bursts) sampled by periodic `RequestRateUpdate` events, replacing
+  the old step `DemandDrift` rescaling.
+* ``flash-crowd``          — background trickle + a burst of short-lived
+  apps concentrated on one user-edge region (hot links/devices).
+* ``flash-crowd-during-reconfig`` — a forced reconfiguration, then a flash
+  crowd of arrivals plus coordinated rate bursts land while the planned
+  migrations are still in flight; a node failure mid-burst aborts the
+  transfers headed to it.
+* ``node-outage``          — steady state, then cloud GPU nodes fail
+  mid-run and recover later (failover + re-optimization on recovery).
+* ``site-outage``          — correlated failure: ALL nodes of one cloud
+  site fail together and recover together.
+* ``flapping-node``        — one node periodically fails and recovers,
+  churning placements (and colliding with in-flight migrations).
+* ``hetero-expansion``     — a TPU pod fleet where cheap capacity comes
+  online mid-run; reconfiguration migrates budget-bound jobs onto it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,11 +39,13 @@ from repro.core.topology import Topology, build_paper_topology
 
 from .events import (
     AppArrival,
-    DemandDrift,
     Event,
     EventQueue,
     NodeFailure,
     NodeRecovery,
+    RateCurve,
+    ReconfigTick,
+    RequestRateUpdate,
 )
 from .policies import ReconfigPolicy
 from .runtime import FleetRuntime, RuntimeConfig
@@ -64,14 +75,22 @@ def _poisson_arrivals(
     mean_lifetime_s: float,
     start_id: int = 0,
     t0: float = 0.0,
+    curve_fn: Optional[Callable[[int, float], Optional[RateCurve]]] = None,
 ) -> List[Tuple[float, Event]]:
+    """``curve_fn(i, t_arrival) -> RateCurve|None`` attaches request streams."""
     reqs = sample_requests(topo, n, rng, start_id=start_id)
     out: List[Tuple[float, Event]] = []
     t = t0
-    for req in reqs:
+    for i, req in enumerate(reqs):
         t += float(rng.exponential(mean_interarrival_s))
-        out.append((t, AppArrival(req, float(rng.exponential(mean_lifetime_s)))))
+        curve = curve_fn(i, t) if curve_fn else None
+        out.append((t, AppArrival(req, float(rng.exponential(mean_lifetime_s)),
+                                  rate_curve=curve)))
     return out
+
+
+def _site_nodes(topo: Topology, site_id: str) -> List[str]:
+    return sorted(n.node_id for n in topo.nodes.values() if n.site_id == site_id)
 
 
 # ----------------------------------------------------------------- scenarios
@@ -85,21 +104,35 @@ def paper_steady_state(seed: int = 0, n_arrivals: int = 1100) -> ScenarioSpec:
                         RuntimeConfig(reconfig_every=100, window=100))
 
 
-def diurnal(seed: int = 0, n_arrivals: int = 600, period_s: float = 4_000.0) -> ScenarioSpec:
+def diurnal_streams(seed: int = 0, n_arrivals: int = 500,
+                    period_s: float = 4_000.0,
+                    sample_every_s: float = 150.0) -> ScenarioSpec:
+    """Continuous per-app load curves instead of step demand drift: a
+    shared day/night sinusoid (random amplitude per app), ~10 % of apps go
+    viral with a burst segment, and the arrival rate itself swings over
+    the same period."""
     rng = np.random.default_rng(seed)
     topo = build_paper_topology()
     reqs = sample_requests(topo, n_arrivals, rng)
     events: List[Tuple[float, Event]] = []
     t = 0.0
-    for i, req in enumerate(reqs):
-        # Rate swings ±80 % around the base over one "day".
-        rate = 1.0 + 0.8 * np.sin(2.0 * np.pi * t / period_s)
-        t += float(rng.exponential(8.0 / max(rate, 0.2)))
-        events.append((t, AppArrival(req, float(rng.exponential(1_500.0)))))
-        if i % 25 == 24:  # demand drift on a random running app
-            scale = float(rng.choice([0.5, 1.5, 2.0]))
-            events.append((t, DemandDrift(int(rng.integers(10_000)), scale)))
-    return ScenarioSpec("diurnal", topo, events,
+    for req in reqs:
+        arrival_rate = 1.0 + 0.8 * np.sin(2.0 * np.pi * t / period_s)
+        t += float(rng.exponential(8.0 / max(arrival_rate, 0.2)))
+        bursts: Tuple[Tuple[float, float, float], ...] = ()
+        if rng.random() < 0.1:   # viral app: one strong burst mid-life
+            bursts = ((t + float(rng.uniform(200.0, 1_500.0)),
+                       float(rng.uniform(200.0, 500.0)),
+                       float(rng.uniform(2.0, 4.0))),)
+        curve = RateCurve(base=1.0,
+                          amplitude=float(rng.uniform(0.3, 0.7)),
+                          period_s=period_s,
+                          phase=0.0,        # the day is shared fleet-wide
+                          bursts=bursts)
+        events.append((t, AppArrival(req, float(rng.exponential(1_500.0)),
+                                     rate_curve=curve)))
+    events.append((sample_every_s, RequestRateUpdate(sample_every_s, t)))
+    return ScenarioSpec("diurnal-streams", topo, events,
                         RuntimeConfig(reconfig_every=60, window=80))
 
 
@@ -122,6 +155,48 @@ def flash_crowd(seed: int = 0, n_background: int = 350, n_burst: int = 150) -> S
                         RuntimeConfig(reconfig_every=50, window=100))
 
 
+def flash_crowd_during_reconfig(seed: int = 0, n_background: int = 400,
+                                n_burst: int = 120) -> ScenarioSpec:
+    """The regime the paper's relocation-during-operation story hinges on:
+    a reconfiguration is forced, and while its migrations are still copying
+    state a flash crowd arrives on one edge region AND running apps there
+    spike (burst segments on their curves); a GPU node then fails
+    mid-transfer window, aborting the migrations headed to it."""
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    hot_sites = [f"input{i}" for i in range(5)]
+    burst_t0 = n_background * 12.0 * 0.55    # mid-run, after plenty of churn
+
+    def curve_fn(i: int, t_arrival: float) -> Optional[RateCurve]:
+        # Apps arriving before the crowd carry a coordinated burst segment:
+        # the crowd also hammers already-running deployments.
+        if t_arrival < burst_t0 and rng.random() < 0.25:
+            return RateCurve(bursts=((burst_t0, 120.0,
+                                      float(rng.uniform(1.5, 3.0))),))
+        return None
+
+    events = _poisson_arrivals(topo, rng, n_background,
+                               mean_interarrival_s=12.0,
+                               mean_lifetime_s=3_500.0,
+                               curve_fn=curve_fn)
+    # Force a reconfiguration just before the crowd: its migrations (tens
+    # of seconds over 10–100 Mbps uplinks) are in flight when it hits.
+    events.append((burst_t0 - 5.0, ReconfigTick()))
+    burst = sample_requests(topo, n_burst, rng, start_id=n_background)
+    t = burst_t0
+    for req in burst:
+        t += float(rng.exponential(0.5))
+        req = dataclasses.replace(
+            req, input_site=hot_sites[int(rng.integers(len(hot_sites)))])
+        events.append((t, AppArrival(req, float(rng.exponential(600.0)))))
+    # A destination-side failure inside the transfer window.
+    events.append((burst_t0 + 10.0, NodeFailure("cloud0_gpu0")))
+    events.append((burst_t0 + 600.0, NodeRecovery("cloud0_gpu0")))
+    events.append((burst_t0 / 2.0, RequestRateUpdate(60.0, burst_t0 + 300.0)))
+    return ScenarioSpec("flash-crowd-during-reconfig", topo, events,
+                        RuntimeConfig(reconfig_every=50, window=100))
+
+
 def node_outage(seed: int = 0, n_arrivals: int = 500) -> ScenarioSpec:
     rng = np.random.default_rng(seed)
     topo = build_paper_topology()
@@ -133,6 +208,44 @@ def node_outage(seed: int = 0, n_arrivals: int = 500) -> ScenarioSpec:
         events.append((horizon * 0.5 + k, NodeFailure(node)))
         events.append((horizon * 0.8 + k, NodeRecovery(node)))
     return ScenarioSpec("node-outage", topo, events,
+                        RuntimeConfig(reconfig_every=80, window=100))
+
+
+def site_outage(seed: int = 0, n_arrivals: int = 450,
+                site: str = "cloud1") -> ScenarioSpec:
+    """Correlated failure: every device node of one cloud site goes dark in
+    the same instant (power/network cut) and the whole site returns later."""
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    events = _poisson_arrivals(topo, rng, n_arrivals,
+                               mean_interarrival_s=10.0,
+                               mean_lifetime_s=4_000.0)
+    horizon = events[-1][0]
+    for node in _site_nodes(topo, site):
+        events.append((horizon * 0.5, NodeFailure(node)))
+        events.append((horizon * 0.8, NodeRecovery(node)))
+    return ScenarioSpec("site-outage", topo, events,
+                        RuntimeConfig(reconfig_every=80, window=100))
+
+
+def flapping_node(seed: int = 0, n_arrivals: int = 450,
+                  node: str = "cloud0_gpu0", up_s: float = 600.0,
+                  down_s: float = 200.0) -> ScenarioSpec:
+    """One node flaps: repeatedly fails for ``down_s`` then recovers for
+    ``up_s`` over the middle half of the run — each flap evicts its apps,
+    aborts transfers headed to it, and triggers re-optimization."""
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology()
+    events = _poisson_arrivals(topo, rng, n_arrivals,
+                               mean_interarrival_s=10.0,
+                               mean_lifetime_s=4_000.0)
+    horizon = events[-1][0]
+    t = horizon * 0.25
+    while t < horizon * 0.75:
+        events.append((t, NodeFailure(node)))
+        events.append((t + down_s, NodeRecovery(node)))
+        t += down_s + up_s
+    return ScenarioSpec("flapping-node", topo, events,
                         RuntimeConfig(reconfig_every=80, window=100))
 
 
@@ -166,9 +279,12 @@ def hetero_expansion(seed: int = 0, n_jobs: int = 140) -> ScenarioSpec:
 
 SCENARIOS: Dict[str, Callable[..., ScenarioSpec]] = {
     "paper-steady-state": paper_steady_state,
-    "diurnal": diurnal,
+    "diurnal-streams": diurnal_streams,
     "flash-crowd": flash_crowd,
+    "flash-crowd-during-reconfig": flash_crowd_during_reconfig,
     "node-outage": node_outage,
+    "site-outage": site_outage,
+    "flapping-node": flapping_node,
     "hetero-expansion": hetero_expansion,
 }
 

@@ -1,10 +1,18 @@
-"""Per-tick telemetry time series of a continuous-operation run.
+"""Per-tick + per-migration telemetry of a continuous-operation run.
 
 A *tick* is one reconfiguration event.  Each tick snapshots the paper's
-quantities (moved ratio, mean moved-app satisfaction X+Y, solver latency)
-plus operational ones (alive population, utilization, migration makespan).
-`Telemetry.fingerprint()` hashes the canonical JSON — the determinism tests
-assert fixed seed → identical fingerprint.
+quantities (moved ratio, mean moved-app satisfaction X+Y — both raw and
+traffic-weighted, solver latency) plus operational ones (alive population,
+utilization, transfers started / in flight).  Migrations occupy simulated
+time, so their cost shows up as `MigrationRecord` rows when they *finish*
+(or abort), not on the tick that planned them.
+
+On rejected ticks nothing moved, so there is no moved-app satisfaction to
+report: those fields are ``None`` (JSON null) and every aggregate skips
+them — no magic sentinel leaking into benchmark means.
+
+`Telemetry.fingerprint()` hashes the canonical JSON minus wall-clock solver
+latency — the determinism tests assert fixed seed → identical fingerprint.
 """
 
 from __future__ import annotations
@@ -12,7 +20,23 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationRecord:
+    """One finished/aborted/cancelled migration (executor ledger row)."""
+
+    req_id: int
+    mode: str                      # "precopy" | "stop_and_copy"
+    outcome: str                   # "completed" | "aborted" | "cancelled"
+    t_start: float
+    t_end: float
+    downtime_s: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end - self.t_start
 
 
 @dataclasses.dataclass
@@ -24,11 +48,12 @@ class TickRecord:
     n_moved: int
     accepted: bool
     gain: float
-    mean_moved_ratio: float        # fig. 5(b) quantity, 2.0 when nothing moved
+    mean_moved_ratio: Optional[float]           # fig. 5(b); None if no moves
+    mean_moved_ratio_weighted: Optional[float]  # traffic-weighted variant
+    mean_rate: float               # mean request rate over alive streams
     solver_time_s: float
-    migration_makespan_s: float
-    migration_overlap: float
-    total_downtime_s: float
+    n_started: int                 # transfers started by this tick
+    n_inflight: int                # active + waiting after the tick
     utilization: float             # Σ used / Σ capacity over online nodes
     utilization_max: float         # hottest online node
 
@@ -38,26 +63,52 @@ class TickRecord:
         return self.n_moved / self.window if self.window else 0.0
 
 
+def _mean(values: List[float]) -> Optional[float]:
+    return sum(values) / len(values) if values else None
+
+
 @dataclasses.dataclass
 class Telemetry:
     scenario: str
     policy: str
     seed: int
     ticks: List[TickRecord] = dataclasses.field(default_factory=list)
+    migrations: List[MigrationRecord] = dataclasses.field(default_factory=list)
     counters: Dict[str, int] = dataclasses.field(default_factory=lambda: {
         "arrivals": 0, "admitted": 0, "rejected": 0, "departures": 0,
         "drifts": 0, "drift_evicted": 0, "failures": 0, "recoveries": 0,
         "failover_moved": 0, "failover_lost": 0, "moves": 0,
+        # time-extended migration accounting
+        "migrations_started": 0, "migrations_completed": 0,
+        "migrations_aborted": 0, "migrations_cancelled": 0,
+        "migrations_dropped": 0, "migration_rollbacks": 0,
+        "migration_lost": 0,
+        # arrivals/rejections that interleaved with an in-flight migration
+        "arrivals_inflight": 0, "rejected_inflight": 0,
+        # request-stream sampling
+        "rate_updates": 0, "rate_evicted": 0,
     })
 
     # ------------------------------------------------------------ summaries
     @property
-    def mean_moved_ratio(self) -> float:
-        """Move-weighted mean X+Y over all ticks (the fig. 5(b) aggregate)."""
-        n = sum(t.n_moved for t in self.ticks)
+    def mean_moved_ratio(self) -> Optional[float]:
+        """Move-weighted mean X+Y over all ticks (the fig. 5(b) aggregate);
+        None when the whole run never moved an app."""
+        pairs = [(t.n_moved, t.mean_moved_ratio) for t in self.ticks
+                 if t.n_moved and t.mean_moved_ratio is not None]
+        n = sum(p[0] for p in pairs)
         if not n:
-            return 2.0
-        return sum(t.n_moved * t.mean_moved_ratio for t in self.ticks) / n
+            return None
+        return sum(k * r for k, r in pairs) / n
+
+    @property
+    def mean_moved_ratio_weighted(self) -> Optional[float]:
+        pairs = [(t.n_moved, t.mean_moved_ratio_weighted) for t in self.ticks
+                 if t.n_moved and t.mean_moved_ratio_weighted is not None]
+        n = sum(p[0] for p in pairs)
+        if not n:
+            return None
+        return sum(k * r for k, r in pairs) / n
 
     @property
     def mean_solver_time_s(self) -> float:
@@ -69,7 +120,17 @@ class Telemetry:
     def total_gain(self) -> float:
         return sum(t.gain for t in self.ticks if t.accepted)
 
+    @property
+    def mean_migration_duration_s(self) -> Optional[float]:
+        return _mean([m.duration_s for m in self.migrations
+                      if m.outcome == "completed"])
+
+    @property
+    def total_downtime_s(self) -> float:
+        return sum(m.downtime_s for m in self.migrations)
+
     def to_dict(self) -> Dict:
+        rnd = lambda v: round(v, 9) if isinstance(v, float) else v
         return {
             "scenario": self.scenario,
             "policy": self.policy,
@@ -77,15 +138,21 @@ class Telemetry:
             "counters": dict(self.counters),
             "summary": {
                 "ticks": len(self.ticks),
-                "mean_moved_ratio": round(self.mean_moved_ratio, 6),
-                "mean_solver_time_s": round(self.mean_solver_time_s, 6),
-                "total_gain": round(self.total_gain, 6),
+                "mean_moved_ratio": rnd(self.mean_moved_ratio),
+                "mean_moved_ratio_weighted": rnd(self.mean_moved_ratio_weighted),
+                "mean_solver_time_s": rnd(self.mean_solver_time_s),
+                "total_gain": rnd(self.total_gain),
                 "total_moves": self.counters["moves"],
+                "mean_migration_duration_s": rnd(self.mean_migration_duration_s),
+                "total_downtime_s": rnd(self.total_downtime_s),
             },
             "ticks": [
-                {k: (round(v, 9) if isinstance(v, float) else v)
-                 for k, v in dataclasses.asdict(t).items()}
+                {k: rnd(v) for k, v in dataclasses.asdict(t).items()}
                 for t in self.ticks
+            ],
+            "migrations": [
+                {k: rnd(v) for k, v in dataclasses.asdict(m).items()}
+                for m in self.migrations
             ],
         }
 

@@ -1,5 +1,6 @@
 """Fleet-runtime tests: deterministic replay, policy-interface conformance,
-bandwidth-aware migration scheduling, failure/drift handling."""
+time-extended migration semantics (link contention, double-booking,
+destination-failure rollback), request streams, failure/drift handling."""
 
 import dataclasses
 
@@ -13,16 +14,22 @@ from repro.core import (
 )
 from repro.core.cluster import FleetScheduler, JobSpec, PodSpec, build_fleet_topology
 from repro.core.migration import Move
+from repro.core.placement import STATE_MIGRATING, STATE_PLACED
 from repro.core.reconfig import ReconfigResult
-from repro.core.satisfaction import AppSatisfaction
+from repro.core.satisfaction import AppSatisfaction, normalize_weights
 from repro.fleet import (
     POLICIES,
     AppArrival,
+    DemandDrift,
     EventQueue,
     FleetRuntime,
+    MigrationComplete,
     MigrationExecutor,
+    MigrationStart,
     NodeFailure,
     NodeRecovery,
+    RateCurve,
+    RequestRateUpdate,
     RuntimeConfig,
     build_scenario,
     get_policy,
@@ -43,6 +50,23 @@ def _loaded_engine(n_apps=80, seed=3, released=(2, 7, 11)):
     return engine
 
 
+def _drain(engine, executor, events):
+    """Run the executor's event loop to quiescence (no runtime involved)."""
+    while events:
+        t, ev = events.pop()
+        if isinstance(ev, MigrationComplete):
+            executor.on_complete(engine, ev.req_id, ev.gen, t, events)
+    return executor
+
+
+def _execute_plan(engine, result, state_mb=64.0):
+    """Begin an accepted plan at t=0 and drain it to completion."""
+    executor = MigrationExecutor(state_mb=state_mb)
+    events = EventQueue()
+    executor.begin(engine, result, 0.0, events)
+    return _drain(engine, executor, events)
+
+
 # ------------------------------------------------------------- determinism
 class TestDeterministicReplay:
     def test_fixed_seed_identical_telemetry(self):
@@ -54,16 +78,30 @@ class TestDeterministicReplay:
         assert runs[0].fingerprint() == runs[1].fingerprint()
         assert runs[0].counters == runs[1].counters
 
+    def test_fingerprint_stable_under_migration_interleaving(self):
+        """The new event interleaving (self-scheduled MigrationComplete /
+        RequestRateUpdate events racing arrivals) must stay reproducible."""
+        fps = []
+        for _ in range(2):
+            spec = build_scenario("flash-crowd-during-reconfig", seed=7)
+            rt = spec.make_runtime(get_policy("greedy"))
+            tel = rt.run(spec.event_queue(), scenario=spec.name, seed=7)
+            assert tel.counters["migrations_started"] > 0
+            fps.append(tel.fingerprint())
+        assert fps[0] == fps[1]
+
     def test_different_seed_differs(self):
         fps = []
         for seed in (0, 1):
-            spec = build_scenario("diurnal", seed=seed, n_arrivals=200)
+            spec = build_scenario("diurnal-streams", seed=seed, n_arrivals=200)
             rt = spec.make_runtime(get_policy("greedy"))
             fps.append(rt.run(spec.event_queue(), seed=seed).fingerprint())
         assert fps[0] != fps[1]
 
     def test_all_scenarios_build_and_replay(self):
-        for name in ("flash-crowd", "node-outage", "hetero-expansion"):
+        for name in ("flash-crowd", "flash-crowd-during-reconfig",
+                     "node-outage", "site-outage", "flapping-node",
+                     "hetero-expansion"):
             a = build_scenario(name, seed=2)
             b = build_scenario(name, seed=2)
             assert [e for _, e in a.events][:20] == [e for _, e in b.events][:20]
@@ -81,7 +119,7 @@ class TestPolicyConformance:
         link_before = dict(engine.link_used)
         homes_before = {r: engine.placed[r].candidate for r in window}
 
-        res = engine_plan = get_policy(name).plan(engine, window)
+        res = get_policy(name).plan(engine, window)
         # 1. plan() must not mutate the engine.
         assert engine.node_used == node_before
         assert engine.link_used == link_before
@@ -91,11 +129,9 @@ class TestPolicyConformance:
         assert [s.req_id for s in res.satisfaction] == list(window)
         assert res.s_before == pytest.approx(2.0 * len(window))
         # 3. moves start from the live placement.
-        moved_ids = set()
         for mv in res.moves:
             assert mv.old == homes_before[mv.req_id]
             assert mv.new.node.node_id != mv.old.node.node_id
-            moved_ids.add(mv.req_id)
         # 4. the planned assignment jointly fits the window-excluded pool.
         node_cap, link_cap = engine.free_capacity_excluding(window)
         chosen = {mv.req_id: mv.new for mv in res.moves}
@@ -107,10 +143,28 @@ class TestPolicyConformance:
                 link_cap[l.link_id] -= app.bandwidth_mbps
         assert all(v >= -1e-9 for v in node_cap.values())
         assert all(v >= -1e-9 for v in link_cap.values())
-        # 5. an accepted plan is executable.
+        # 5. an accepted plan is executable through the reservation ledger.
         if res.accepted and res.moves:
-            MigrationExecutor().execute(engine, engine_plan)
+            executor = _execute_plan(engine, res)
+            assert not executor.active and not executor.waiting
+            for mv in res.moves:
+                assert engine.placed[mv.req_id].state == STATE_PLACED
             assert engine.occupancy_invariants_ok()
+
+    @pytest.mark.parametrize("name", sorted(POLICIES))
+    def test_plan_contract_weighted(self, name):
+        """The contract holds under traffic weights, and `s_before` keeps
+        the 2·|window| baseline thanks to mean-1 normalization."""
+        engine = _loaded_engine()
+        window = engine.recent(30)
+        rng = np.random.default_rng(0)
+        weights = {r: float(rng.uniform(0.2, 5.0)) for r in window}
+        res = get_policy(name).plan(engine, window, weights=weights)
+        assert [s.req_id for s in res.satisfaction] == list(window)
+        assert res.s_before == pytest.approx(2.0 * len(window))
+        norm = normalize_weights(window, weights)
+        assert sum(norm.values()) == pytest.approx(len(window))
+        assert res.s_after <= res.s_before + 1e-9 or not res.accepted
 
     @pytest.mark.parametrize("name", ["greedy", "hillclimb", "ga"])
     def test_heuristics_never_worse_than_noop(self, name):
@@ -129,6 +183,55 @@ class TestPolicyConformance:
             pen = 0.01
             assert (milp.s_after + pen * milp.n_moved
                     <= heur.s_after + pen * heur.n_moved + 1e-6)
+
+    def test_traffic_weights_redirect_the_objective(self):
+        """A heavily-weighted app's improvement outweighs a lighter app's:
+        the weighted gain differs from the unweighted one."""
+        engine = _loaded_engine()
+        window = engine.recent(30)
+        plain = get_policy("milp").plan(engine, window)
+        heavy = {r: (10.0 if i == 0 else 0.1) for i, r in enumerate(window)}
+        weighted = get_policy("milp").plan(engine, window, weights=heavy)
+        assert weighted.weights is not None
+        # Same baseline, different effective objective value.
+        assert weighted.s_before == pytest.approx(plain.s_before)
+        if plain.accepted and weighted.accepted:
+            assert weighted.s_after != pytest.approx(plain.s_after)
+
+
+class TestAdaptivePolicy:
+    class _Stub:
+        def __init__(self, name, plan_time_s):
+            self.name = name
+            self.plan_time_s = plan_time_s
+            self.calls = 0
+
+        def plan(self, engine, window, weights=None):
+            self.calls += 1
+            return ReconfigResult(list(window), [], [], 0.0, 0.0, False,
+                                  None, self.plan_time_s)
+
+    def test_switches_to_fast_and_back(self):
+        pol = get_policy("adaptive", budget_s=1.0, k=2, recover_frac=0.5)
+        slow = self._Stub("milp", 3.0)
+        fast = self._Stub("greedy", 0.01)
+        pol.slow, pol.fast = slow, fast
+        engine = object()
+        pol.plan(engine, [])          # mean 3.0 > 1.0 → switch to fast
+        assert pol.using_fast and pol.active_name == "greedy"
+        pol.plan(engine, [])          # mean (3.0+0.01)/2 > 0.5 → stay fast
+        assert pol.using_fast
+        pol.plan(engine, [])          # mean (0.01+0.01)/2 ≤ 0.5 → recover
+        assert not pol.using_fast and pol.active_name == "milp"
+        assert slow.calls == 1 and fast.calls == 2
+        assert pol.switches == 2
+
+    def test_registered_and_runs(self):
+        spec = build_scenario("paper-steady-state", seed=0, n_arrivals=150)
+        rt = spec.make_runtime(get_policy("adaptive"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        assert tel.counters["admitted"] > 0
+        assert rt.engine.occupancy_invariants_ok()
 
 
 # ----------------------------------------------------------------- executor
@@ -166,67 +269,145 @@ def _move_to(engine, req_id, pod):
     return Move(req_id, placed.candidate, new, ratio)
 
 
-class TestMigrationExecutor:
+class TestMigrationLedger:
+    """The executor as a link-capacity reservation ledger over sim time."""
+
     def _job(self, i, chips=64):
         return JobSpec(i, "a", "t", chips=chips, step_time_s=1.0,
                        step_slo_s=None, budget_usd_month=10 ** 9)
 
-    def test_disjoint_moves_overlap(self):
+    def test_disjoint_links_overlap_fully(self):
         engine = _fleet_engine()
         _force_place(engine, self._job(0), "pod0")
         _force_place(engine, self._job(1), "pod1")
         moves = [_move_to(engine, 0, "pod2"), _move_to(engine, 1, "pod3")]
-        schedule = MigrationExecutor(state_mb=128.0).execute(
-            engine, _fabricate(engine, moves))
+        executor = _execute_plan(engine, _fabricate(engine, moves),
+                                 state_mb=128.0)
+        recs = {r.req_id: r for r in executor.records}
         # pod0→pod2 uses {dcn_pod0, dcn_pod2}; pod1→pod3 uses {dcn_pod1,
-        # dcn_pod3}: disjoint → both start at t=0 and fully overlap.
-        assert [it.start_s for it in schedule.items] == [0.0, 0.0]
-        assert schedule.overlap_factor == pytest.approx(2.0)
-        assert schedule.makespan_s == pytest.approx(schedule.items[0].duration_s)
+        # dcn_pod3}: disjoint → both run at full bandwidth and finish
+        # together at exactly one uncontended transfer time.
+        assert recs[0].t_start == recs[1].t_start == 0.0
+        assert recs[0].t_end == pytest.approx(recs[1].t_end)
+        solo = recs[0].duration_s
+        assert recs[1].duration_s == pytest.approx(solo)
         assert engine.occupancy_invariants_ok()
 
-    def test_shared_link_serializes(self):
+    def test_shared_uplink_halves_the_rate(self):
         engine = _fleet_engine()
         _force_place(engine, self._job(0), "pod0")
         _force_place(engine, self._job(1), "pod1")
+        # Both transfers cross dcn_pod2: fair share → each gets half the
+        # slowest-link bandwidth and takes ~2× an uncontended transfer.
+        solo_engine = _fleet_engine()
+        _force_place(solo_engine, self._job(0), "pod0")
+        solo_exec = _execute_plan(solo_engine,
+                                  _fabricate(solo_engine,
+                                             [_move_to(solo_engine, 0, "pod2")]),
+                                  state_mb=128.0)
+        solo = solo_exec.records[0].duration_s
+
         moves = [_move_to(engine, 0, "pod2"), _move_to(engine, 1, "pod2")]
-        schedule = MigrationExecutor(state_mb=128.0).execute(
-            engine, _fabricate(engine, moves))
-        # Both transfers cross dcn_pod2 → they must not overlap on it.
-        a, b = sorted(schedule.items, key=lambda it: it.start_s)
-        assert b.start_s >= a.end_s - 1e-9
-        assert schedule.makespan_s == pytest.approx(schedule.total_transfer_s)
+        executor = _execute_plan(engine, _fabricate(engine, moves),
+                                 state_mb=128.0)
+        recs = sorted(executor.records, key=lambda r: r.t_end)
+        assert all(r.outcome == "completed" for r in recs)
+        # First finisher: halved rate while both run... both start at 0 and
+        # share fairly, so both need 2× solo; when one finishes the other
+        # has nothing left either (equal shares, equal sizes).
+        assert recs[0].duration_s == pytest.approx(2.0 * solo)
+        assert recs[1].duration_s == pytest.approx(2.0 * solo)
         assert engine.occupancy_invariants_ok()
 
-    def test_per_link_busy_intervals_never_overlap(self):
-        engine = _loaded_engine(n_apps=60, released=(1, 5, 9, 13))
-        res = get_policy("milp").plan(engine, engine.recent(40))
-        schedule = MigrationExecutor().execute(engine, res)
-        busy = {}
-        for it in schedule.items:
-            links = {l.link_id for l in it.step.move.old.links}
-            links |= {l.link_id for l in it.step.move.new.links}
-            for lid in links:
-                busy.setdefault(lid, []).append((it.start_s, it.end_s))
-        for intervals in busy.values():
-            intervals.sort()
-            for (s0, e0), (s1, _) in zip(intervals, intervals[1:]):
-                assert s1 >= e0 - 1e-9
+    def test_contention_release_speeds_up_survivor(self):
+        """Unequal overlap: a transfer that starts mid-flight of another
+        slows it down only for the overlap window (re-projection)."""
+        engine = _fleet_engine()
+        _force_place(engine, self._job(0), "pod0")
+        _force_place(engine, self._job(1), "pod1")
+        executor = MigrationExecutor(state_mb=128.0)
+        events = EventQueue()
+        executor.begin(engine, _fabricate(engine, [_move_to(engine, 0, "pod2")]),
+                       0.0, events)
+        solo_eta = executor.active[0].mbits_remaining / executor.active[0].rate_mbps
+        # Second plan lands halfway through the first transfer.
+        executor.begin(engine, _fabricate(engine, [_move_to(engine, 1, "pod2")]),
+                       solo_eta / 2.0, events)
+        _drain(engine, executor, events)
+        recs = {r.req_id: r for r in executor.records}
+        # First transfer: half at full rate + the rest at half rate → 1.5×.
+        assert recs[0].duration_s == pytest.approx(1.5 * solo_eta)
+        # Second: shares for its first half, full rate once 0 completes.
+        assert recs[1].duration_s == pytest.approx(1.5 * solo_eta)
         assert engine.occupancy_invariants_ok()
 
-    def test_swap_cycle_capacity_safe(self):
-        """Two full pods swapping jobs forces the stop-and-copy path; the
-        engine must never transiently exceed capacity."""
+    def test_double_booking_window(self):
+        """While a pre-copy transfer runs, BOTH source and destination hold
+        the app's usage, and the app is unavailable for re-planning."""
+        engine = _fleet_engine()
+        _force_place(engine, self._job(0), "pod0")
+        executor = MigrationExecutor()
+        events = EventQueue()
+        mv = _move_to(engine, 0, "pod2")
+        executor.begin(engine, _fabricate(engine, [mv]), 0.0, events)
+        src = mv.old.node.node_id
+        dst = mv.new.node.node_id
+        usage = engine.placed[0].request.app.device_usage
+        assert engine.node_used[src] == pytest.approx(usage)
+        assert engine.node_used[dst] == pytest.approx(usage)   # double-booked
+        assert engine.is_migrating(0)
+        assert engine.placed[0].state == STATE_MIGRATING
+        assert engine.occupancy_invariants_ok()
+        _drain(engine, executor, events)
+        assert engine.node_used[src] == pytest.approx(0.0)
+        assert engine.node_used[dst] == pytest.approx(usage)
+        assert engine.placed[0].state == STATE_PLACED
+        assert engine.occupancy_invariants_ok()
+
+    def test_destination_failure_rolls_back(self):
+        engine = _fleet_engine()
+        _force_place(engine, self._job(0), "pod0")
+        executor = MigrationExecutor()
+        events = EventQueue()
+        mv = _move_to(engine, 0, "pod2")
+        executor.begin(engine, _fabricate(engine, [mv]), 0.0, events)
+        assert 0 in executor.active
+        # Destination dies mid-copy.
+        engine.set_node_online(mv.new.node.node_id, False)
+        rolled_back, homeless = executor.on_node_failure(
+            engine, mv.new.node.node_id, 1.0, events)
+        assert rolled_back == [0] and homeless == []
+        assert engine.placed[0].candidate == mv.old            # still at source
+        assert engine.placed[0].state == STATE_PLACED
+        assert not engine.is_migrating(0)
+        assert engine.node_used[mv.new.node.node_id] == pytest.approx(0.0)
+        assert executor.records[-1].outcome == "aborted"
+        assert engine.occupancy_invariants_ok()
+
+    def test_swap_cycle_breaks_via_suspension(self):
+        """Two full pods swapping jobs can't double-book; the ledger breaks
+        the cycle with a stop-and-copy suspension and both still land."""
         pods = [PodSpec("a", 64, 2.0), PodSpec("b", 64, 0.5)]
         engine = PlacementEngine(build_fleet_topology(pods), all_sites=True)
         _force_place(engine, self._job(0, chips=64), "a")
         _force_place(engine, self._job(1, chips=64), "b")
         moves = [_move_to(engine, 0, "b"), _move_to(engine, 1, "a")]
-        schedule = MigrationExecutor().execute(engine, _fabricate(engine, moves))
-        assert {it.step.mode for it in schedule.items} == {"live", "stop_and_copy"}
+        executor = _execute_plan(engine, _fabricate(engine, moves))
+        modes = {r.req_id: r.mode for r in executor.records}
+        assert "stop_and_copy" in modes.values()
         assert engine.placed[0].candidate.node.site_id == "b"
         assert engine.placed[1].candidate.node.site_id == "a"
         assert engine.occupancy_invariants_ok()
+
+    def test_start_events_are_emitted(self):
+        engine = _fleet_engine()
+        _force_place(engine, self._job(0), "pod0")
+        events = EventQueue()
+        MigrationExecutor().begin(
+            engine, _fabricate(engine, [_move_to(engine, 0, "pod2")]),
+            5.0, events)
+        kinds = [type(e).__name__ for _, e in events]
+        assert "MigrationStart" in kinds and "MigrationComplete" in kinds
 
 
 # ------------------------------------------------------- failures and drift
@@ -253,11 +434,18 @@ class TestRuntimeEvents:
         engine.set_node_online("cloud0_gpu0", True)
         assert engine.offline_nodes == set()
 
-    def test_drift_rescales_link_usage(self):
-        spec = build_scenario("diurnal", seed=0, n_arrivals=200)
-        rt = spec.make_runtime(get_policy("greedy"))
-        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
-        assert tel.counters["drifts"] > 0
+    def test_demand_drift_still_rescales(self):
+        """The legacy step-drift event keeps working alongside streams."""
+        rng = np.random.default_rng(0)
+        reqs = sample_requests(_TOPO, 30, rng)
+        q = EventQueue()
+        for i, r in enumerate(reqs):
+            q.push(float(i), AppArrival(r))
+        q.push(100.0, DemandDrift(3, 2.0))
+        rt = FleetRuntime(_TOPO, get_policy("noop"),
+                          RuntimeConfig(reconfig_every=10 ** 9))
+        tel = rt.run(q)
+        assert tel.counters["drifts"] == 1
         assert rt.engine.occupancy_invariants_ok()
 
     def test_arrival_departure_lifecycle(self):
@@ -273,6 +461,134 @@ class TestRuntimeEvents:
         assert tel.counters["departures"] == 10
         assert len(rt.engine.placed) == 0
         assert len(tel.ticks) == 2  # every 5 admissions
+
+
+# ----------------------------------------------------- request streams
+class TestRequestStreams:
+    def test_rate_updates_rescale_footprint(self):
+        from repro.core.apps import NAS_FT, PlacementRequest, Requirement
+        req = PlacementRequest(0, NAS_FT, "input0",
+                               Requirement(r_upper=10_000.0, p_upper=10_000.0,
+                                           objective="response"))
+        curve = RateCurve(base=1.0, amplitude=0.8, period_s=100.0)
+        q = EventQueue()
+        q.push(0.0, AppArrival(req, rate_curve=curve))
+        q.push(25.0, RequestRateUpdate(every_s=25.0, horizon_s=60.0))
+        rt = FleetRuntime(_TOPO, get_policy("noop"),
+                          RuntimeConfig(reconfig_every=10 ** 9))
+        tel = rt.run(q)
+        assert tel.counters["rate_updates"] >= 1
+        placed = next(iter(rt.engine.placed.values()))
+        # At t=50 the sinusoid is back near base but t=25 peaked at 1.8×;
+        # the surviving footprint reflects the LAST sampled rate.
+        expected = req.app.bandwidth_mbps * rt._rates[req.req_id]
+        assert placed.request.app.bandwidth_mbps == pytest.approx(expected)
+        assert rt.engine.occupancy_invariants_ok()
+
+    def test_burst_segment_multiplies_rate(self):
+        curve = RateCurve(base=1.0, bursts=((10.0, 5.0, 3.0),))
+        assert curve.rate(9.9) == pytest.approx(1.0)
+        assert curve.rate(10.0) == pytest.approx(3.0)
+        assert curve.rate(15.0) == pytest.approx(1.0)
+
+    def test_migrating_apps_skip_rate_sampling(self):
+        """An app mid-transfer keeps its footprint until the copy lands."""
+        spec = build_scenario("diurnal-streams", seed=0, n_arrivals=250)
+        rt = spec.make_runtime(get_policy("greedy"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        assert tel.counters["rate_updates"] > 0
+        assert tel.counters["migrations_completed"] > 0
+        assert rt.engine.occupancy_invariants_ok()
+
+
+# ------------------------------------- in-flight collisions (acceptance)
+class TestInFlightCollisions:
+    def test_flash_crowd_collides_with_inflight_reconfig(self):
+        """≥1 tick sees arrivals admitted/rejected while migrations are in
+        flight, and the scenario's node failure aborts ≥1 transfer."""
+        spec = build_scenario("flash-crowd-during-reconfig", seed=0)
+        rt = spec.make_runtime(get_policy("greedy"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        c = tel.counters
+        assert c["arrivals_inflight"] >= 1
+        assert c["migrations_started"] > 0
+        assert rt.engine.occupancy_invariants_ok()
+
+    def test_destination_failure_mid_run_aborts_and_rolls_back(self):
+        """Deterministic end-to-end abort: run until a tick starts
+        transfers, then fail one active destination via the event queue."""
+        spec = build_scenario("paper-steady-state", seed=0, n_arrivals=220)
+        rt = spec.make_runtime(get_policy("milp"))
+        events = spec.event_queue()
+        # Drive manually so we can inject the failure mid-transfer.
+        from repro.fleet.telemetry import Telemetry
+        tel = Telemetry(spec.name, rt.policy.name, 0)
+        rt._events = events
+        injected = False
+        while events:
+            rt.now, ev = events.pop()
+            rt._dispatch(ev, events, tel)
+            if not injected and rt.executor.active:
+                victim = sorted(rt.executor.active)[0]
+                dest = rt.executor.active[victim].move.new.node.node_id
+                events.push(rt.now + 1e-3, NodeFailure(dest))
+                injected = True
+        assert injected
+        assert tel.counters["migrations_aborted"] >= 1
+        assert tel.counters["migration_rollbacks"] >= 1
+        assert rt.engine.occupancy_invariants_ok()
+
+    def test_site_outage_correlated_failures(self):
+        spec = build_scenario("site-outage", seed=0)
+        n_fail = sum(1 for _, e in spec.events if isinstance(e, NodeFailure))
+        n_rec = sum(1 for _, e in spec.events if isinstance(e, NodeRecovery))
+        assert n_fail == n_rec > 1            # the whole site flips together
+        rt = spec.make_runtime(get_policy("greedy"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        assert tel.counters["failures"] == n_fail
+        assert rt.engine.occupancy_invariants_ok()
+
+    def test_flapping_node_churns(self):
+        spec = build_scenario("flapping-node", seed=0)
+        rt = spec.make_runtime(get_policy("greedy"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        assert tel.counters["failures"] >= 2  # it flapped more than once
+        assert tel.counters["failures"] == tel.counters["recoveries"]
+        assert rt.engine.occupancy_invariants_ok()
+
+
+# ------------------------------------------------------- telemetry hygiene
+class TestTelemetryHygiene:
+    def test_rejected_ticks_do_not_pollute_means(self):
+        """The old 2.0 sentinel is gone: rejected ticks carry None and the
+        aggregate mean only reflects ticks that actually moved apps."""
+        spec = build_scenario("paper-steady-state", seed=0, n_arrivals=250)
+        rt = spec.make_runtime(get_policy("noop"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        assert all(t.mean_moved_ratio is None for t in tel.ticks)
+        assert tel.mean_moved_ratio is None
+        d = tel.to_dict()
+        assert d["summary"]["mean_moved_ratio"] is None
+
+    def test_moved_ticks_average_only_moves(self):
+        spec = build_scenario("paper-steady-state", seed=0, n_arrivals=250)
+        rt = spec.make_runtime(get_policy("milp"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        moved = [t for t in tel.ticks if t.n_moved]
+        assert moved and tel.mean_moved_ratio is not None
+        assert 1.5 < tel.mean_moved_ratio < 2.0
+        # weighted variant present in the JSON doc
+        assert "mean_moved_ratio_weighted" in tel.to_dict()["summary"]
+
+    def test_migration_records_in_dict(self):
+        spec = build_scenario("paper-steady-state", seed=0, n_arrivals=250)
+        rt = spec.make_runtime(get_policy("milp"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        d = tel.to_dict()
+        assert len(d["migrations"]) == tel.counters["migrations_completed"] + \
+            tel.counters["migrations_aborted"] + tel.counters["migrations_cancelled"]
+        for m in d["migrations"]:
+            assert m["t_end"] >= m["t_start"]
 
 
 # ------------------------------------------------------- scheduler wiring
