@@ -1,14 +1,21 @@
-"""Fleet-runtime benchmark: scenario × policy sweep of the continuous-
-operation simulator (`repro.fleet`).
+"""Fleet-runtime benchmark: scenario × policy × scale sweep of the
+continuous-operation simulator (`repro.fleet`).
 
 Each cell runs one scenario (paper-steady-state, diurnal-streams,
-flash-crowd[-during-reconfig], node/site-outage, flapping-node,
-hetero-expansion) under one reconfiguration policy (the paper's MILP vs
-greedy / hillclimb / GA / adaptive) and reports the paper's fig. 5
-quantities as time-series aggregates: moved ratio, mean moved-app
-satisfaction X+Y (raw and traffic-weighted), solver latency, plus the
-time-extended migration accounting (started / completed / aborted
-transfers, mean transfer duration, total downtime, in-flight collisions).
+flash-crowd[-during-reconfig], node/site-outage, backbone-cut,
+flapping-node, hetero-expansion) under one reconfiguration policy (the
+paper's MILP vs greedy / hillclimb / GA / adaptive, plus the planner
+subsystem's decomposed and rolling-horizon policies) and reports the
+paper's fig. 5 quantities as time-series aggregates: moved ratio, mean
+moved-app satisfaction X+Y (raw and traffic-weighted), solver latency,
+the time-extended migration accounting (started / completed / aborted
+transfers, durations, downtime, collisions) and the planner detail
+(regions solved, boundary crossings, per-region solve latency).
+
+``scale_sweep()`` grows the paper topology ×2/×4/×8 with window
+400×scale (the ROADMAP window sweep) — the rows record where the
+monolithic MILP's tick latency climbs over the adaptive solver budget
+while the decomposed planner's stays flat (the solver-latency cliff).
 
 ``run()`` prints the CSV rows for `benchmarks.run`; ``sweep()`` returns
 machine-readable dict rows for ``benchmarks.run --json`` → BENCH_fleet.json.
@@ -19,25 +26,41 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Sequence
 
-DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga", "adaptive")
+DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga", "adaptive",
+                    "decomposed", "horizon")
+
+#: The cliff sweep: cheaper policy set (no GA — its cost is orthogonal to
+#: topology scale) over the scenarios that exercise steady churn and the
+#: new link-cut path.
+SCALE_SWEEP_SCALES = (2, 4, 8)
+SCALE_SWEEP_POLICIES = ("milp", "decomposed", "horizon", "adaptive", "greedy")
 
 
 def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
           scenario_kwargs: Optional[Dict] = None) -> Dict:
     from repro.fleet import build_scenario, get_policy
 
-    spec = build_scenario(sc, seed=seed, **(scenario_kwargs or {}))
+    kwargs = dict(scenario_kwargs or {})
+    spec = build_scenario(sc, seed=seed, **kwargs)
     runtime = spec.make_runtime(get_policy(pol))
     t0 = time.perf_counter()
     tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
     wall = time.perf_counter() - t0
     d = tel.to_dict()
+    ticks = tel.ticks
     row = {
         "scenario": sc,
         "policy": pol,
         "seed": seed,
+        "scale": kwargs.get("scale", 1),
         "wall_s": round(wall, 3),
         "fingerprint": tel.fingerprint(),
+        # solver-latency cliff evidence: worst tick vs the adaptive budget
+        "max_solver_time_s": round(max((t.solver_time_s for t in ticks),
+                                       default=0.0), 6),
+        "max_region_solve_s": round(max((t.region_solve_max_s for t in ticks),
+                                        default=0.0), 6),
+        "boundary_crossings": sum(t.boundary_crossings for t in ticks),
         **d["counters"],
         **d["summary"],
     }
@@ -52,25 +75,53 @@ def sweep(
     policies: Sequence[str] = DEFAULT_POLICIES,
     seed: int = 0,
     with_ticks: bool = True,
+    scale: int = 1,
 ) -> List[Dict]:
-    """One row per (scenario, policy) cell."""
+    """One row per (scenario, policy) cell at one topology scale."""
     from repro.fleet import SCENARIOS
 
+    kwargs = {"scale": scale} if scale != 1 else {}
     rows: List[Dict] = []
     for sc in scenarios or sorted(SCENARIOS):
         for pol in policies:
-            rows.append(_cell(sc, pol, seed, with_ticks))
+            rows.append(_cell(sc, pol, seed, with_ticks, kwargs))
     return rows
 
 
-def smoke(seed: int = 0) -> List[Dict]:
-    """CI sanity slice: two fast cells with every moving part exercised
-    (request streams, in-flight migrations, adaptive switching)."""
+def scale_sweep(
+    scales: Sequence[int] = SCALE_SWEEP_SCALES,
+    policies: Sequence[str] = SCALE_SWEEP_POLICIES,
+    scenarios: Sequence[str] = ("paper-steady-state", "backbone-cut"),
+    seed: int = 0,
+    with_ticks: bool = True,
+) -> List[Dict]:
+    """Scenario × policy × scale rows with the big re-placement windows
+    (400×scale on paper-steady-state) that expose the monolithic MILP's
+    latency cliff."""
+    rows: List[Dict] = []
+    for scale in scales:
+        for sc in scenarios:
+            kwargs: Dict = {"scale": scale}
+            if sc == "paper-steady-state":
+                kwargs.update(window=400 * scale, reconfig_every=400 * scale)
+            for pol in policies:
+                rows.append(_cell(sc, pol, seed, with_ticks, kwargs))
+    return rows
+
+
+def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
+    """CI sanity slice: fast cells with every moving part exercised
+    (request streams, in-flight migrations, adaptive switching, the
+    decomposed planner at topology scale ×``scale``, a backbone cut)."""
     return [
         _cell("paper-steady-state", "greedy", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 250}),
         _cell("diurnal-streams", "adaptive", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 200}),
+        _cell("backbone-cut", "milp", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 200}),
+        _cell("paper-steady-state", "decomposed", seed, with_ticks=False,
+              scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
     ]
 
 

@@ -1,16 +1,16 @@
 """Benchmark driver — one section per paper table/claim.
 
   bench_paper    — fig. 5(a)/(b) + solver-time claims (§4.2)
-  bench_fleet    — fleet-runtime scenario × policy sweep (repro.fleet)
+  bench_fleet    — fleet-runtime scenario × policy × scale sweep (repro.fleet)
   bench_roofline — §Roofline table from the dry-run artifacts
   bench_kernels  — Pallas kernels (interpret) vs jnp refs
 
 Default mode prints ``name,key=value,...`` CSV rows for every section.
-``--json`` runs the fleet sweep only and writes machine-readable rows
-(one per scenario × policy cell, with per-tick and per-migration telemetry
-series) to ``BENCH_fleet.json``.  ``--smoke`` runs a 2-cell CI sanity
-slice (fast scenarios, request streams + adaptive policy) and exits
-non-zero on any failure.
+``--json`` runs the fleet sweep (scale ×1 scenario × policy grid, plus the
+×2/×4/×8 solver-scaling sweep with 400×scale windows) and writes
+machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a 4-cell
+CI sanity slice (request streams + adaptive policy, a backbone cut, the
+decomposed planner at ``--scale``) and exits non-zero on any failure.
 """
 
 import argparse
@@ -24,46 +24,60 @@ def _ratio(v):
 
 
 def run_json(out_path: str, seed: int) -> int:
-    from benchmarks.bench_fleet import DEFAULT_POLICIES, sweep
+    from benchmarks.bench_fleet import (
+        DEFAULT_POLICIES,
+        SCALE_SWEEP_POLICIES,
+        SCALE_SWEEP_SCALES,
+        scale_sweep,
+        sweep,
+    )
 
     rows = sweep(seed=seed)
+    scaled = scale_sweep(seed=seed)
     doc = {
         "benchmark": "fleet_runtime",
         "seed": seed,
         "policies": list(DEFAULT_POLICIES),
-        "rows": rows,
+        "scale_sweep": {"scales": list(SCALE_SWEEP_SCALES),
+                        "policies": list(SCALE_SWEEP_POLICIES)},
+        "rows": rows + scaled,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
-    print(f"wrote {out_path}: {len(rows)} scenario×policy rows")
+    print(f"wrote {out_path}: {len(rows)} scale-1 rows + "
+          f"{len(scaled)} scale-sweep rows")
     ok = 0
-    for r in rows:
+    for r in rows + scaled:
         flag = ""
-        if r["scenario"] == "paper-steady-state" and r["policy"] == "milp":
+        if (r["scenario"] == "paper-steady-state" and r["policy"] == "milp"
+                and r["scale"] == 1):
             # Paper fig. 5(b): moved-app mean X+Y ≈ 1.96.
             in_env = (r["mean_moved_ratio"] is not None
                       and abs(r["mean_moved_ratio"] - 1.96) <= 0.15)
             flag = f"  [paper envelope ±0.15: {'OK' if in_env else 'MISS'}]"
             ok |= 0 if in_env else 1
-        print(f"  {r['scenario']:28s} {r['policy']:10s} "
+        print(f"  {r['scenario']:28s} {r['policy']:10s} x{r['scale']:<2d} "
               f"ratio={_ratio(r['mean_moved_ratio'])} "
               f"ratio_w={_ratio(r['mean_moved_ratio_weighted'])} "
               f"moves={r['moves']:4d} "
               f"migs={r['migrations_completed']:3d}/{r['migrations_started']:3d} "
               f"abort={r['migrations_aborted']:2d} "
+              f"solver_max={r['max_solver_time_s']:7.3f}s "
               f"gain={r['total_gain']:8.3f} wall={r['wall_s']:.2f}s{flag}")
     return ok
 
 
-def run_smoke(seed: int) -> int:
+def run_smoke(seed: int, scale: int) -> int:
     from benchmarks.bench_fleet import smoke
 
-    rows = smoke(seed=seed)
+    rows = smoke(seed=seed, scale=scale)
     bad = 0
     for r in rows:
         ok = r["admitted"] > 0 and r["ticks"] > 0
+        if r["scenario"] == "backbone-cut":
+            ok = ok and r["link_failures"] > 0
         bad |= 0 if ok else 1
-        print(f"  {r['scenario']:28s} {r['policy']:10s} "
+        print(f"  {r['scenario']:28s} {r['policy']:10s} x{r['scale']:<2d} "
               f"admitted={r['admitted']} ticks={r['ticks']} "
               f"migs={r['migrations_completed']} "
               f"ratio={_ratio(r['mean_moved_ratio'])} "
@@ -102,9 +116,11 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="output path for --json (default: BENCH_fleet.json)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=int, default=2,
+                    help="topology scale for the --smoke decomposed cell")
     args = ap.parse_args()
     if args.smoke:
-        sys.exit(run_smoke(args.seed))
+        sys.exit(run_smoke(args.seed, args.scale))
     sys.exit(run_json(args.out, args.seed) if args.json else run_csv(args.seed))
 
 

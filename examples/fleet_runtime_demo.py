@@ -4,8 +4,9 @@
      flash-crowd-during-reconfig story: a forced reconfiguration's
      migrations are still copying state when a flash crowd lands and a
      node fails, aborting the transfers headed to it;
-  2. drive it through the discrete-event runtime under two policies —
-     the paper's MILP vs a no-op control — and
+  2. drive it through the discrete-event runtime under three policies —
+     the paper's MILP, the decomposed planner (fleet.planner) and a
+     no-op control — and
   3. print the per-tick telemetry so the adaptation is visible: moved
      apps, satisfaction of moved apps (fig. 5(b) quantity, raw and
      traffic-weighted), transfers started / in flight, utilization —
@@ -37,7 +38,7 @@ def main():
         raise SystemExit(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
 
     print(f"scenario: {name}\n")
-    for policy in ("milp", "noop"):
+    for policy in ("milp", "decomposed", "noop"):
         tel = run_one(name, policy)
         c = tel.counters
         print(f"--- policy = {policy} ---")

@@ -35,6 +35,11 @@ class AppVars:
     current_node_id: Optional[str] = None  # where it runs now (reconfig only)
     r_before: Optional[float] = None
     p_before: Optional[float] = None
+    # Per-candidate move penalty (aligned with ``candidates``); when set it
+    # REPLACES the builder's scalar ``move_penalty`` for off-current
+    # candidates — migration-aware cost models price each move's transfer
+    # time individually.
+    move_penalties: Optional[Sequence[float]] = None
 
 
 @dataclasses.dataclass
@@ -88,8 +93,9 @@ def build_joint_milp(
             raise ValueError("reconfig objective needs r_before/p_before")
         for j, cand in enumerate(av.candidates):
             coef = cand.response_s / rb + cand.price / pb
-            if move_penalty and cand.node.node_id != av.current_node_id:
-                coef += move_penalty
+            if cand.node.node_id != av.current_node_id and av.current_node_id is not None:
+                coef += (av.move_penalties[j] if av.move_penalties is not None
+                         else move_penalty)
             c[offsets[i] + j] = coef
 
     # Equality: each app picks exactly one candidate.

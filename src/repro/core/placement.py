@@ -69,6 +69,16 @@ class PlacementEngine:
         self.placement_order: List[int] = []   # req_ids in admission order
         self.rejected: List[PlacementRequest] = []
         self.offline_nodes: Set[str] = set()   # failed nodes (fleet runtime)
+        self.offline_links: Set[str] = set()   # cut links (fleet runtime)
+        # Bandwidth debited against links by active migration transfers
+        # (fleet executor): couples transfer traffic to admission control.
+        self.link_reserved: Dict[str, float] = {l: 0.0 for l in topo.links}
+        # Feasible-candidate cache (requests are frozen/hashable; the set
+        # only depends on the request + node/link online state, so it is
+        # flushed whenever that state flips).  Large-window policies call
+        # `enumerate_feasible` for every window app every tick — without
+        # the cache that enumeration dominates plan time at scale ×4/×8.
+        self._cand_cache: Dict[PlacementRequest, List[Candidate]] = {}
         # In-flight migrations (fleet runtime): destination reservation per
         # migrating app.  While a pre-copy transfer runs, BOTH the source
         # candidate and the destination reservation are occupied (the
@@ -88,6 +98,19 @@ class PlacementEngine:
             self.offline_nodes.discard(node_id)
         else:
             self.offline_nodes.add(node_id)
+        self._cand_cache.clear()
+
+    def set_link_online(self, link_id: str, online: bool) -> None:
+        """Mark a link cut/repaired.  Offline links disqualify every
+        candidate path crossing them; evicting the apps already routed over
+        the link is the caller's job (`fleet.runtime`)."""
+        if link_id not in self.topo.links:
+            raise KeyError(f"unknown link {link_id}")
+        if online:
+            self.offline_links.discard(link_id)
+        else:
+            self.offline_links.add(link_id)
+        self._cand_cache.clear()
 
     def apps_on_node(self, node_id: str) -> List[int]:
         """req_ids whose *source* copy lives on ``node_id`` (admission
@@ -96,6 +119,15 @@ class PlacementEngine:
         return [r for r in self.placement_order
                 if self.placed[r].candidate.node.node_id == node_id
                 and r not in self.suspended]
+
+    def apps_on_link(self, link_id: str) -> List[int]:
+        """req_ids whose *live* path crosses ``link_id`` (admission order),
+        skipping suspended apps (no live path) and mid-migration apps (the
+        executor's failure hooks deal with their transfers)."""
+        return [r for r in self.placement_order
+                if not self.is_migrating(r)
+                and any(l.link_id == link_id
+                        for l in self.placed[r].candidate.links)]
 
     def migrations_to_node(self, node_id: str) -> List[int]:
         """req_ids with an in-flight destination reservation on ``node_id``."""
@@ -107,7 +139,10 @@ class PlacementEngine:
         return self.topo.nodes[node_id].capacity - self.node_used[node_id]
 
     def link_remaining(self, link_id: str) -> float:
-        return self.topo.links[link_id].bandwidth_mbps - self.link_used[link_id]
+        """Residual link bandwidth net of app traffic AND migration
+        reservations (bandwidth-reserving transfers)."""
+        return (self.topo.links[link_id].bandwidth_mbps
+                - self.link_used[link_id] - self.link_reserved[link_id])
 
     def fits(self, request: PlacementRequest, cand: Candidate) -> bool:
         if cand.node.node_id in self.offline_nodes:
@@ -115,9 +150,31 @@ class PlacementEngine:
         if self.node_remaining(cand.node.node_id) < request.app.device_usage - 1e-9:
             return False
         for link in cand.links:
+            if link.link_id in self.offline_links:
+                return False
             if self.link_remaining(link.link_id) < request.app.bandwidth_mbps - 1e-9:
                 return False
         return True
+
+    def reserve_link_bandwidth(
+        self, link_ids: Sequence[str], mbps: float
+    ) -> Dict[str, float]:
+        """Debit up to ``mbps`` of transfer bandwidth on each link (clamped
+        to the current residual, never negative) so in-flight migrations
+        compete with app traffic for admission.  Returns the per-link
+        amounts actually reserved — pass the dict back to
+        `release_link_bandwidth` on commit/abort/cancel."""
+        out: Dict[str, float] = {}
+        for lid in link_ids:
+            amt = min(mbps, max(self.link_remaining(lid), 0.0))
+            if amt > 0.0:
+                self.link_reserved[lid] += amt
+                out[lid] = amt
+        return out
+
+    def release_link_bandwidth(self, reserved: Dict[str, float]) -> None:
+        for lid, amt in reserved.items():
+            self.link_reserved[lid] = max(self.link_reserved[lid] - amt, 0.0)
 
     def _occupy(self, request: PlacementRequest, cand: Candidate, sign: float) -> None:
         self.node_used[cand.node.node_id] += sign * request.app.device_usage
@@ -126,12 +183,20 @@ class PlacementEngine:
 
     # ----------------------------------------------------------- placement
     def enumerate_feasible(self, request: PlacementRequest) -> List[Candidate]:
-        """Constraints (2)–(3) + node-online filter, *ignoring* capacity —
-        the candidate set reconfiguration policies optimize over."""
-        cands = enumerate_candidates(self.topo, request, self.allow_cpu_fallback,
-                                     all_sites=self.all_sites)
-        cands = filter_candidates(request, cands)
-        return [c for c in cands if c.node.node_id not in self.offline_nodes]
+        """Constraints (2)–(3) + node/link-online filter, *ignoring*
+        capacity — the candidate set reconfiguration policies optimize
+        over.  Cached per request until the online state changes; callers
+        get a fresh list (candidates themselves are immutable)."""
+        cached = self._cand_cache.get(request)
+        if cached is None:
+            cands = enumerate_candidates(self.topo, request, self.allow_cpu_fallback,
+                                         all_sites=self.all_sites)
+            cands = filter_candidates(request, cands)
+            cached = [c for c in cands
+                      if c.node.node_id not in self.offline_nodes
+                      and not any(l.link_id in self.offline_links for l in c.links)]
+            self._cand_cache[request] = cached
+        return list(cached)
 
     def feasible_candidates(self, request: PlacementRequest) -> List[Candidate]:
         """Constraints (2)–(5) applied to the raw candidate set."""
@@ -143,6 +208,7 @@ class PlacementEngine:
         cands = self.feasible_candidates(request)
         if not cands:
             self.rejected.append(request)
+            self._cand_cache.pop(request, None)   # dead request: no re-plan
             return None
         if request.requirement.objective == OBJ_RESPONSE:
             key = lambda c: (c.response_s, c.price, c.node.node_id)
@@ -156,6 +222,7 @@ class PlacementEngine:
         cands = self.feasible_candidates(request)
         if not cands:
             self.rejected.append(request)
+            self._cand_cache.pop(request, None)
             return None
         # Single-app window: encode objective metric via r/p_before = 1 and
         # zeroing the other term by scaling; simplest is direct coefficients.
@@ -172,6 +239,7 @@ class PlacementEngine:
         res = solve_milp(problem, backend=backend)
         if not res.ok:
             self.rejected.append(request)
+            self._cand_cache.pop(request, None)
             return None
         choice = index.decode(res.x)[0]
         return self.commit(request, cands[choice])
@@ -269,6 +337,7 @@ class PlacementEngine:
             self._occupy(app.request, dest, -1.0)
         self.placement_order.remove(req_id)
         self.rejected.append(app.request)
+        self._cand_cache.pop(app.request, None)
 
     # ----------------------------------------------------------- migration
     def apply_move(self, req_id: int, new_cand: Candidate) -> PlacedApp:
@@ -298,6 +367,7 @@ class PlacementEngine:
         if dest is not None:
             self._occupy(app.request, dest, -1.0)
         self.placement_order.remove(req_id)
+        self._cand_cache.pop(app.request, None)
 
     def free_capacity_excluding(
         self, window: Sequence[int]
@@ -347,5 +417,10 @@ class PlacementEngine:
         ok_n = all(abs(node[k] - self.node_used[k]) < 1e-6 for k in node)
         ok_l = all(abs(link[k] - self.link_used[k]) < 1e-6 for k in link)
         cap_n = all(self.node_used[k] <= self.topo.nodes[k].capacity + 1e-6 for k in node)
-        cap_l = all(self.link_used[k] <= self.topo.links[k].bandwidth_mbps + 1e-6 for k in link)
-        return ok_n and ok_l and cap_n and cap_l
+        cap_l = all(
+            self.link_used[k] + self.link_reserved[k]
+            <= self.topo.links[k].bandwidth_mbps + 1e-6
+            for k in link
+        )
+        res_l = all(v >= -1e-6 for v in self.link_reserved.values())
+        return ok_n and ok_l and cap_n and cap_l and res_l

@@ -80,12 +80,17 @@ class Reconfigurator:
         accept_threshold: float = 0.0,
         backend: str = "auto",
         time_limit_s: float = 60.0,
+        cost_model=None,
     ) -> None:
         self.engine = engine
         self.move_penalty = move_penalty
         self.accept_threshold = accept_threshold
         self.backend = backend
         self.time_limit_s = time_limit_s
+        # Optional migration-aware cost model (duck-typed: must expose
+        # ``penalty(old_cand, new_cand, base)``) pricing each candidate
+        # move's transfer time into its MILP coefficient.
+        self.cost_model = cost_model
 
     # -------------------------------------------------------------- window
     def _window_app_vars(
@@ -101,6 +106,10 @@ class Reconfigurator:
             # bounds at admission and its node is online), so the MILP can
             # never be infeasible.
             cands = self.engine.enumerate_feasible(placed.request)
+            pens = None
+            if self.cost_model is not None:
+                pens = [self.cost_model.penalty(placed.candidate, c, self.move_penalty)
+                        for c in cands]
             out.append(
                 AppVars(
                     request=placed.request,
@@ -108,6 +117,7 @@ class Reconfigurator:
                     current_node_id=placed.candidate.node.node_id,
                     r_before=placed.response_s / w,
                     p_before=placed.price / w,
+                    move_penalties=pens,
                 )
             )
         return out

@@ -184,8 +184,20 @@ def build_paper_topology(
     n_carrier: int = 20,
     n_user: int = 60,
     n_input: int = 300,
+    scale: int = 1,
 ) -> Topology:
-    """The evaluation topology of paper §4.1.2 (defaults = paper values)."""
+    """The evaluation topology of paper §4.1.2 (defaults = paper values).
+
+    ``scale`` multiplies every tier count uniformly (the ROADMAP's
+    ×2/×4/×8 solver-scaling sweep): the tree keeps the paper's fan-out and
+    link pricing, it just has ``scale×`` more cloud subtrees.
+    """
+    if scale < 1:
+        raise ValueError("scale must be >= 1")
+    if scale != 1:
+        n_cloud, n_carrier, n_user, n_input = (
+            n_cloud * scale, n_carrier * scale, n_user * scale, n_input * scale,
+        )
     if n_carrier % n_cloud or n_user % n_carrier or n_input % n_user:
         raise ValueError("tier sizes must nest evenly for round-robin wiring")
     sites: List[Site] = []

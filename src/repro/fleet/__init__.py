@@ -12,8 +12,11 @@ service over a changing fleet, with load-bearing simulated time).
               link bandwidth over sim time, double-book source+destination,
               and roll back on destination failure
   scenarios — paper-steady-state, diurnal-streams, flash-crowd(+during-
-              reconfig), node-outage, site-outage, flapping-node,
-              hetero-expansion
+              reconfig), node-outage, site-outage, backbone-cut,
+              flapping-node, hetero-expansion — all scalable ×2/×4/×8
+  planner   — scalable planning subsystem: topology partitioner,
+              decomposed per-region MILPs + boundary arbitration,
+              rolling-horizon forecasting, migration-aware move pricing
   telemetry — per-tick + per-migration time series, deterministic
               fingerprints, NaN-safe satisfaction aggregation
 """
@@ -24,6 +27,8 @@ from .events import (  # noqa: F401
     DemandDrift,
     Event,
     EventQueue,
+    LinkFailure,
+    LinkRecovery,
     MigrationComplete,
     MigrationStart,
     NodeFailure,
@@ -50,6 +55,20 @@ from .policies import (  # noqa: F401
     ReconfigPolicy,
     get_policy,
 )
+from .planner import (  # noqa: F401  (also registers decomposed/horizon)
+    DecomposedPolicy,
+    DemandForecaster,
+    HorizonPolicy,
+    MigrationCostModel,
+    Partition,
+    Region,
+    partition_topology,
+)
 from .runtime import FleetRuntime, RuntimeConfig  # noqa: F401
 from .scenarios import SCENARIOS, ScenarioSpec, build_scenario  # noqa: F401
-from .telemetry import MigrationRecord, Telemetry, TickRecord  # noqa: F401
+from .telemetry import (  # noqa: F401
+    MigrationRecord,
+    PlanStats,
+    Telemetry,
+    TickRecord,
+)

@@ -96,6 +96,21 @@ class NodeRecovery(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class LinkFailure(Event):
+    """A network link is cut (backbone fibre cut / uplink outage).  Every
+    candidate path crossing it becomes infeasible, in-flight transfers over
+    it are aborted with source rollback, and apps whose live path uses it
+    are evicted and re-placed (or lost)."""
+
+    link_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRecovery(Event):
+    link_id: str
+
+
+@dataclasses.dataclass(frozen=True)
 class ReconfigTick(Event):
     """Forced reconfiguration (scenarios use it for time-driven ticks; the
     runtime also self-triggers every ``reconfig_every`` admissions)."""

@@ -20,9 +20,15 @@ transfers over the topology's links:
   transfer's remaining bytes are re-projected and a fresh
   `MigrationComplete` generation is scheduled; stale completions are
   ignored;
+* each active transfer **reserves** ``reserve_mbps`` of bandwidth on every
+  link it crosses (clamped to the residual) against the engine's admission
+  control — a saturating migration can reject an arrival it would
+  previously have admitted, coupling migration cost to admission;
 * a **destination node failure** aborts the transfers headed there: a
   pre-copy move rolls back to its source, a suspended app must be
-  re-placed by the runtime (or is lost).
+  re-placed by the runtime (or is lost).  A **link cut**
+  (`on_link_failure`) aborts every transfer crossing the dead link the
+  same way, with source rollback for pre-copy moves.
 
 The old executor's instantaneous semantics survive as `InstantExecutor`
 for the synchronous `FleetScheduler` path (`core.cluster`).
@@ -61,6 +67,9 @@ class Transfer:
     last_update_s: float
     rate_mbps: float = 0.0
     gen: int = -1                   # matches the live MigrationComplete
+    # Per-link bandwidth debited against the engine's admission control
+    # while this transfer runs (released on commit/abort/cancel).
+    reserved: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def req_id(self) -> int:
@@ -82,8 +91,12 @@ class MigrationExecutor:
     `suspend`) and schedules its own `MigrationComplete` events.
     """
 
-    def __init__(self, state_mb: float = 64.0):
+    def __init__(self, state_mb: float = 64.0, reserve_mbps: float = 2.0):
         self.state_mb = state_mb
+        # Bandwidth each active transfer debits against admission control
+        # on every link it crosses (clamped to the residual).  0 restores
+        # the old unreserved semantics.
+        self.reserve_mbps = reserve_mbps
         self.active: Dict[int, Transfer] = {}
         self.waiting: List[Move] = []        # accepted, not yet transferring
         self.records: List[MigrationRecord] = []
@@ -143,6 +156,7 @@ class MigrationExecutor:
             return None
         self._advance(now)
         del self.active[req_id]
+        engine.release_link_bandwidth(tr.reserved)
         engine.commit_move(req_id)
         duration = now - tr.started_s
         # Pre-copy pauses for one dirty-page round (~5 % of the copy);
@@ -178,6 +192,7 @@ class MigrationExecutor:
             if dest != node_id and src != node_id:
                 continue
             del self.active[req_id]
+            engine.release_link_bandwidth(tr.reserved)
             engine.abort_move(req_id)
             # A suspended (stop-and-copy) app served nothing for the whole
             # transfer; a pre-copy app kept running on its source.
@@ -198,6 +213,45 @@ class MigrationExecutor:
         self._pump(engine, now, events)
         return rolled_back, homeless
 
+    def on_link_failure(
+        self,
+        engine: PlacementEngine,
+        link_id: str,
+        now: float,
+        events: EventQueue,
+    ) -> Tuple[List[int], List[int]]:
+        """Abort transfers crossing a cut link (the uplink-cut analogue of
+        `on_node_failure`).
+
+        Returns ``(rolled_back, homeless)``: pre-copy transfers roll back
+        to their source (which may itself now be unreachable — the
+        runtime's `apps_on_link` eviction pass picks those up), suspended
+        apps must be re-placed or dropped by the runtime."""
+        self._advance(now)
+        rolled_back: List[int] = []
+        homeless: List[int] = []
+        for req_id in sorted(self.active):
+            tr = self.active[req_id]
+            if link_id not in tr.links:
+                continue
+            del self.active[req_id]
+            engine.release_link_bandwidth(tr.reserved)
+            engine.abort_move(req_id)
+            down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
+            self.records.append(MigrationRecord(
+                req_id, tr.mode, "aborted", tr.started_s, now, down))
+            if req_id in engine.suspended:
+                homeless.append(req_id)
+            else:
+                rolled_back.append(req_id)
+        for mv in list(self.waiting):
+            if link_id in _transfer_links(mv):
+                self.waiting.remove(mv)
+                self._resolve_waiting_drop(engine, mv, homeless)
+        self._reschedule(engine, now, events)
+        self._pump(engine, now, events)
+        return rolled_back, homeless
+
     def cancel(self, engine: PlacementEngine, req_id: int, now: float,
                events: EventQueue) -> bool:
         """Withdraw ``req_id`` from the ledger (departure mid-migration).
@@ -206,6 +260,7 @@ class MigrationExecutor:
         touched = tr is not None
         if tr is not None:
             self._advance(now)
+            engine.release_link_bandwidth(tr.reserved)
             down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
             self.records.append(MigrationRecord(
                 req_id, tr.mode, "cancelled", tr.started_s, now, down))
@@ -274,6 +329,8 @@ class MigrationExecutor:
             started_s=now,
             last_update_s=now,
         )
+        if self.reserve_mbps > 0.0:
+            tr.reserved = engine.reserve_link_bandwidth(tr.links, self.reserve_mbps)
         self.active[mv.req_id] = tr
         events.push(now, MigrationStart(mv.req_id, mode))
 

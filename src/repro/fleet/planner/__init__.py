@@ -1,0 +1,32 @@
+"""Scalable planning subsystem: decomposed + rolling-horizon reconfiguration.
+
+The paper's joint MILP re-optimizes the whole fleet at once; this package
+makes the planning step tractable at topology scale ×2/×4/×8 without
+giving up the satisfaction objective:
+
+  partition       — cut the site tree into per-subtree (or k-way) regions
+                    with boundary-link budgets
+  decomposed      — one small MILP per region + a greedy coordination pass
+                    arbitrating cross-boundary moves, merged into one
+                    conflict-free `ReconfigResult`
+  forecast        — sample each app's `RateCurve` ahead of the clock
+                    (peak/mean over a rolling horizon) + forecast-error
+                    scoring
+  horizon         — rolling-horizon policy wrapper planning against the
+                    forecast instead of the instantaneous snapshot
+  migration_cost  — price each candidate move's transfer time (executor
+                    ledger contention included) into the move penalty
+
+Importing this package registers the ``decomposed`` and ``horizon``
+policies in `fleet.policies.POLICIES`; `repro.fleet` imports it eagerly.
+"""
+
+from ..policies import POLICIES
+from .decomposed import DecomposedPolicy  # noqa: F401
+from .forecast import DemandForecaster, Forecast  # noqa: F401
+from .horizon import HorizonPolicy  # noqa: F401
+from .migration_cost import MigrationCostModel  # noqa: F401
+from .partition import Partition, Region, partition_topology  # noqa: F401
+
+POLICIES.setdefault(DecomposedPolicy.name, DecomposedPolicy)
+POLICIES.setdefault(HorizonPolicy.name, HorizonPolicy)

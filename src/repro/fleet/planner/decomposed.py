@@ -1,0 +1,248 @@
+"""Decomposed reconfiguration: partition → solve → coordinate → merge.
+
+The monolithic MILP re-optimizes the whole window jointly; its dense
+constraint matrix grows with window × topology and falls off a latency
+cliff right where the north-star begins.  The decomposed planner exploits
+the tree structure instead:
+
+1. **partition** the site tree into regions (`planner.partition`) — on the
+   paper topology one region per cloud subtree, which block-diagonalizes
+   the MILP *exactly* (an app's whole uplink chain lives in one subtree);
+2. **solve** one small MILP per region over the window apps currently
+   homed there, against the *live residual* capacity pool (regions are
+   processed in deterministic order against one shared shadow ledger, so
+   later regions see earlier regions' tentative claims — Gauss–Seidel
+   block descent).  Only apps with at least one strictly-improving
+   candidate enter the MILP (*movers*); the rest stay pinned, which keeps
+   the regional problems proportional to the churn, not the window.
+   Boundary links get only ``boundary_budget_frac`` of their residual per
+   regional solve so the first region cannot hog a shared uplink;
+3. **coordinate**: one cheap greedy arbitration sweep over the full
+   candidate lists lets apps cross region boundaries (and pick up any
+   in-region improvement the budgets blocked) wherever the shared shadow
+   still fits — this is where cross-region moves are admitted one by one
+   instead of through a joint model;
+4. **merge** the per-region assignments into a single `ReconfigResult`.
+   Every occupy/fit went through the one shadow ledger, so the merged
+   plan can never double-book a node or link (the property tests assert
+   exactly this against `free_capacity_excluding`).
+
+On the paper topology at scale ×1 the regional MILPs partition the
+monolithic problem into its natural blocks and the result matches the
+exact solver; at scale ×4/×8 the regional problems stay constant-size
+while the monolithic matrix explodes — see ``BENCH_fleet.json``'s scale
+sweep for the recorded cliff.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from repro.core.lp import AppVars, build_joint_milp
+from repro.core.placement import PlacementEngine
+from repro.core.reconfig import ReconfigResult
+from repro.core.satisfaction import normalize_weights
+from repro.core.solver import solve_milp
+from repro.core.topology import Topology
+
+from ..policies import (
+    ReconfigPolicy,
+    _result_from_assignment,
+    _Shadow,
+    _window_context,
+    _WindowApp,
+)
+from ..telemetry import PlanStats
+from .partition import Partition, partition_topology
+
+
+class DecomposedPolicy(ReconfigPolicy):
+    """Per-region MILPs + boundary arbitration behind the policy interface."""
+
+    name = "decomposed"
+
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
+                 cost_model=None, max_region_nodes: Optional[int] = None,
+                 k_regions: Optional[int] = None,
+                 boundary_budget_frac: float = 0.5,
+                 coordinate: bool = True,
+                 backend: str = "auto", time_limit_s: float = 10.0):
+        super().__init__(move_penalty, accept_threshold, cost_model)
+        self.max_region_nodes = max_region_nodes
+        self.k_regions = k_regions
+        self.boundary_budget_frac = boundary_budget_frac
+        self.coordinate = coordinate
+        self.backend = backend
+        self.time_limit_s = time_limit_s
+        # Last (topo, partition) pair — topologies are immutable, and a
+        # policy plans against one fleet at a time, so one slot suffices
+        # (a dict keyed by id() would pin every topology ever seen).
+        self._partition: Optional[Partition] = None
+
+    # -------------------------------------------------------------- partition
+    def partition_for(self, topo: Topology) -> Partition:
+        if self._partition is None or self._partition.topo is not topo:
+            self._partition = partition_topology(
+                topo, self.max_region_nodes, self.k_regions)
+        return self._partition
+
+    # ------------------------------------------------------------------- plan
+    def plan(self, engine: PlacementEngine, window: Sequence[int],
+             weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
+        t0 = time.perf_counter()
+        ctx = _window_context(engine, window)
+        norm = normalize_weights(window, weights) if weights is not None else None
+        part = self.partition_for(engine.topo)
+
+        # One shared shadow ledger = live residual capacity (window apps
+        # charged at their current homes).  Every tentative claim below
+        # goes through it, which is what makes the merge conflict-free.
+        shadow = _Shadow(*engine.free_capacity_excluding(window))
+        for wa in ctx:
+            shadow.occupy(wa.placed.request.app,
+                          wa.candidates[wa.current_idx], +1.0)
+        assignment = [wa.current_idx for wa in ctx]
+
+        # Movers: apps with ≥1 strictly-improving candidate.  Only they
+        # enter the regional MILPs — the rest stay pinned, so the solve
+        # size tracks churn rather than window size.
+        movers: List[bool] = []
+        for wa in ctx:
+            w = norm[wa.placed.req_id] if norm else 1.0
+            cur = self._cost(wa, wa.current_idx, w)
+            movers.append(any(
+                self._cost(wa, j, w) < cur - 1e-12
+                for j in range(len(wa.candidates)) if j != wa.current_idx))
+
+        groups: Dict[str, List[int]] = {}
+        for i, wa in enumerate(ctx):
+            rid = part.region_of_node[wa.placed.candidate.node.node_id]
+            groups.setdefault(rid, []).append(i)
+
+        region_solve_s: List[float] = []
+        for region in part.regions:
+            idxs = [i for i in groups.get(region.region_id, ()) if movers[i]]
+            if not idxs:
+                continue
+            rt0 = time.perf_counter()
+            self._solve_region(ctx, idxs, region, part, shadow, norm, assignment)
+            region_solve_s.append(time.perf_counter() - rt0)
+
+        # Without boundary links every candidate lives in its app's home
+        # region (a crossing path would need a crossing link), so the
+        # arbitration sweep is provably a no-op on top of the region-MILP
+        # optima — skip it.
+        crossings = 0
+        if self.coordinate and part.boundary_links:
+            crossings = self._coordinate(ctx, part, shadow, norm, assignment)
+
+        self.last_plan_stats = PlanStats(
+            n_regions=len(region_solve_s),
+            boundary_crossings=crossings,
+            region_solve_s=region_solve_s,
+        )
+        return _result_from_assignment(window, ctx, assignment,
+                                       self.accept_threshold, t0, norm)
+
+    # ----------------------------------------------------------- region solve
+    def _solve_region(
+        self,
+        ctx: List[_WindowApp],
+        idxs: List[int],
+        region,
+        part: Partition,
+        shadow: _Shadow,
+        norm: Optional[Dict[int, float]],
+        assignment: List[int],
+    ) -> None:
+        """Joint MILP over the region's apps, candidates restricted to
+        in-region nodes, against the shared shadow residual (boundary links
+        budgeted).  On solver failure the current assignment stands."""
+        for i in idxs:   # lift the region's apps out of the shared pool
+            shadow.occupy(ctx[i].placed.request.app,
+                          ctx[i].candidates[assignment[i]], -1.0)
+        app_vars: List[AppVars] = []
+        keeps: List[List[int]] = []
+        for i in idxs:
+            wa = ctx[i]
+            keep = [j for j, c in enumerate(wa.candidates)
+                    if part.region_of_node[c.node.node_id] == region.region_id
+                    or j == assignment[i]]   # live candidate always in play
+            cands = [wa.candidates[j] for j in keep]
+            w = norm[wa.placed.req_id] if norm else 1.0
+            app_vars.append(AppVars(
+                request=wa.placed.request,
+                candidates=cands,
+                current_node_id=wa.placed.candidate.node.node_id,
+                r_before=wa.placed.response_s / w,
+                p_before=wa.placed.price / w,
+                move_penalties=[self._move_penalty(wa, c) for c in cands],
+            ))
+            keeps.append(keep)
+
+        # Boundary links offer only a budgeted share of their residual —
+        # but never less than what the region's *live* assignment needs,
+        # so the do-nothing solution stays feasible (a budget can defer
+        # new cross-boundary traffic, not evict existing traffic).
+        live_need: Dict[str, float] = {}
+        for i in idxs:
+            wa = ctx[i]
+            for l in wa.candidates[assignment[i]].links:
+                live_need[l.link_id] = (live_need.get(l.link_id, 0.0)
+                                        + wa.placed.request.app.bandwidth_mbps)
+        node_cap: Dict[str, float] = {}
+        link_cap: Dict[str, float] = {}
+        for av in app_vars:
+            for cand in av.candidates:
+                node_cap[cand.node.node_id] = shadow.node[cand.node.node_id]
+                for l in cand.links:
+                    cap = shadow.link[l.link_id]
+                    if l.link_id not in region.interior_links:
+                        cap = max(cap * self.boundary_budget_frac,
+                                  live_need.get(l.link_id, 0.0))
+                    link_cap[l.link_id] = cap
+
+        problem, index = build_joint_milp(app_vars, node_cap, link_cap)
+        res = solve_milp(problem, backend=self.backend,
+                         time_limit_s=self.time_limit_s)
+        if res.ok:
+            for pos, choice in enumerate(index.decode(res.x)):
+                assignment[idxs[pos]] = keeps[pos][choice]
+        for i in idxs:   # re-occupy the (possibly new) choices
+            shadow.occupy(ctx[i].placed.request.app,
+                          ctx[i].candidates[assignment[i]], +1.0)
+
+    # ------------------------------------------------------------ coordinate
+    def _coordinate(
+        self,
+        ctx: List[_WindowApp],
+        part: Partition,
+        shadow: _Shadow,
+        norm: Optional[Dict[int, float]],
+        assignment: List[int],
+    ) -> int:
+        """Greedy arbitration over the FULL candidate lists: each app (in
+        req_id order) may take any strictly cheaper candidate — including
+        across a region boundary — that still fits the shared shadow.
+        Returns how many apps ended up outside their home region."""
+        crossings = 0
+        order = sorted(range(len(ctx)), key=lambda i: ctx[i].placed.req_id)
+        for i in order:
+            wa = ctx[i]
+            app = wa.placed.request.app
+            w = norm[wa.placed.req_id] if norm else 1.0
+            home = part.region_of_node[wa.placed.candidate.node.node_id]
+            shadow.occupy(app, wa.candidates[assignment[i]], -1.0)
+            best, best_cost = assignment[i], self._cost(wa, assignment[i], w)
+            for j in range(len(wa.candidates)):
+                if j == assignment[i]:
+                    continue
+                cost = self._cost(wa, j, w)
+                if cost < best_cost - 1e-12 and shadow.fits(app, wa.candidates[j]):
+                    best, best_cost = j, cost
+            shadow.occupy(app, wa.candidates[best], +1.0)
+            assignment[i] = best
+            if part.region_of_node[wa.candidates[best].node.node_id] != home:
+                crossings += 1
+        return crossings

@@ -1,0 +1,152 @@
+"""Topology partitioner: cut the site tree into planning regions.
+
+The monolithic reconfiguration MILP couples every window app through the
+shared capacity rows, which stops scaling exactly when the topology does.
+The companion placement papers frame placement per-site with cloud/edge
+tiers — the natural decomposition seam: with a tree topology, capacity
+constraints only couple apps whose candidate paths share a subtree, so
+cutting the site tree into subtree **regions** block-diagonalizes the
+problem (exactly, on the paper topology, where an app's whole uplink chain
+lives inside one cloud subtree).
+
+Rules:
+
+* one region per root subtree (per-cloud on the paper topology);
+* a root site with **no device nodes of its own** (a pure fabric root,
+  e.g. the TPU-fleet star hub) is split automatically — each child subtree
+  becomes a region and the hub gets a singleton region;
+* ``max_region_nodes`` recursively splits any oversized subtree at its
+  root's children (the subtree root becomes a singleton region);
+* ``k_regions`` merges the smallest regions until at most ``k`` remain
+  (k-way partitioning for topologies with many tiny subtrees).
+
+Every device node lands in exactly one region (the partition invariant the
+property tests assert).  A link is **interior** to a region when both of
+its endpoints map there, otherwise it is a **boundary** link of both — the
+decomposed planner gives regional subproblems only a budgeted share of
+boundary-link capacity and lets the coordination pass arbitrate the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One planning region: a connected set of sites and its resources."""
+
+    region_id: str                     # root site of the subtree (or merge head)
+    sites: Tuple[str, ...]
+    nodes: Tuple[str, ...]             # device node ids hosted in the region
+    interior_links: FrozenSet[str]
+    boundary_links: FrozenSet[str]
+
+
+@dataclasses.dataclass
+class Partition:
+    """A full cut of the topology into regions, with lookup tables."""
+
+    topo: Topology
+    regions: List[Region]
+    region_of_site: Dict[str, str]
+    region_of_node: Dict[str, str]
+    boundary_links: FrozenSet[str]     # union over regions
+
+    def region(self, region_id: str) -> Region:
+        return next(r for r in self.regions if r.region_id == region_id)
+
+
+def _subtree_sites(topo: Topology, root: str,
+                   children: Dict[str, List[str]]) -> List[str]:
+    out: List[str] = []
+    queue = deque([root])
+    while queue:
+        sid = queue.popleft()
+        out.append(sid)
+        queue.extend(children.get(sid, []))
+    return out
+
+
+def partition_topology(
+    topo: Topology,
+    max_region_nodes: Optional[int] = None,
+    k_regions: Optional[int] = None,
+) -> Partition:
+    """Cut ``topo``'s site tree into regions (see module docstring)."""
+    children: Dict[str, List[str]] = {}
+    for site in topo.sites.values():
+        if site.parent is not None:
+            children.setdefault(site.parent, []).append(site.site_id)
+    for kids in children.values():
+        kids.sort()
+
+    def n_nodes(sites: List[str]) -> int:
+        return sum(len(topo.nodes_at(s)) for s in sites)
+
+    groups: List[Tuple[str, List[str]]] = []   # (region_id, sites)
+    roots = sorted(s.site_id for s in topo.sites.values() if s.parent is None)
+    queue = deque(roots)
+    while queue:
+        root = queue.popleft()
+        sites = _subtree_sites(topo, root, children)
+        kids = children.get(root, [])
+        fabric_root = root in roots and not topo.nodes_at(root) and kids
+        oversized = (max_region_nodes is not None
+                     and n_nodes(sites) > max_region_nodes and kids)
+        if fabric_root or oversized:
+            groups.append((root, [root]))      # the root becomes a singleton
+            queue.extend(kids)                 # children split recursively
+        else:
+            groups.append((root, sites))
+
+    if k_regions is not None and k_regions >= 1:
+        while len(groups) > k_regions:
+            # Merge the two smallest regions (ties broken by region id) so
+            # k-way cuts stay balanced and deterministic.
+            order = sorted(groups, key=lambda g: (n_nodes(g[1]), g[0]))
+            (id_a, sites_a), (id_b, sites_b) = order[0], order[1]
+            groups = [g for g in groups if g[0] not in (id_a, id_b)]
+            groups.append((min(id_a, id_b), sorted(sites_a + sites_b)))
+        groups.sort(key=lambda g: g[0])
+
+    region_of_site: Dict[str, str] = {}
+    for rid, sites in groups:
+        for sid in sites:
+            if sid in region_of_site:
+                raise ValueError(f"site {sid} assigned to two regions")
+            region_of_site[sid] = rid
+
+    interior: Dict[str, set] = {rid: set() for rid, _ in groups}
+    boundary: Dict[str, set] = {rid: set() for rid, _ in groups}
+    for link in topo.links.values():
+        ra = region_of_site[link.site_a]
+        rb = region_of_site[link.site_b]
+        if ra == rb:
+            interior[ra].add(link.link_id)
+        else:
+            boundary[ra].add(link.link_id)
+            boundary[rb].add(link.link_id)
+
+    regions: List[Region] = []
+    region_of_node: Dict[str, str] = {}
+    for rid, sites in groups:
+        nodes: List[str] = []
+        for sid in sites:
+            for node in topo.nodes_at(sid):
+                nodes.append(node.node_id)
+                region_of_node[node.node_id] = rid
+        regions.append(Region(
+            region_id=rid,
+            sites=tuple(sites),
+            nodes=tuple(nodes),
+            interior_links=frozenset(interior[rid]),
+            boundary_links=frozenset(boundary[rid]),
+        ))
+    all_boundary = frozenset().union(*(r.boundary_links for r in regions)) \
+        if regions else frozenset()
+    return Partition(topo, regions, region_of_site, region_of_node, all_boundary)

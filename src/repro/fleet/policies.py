@@ -6,13 +6,17 @@ through the same contract:
 
     policy.plan(engine, window, weights=None) -> ReconfigResult  # trial only
 
-* ``milp``      — the paper's joint MILP (`core.reconfig.Reconfigurator`)
-* ``greedy``    — one pass, each app takes its best feasible candidate
-* ``hillclimb`` — steepest-descent single-app moves until a local optimum
-* ``ga``        — `core.ga.GeneticSearch` over per-app candidate genes
-* ``adaptive``  — MILP until the rolling solver latency blows a budget,
-                  then greedy until it recovers (online policy switching)
-* ``noop``      — never moves anything (control baseline)
+* ``milp``       — the paper's joint MILP (`core.reconfig.Reconfigurator`)
+* ``greedy``     — one pass, each app takes its best feasible candidate
+* ``hillclimb``  — steepest-descent single-app moves until a local optimum
+* ``ga``         — `core.ga.GeneticSearch` over per-app candidate genes
+* ``decomposed`` — partition → per-region MILPs → boundary arbitration →
+                   merge (`fleet.planner.decomposed`; scales to big fleets)
+* ``horizon``    — rolling-horizon wrapper: plans against forecast demand
+                   sampled from each app's `RateCurve` (`fleet.planner.horizon`)
+* ``adaptive``   — solver governor over a MILP → decomposed → greedy ladder,
+                   escalating when the rolling solver latency blows a budget
+* ``noop``       — never moves anything (control baseline)
 
 ``weights`` are per-app traffic weights (requests/s multipliers from the
 request-stream model); they are normalized to mean 1 over the window so
@@ -129,9 +133,25 @@ class ReconfigPolicy:
 
     name: str = "base"
 
-    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0):
+    def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
+                 cost_model=None):
         self.move_penalty = move_penalty
         self.accept_threshold = accept_threshold
+        # Optional migration-aware cost model (`fleet.planner.migration_cost`)
+        # pricing each candidate move's transfer time — ledger contention
+        # included — into the per-move penalty.
+        self.cost_model = cost_model
+        # Planner-side tick detail (`telemetry.PlanStats`), set by the
+        # decomposed / horizon planners; the runtime copies it onto the tick.
+        self.last_plan_stats = None
+
+    def observe(self, now: float = 0.0, curves: Optional[Mapping] = None,
+                executor=None) -> None:
+        """Runtime context hook, called before each `plan`: the simulated
+        clock, the live `RateCurve` registry, and the migration executor's
+        reservation ledger.  Policies that don't care ignore it."""
+        if self.cost_model is not None and executor is not None:
+            self.cost_model.bind(executor)
 
     def plan(
         self,
@@ -141,14 +161,20 @@ class ReconfigPolicy:
     ) -> ReconfigResult:
         raise NotImplementedError
 
+    def _move_penalty(self, wa: _WindowApp, cand: Candidate) -> float:
+        """Penalty for assigning ``cand`` (0 when it is the live node)."""
+        if cand.node.node_id == wa.placed.candidate.node.node_id:
+            return 0.0
+        if self.cost_model is None:
+            return self.move_penalty
+        return self.cost_model.penalty(wa.placed.candidate, cand, self.move_penalty)
+
     def _cost(self, wa: _WindowApp, choice: int, w: float = 1.0) -> float:
         """Traffic-weighted eq. (1) summand + migration penalty relative to
         the LIVE node (the penalty is per *move*, so it stays unweighted —
         matching the MILP encoding)."""
         cand = wa.candidates[choice]
-        pen = self.move_penalty if (
-            cand.node.node_id != wa.placed.candidate.node.node_id) else 0.0
-        return w * _ratio(wa.placed, cand) + pen
+        return w * _ratio(wa.placed, cand) + self._move_penalty(wa, cand)
 
 
 class NoOpPolicy(ReconfigPolicy):
@@ -172,8 +198,9 @@ class MilpPolicy(ReconfigPolicy):
     name = "milp"
 
     def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
-                 backend: str = "auto", time_limit_s: float = 60.0):
-        super().__init__(move_penalty, accept_threshold)
+                 backend: str = "auto", time_limit_s: float = 60.0,
+                 cost_model=None):
+        super().__init__(move_penalty, accept_threshold, cost_model)
         self.backend = backend
         self.time_limit_s = time_limit_s
 
@@ -183,6 +210,7 @@ class MilpPolicy(ReconfigPolicy):
             engine, move_penalty=self.move_penalty,
             accept_threshold=self.accept_threshold,
             backend=self.backend, time_limit_s=self.time_limit_s,
+            cost_model=self.cost_model,
         )
         return recon.plan(window, weights=weights)
 
@@ -227,8 +255,8 @@ class HillClimbPolicy(ReconfigPolicy):
     name = "hillclimb"
 
     def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
-                 max_iters: int = 400):
-        super().__init__(move_penalty, accept_threshold)
+                 max_iters: int = 400, cost_model=None):
+        super().__init__(move_penalty, accept_threshold, cost_model)
         self.max_iters = max_iters
 
     def plan(self, engine: PlacementEngine, window: Sequence[int],
@@ -274,8 +302,8 @@ class GaPolicy(ReconfigPolicy):
 
     def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
                  k_candidates: int = 5, seed: int = 0,
-                 config: Optional[GaConfig] = None):
-        super().__init__(move_penalty, accept_threshold)
+                 config: Optional[GaConfig] = None, cost_model=None):
+        super().__init__(move_penalty, accept_threshold, cost_model)
         self.k_candidates = k_candidates
         self.seed = seed
         self.config = config or GaConfig(population=24, generations=16)
@@ -326,14 +354,16 @@ class GaPolicy(ReconfigPolicy):
 
 
 class AdaptivePolicy(ReconfigPolicy):
-    """Online policy switching: run the exact MILP while it is affordable,
-    fall back to the greedy heuristic when the rolling mean ``plan_time_s``
-    over the last ``k`` plans exceeds ``budget_s``, and switch back once
-    the rolling mean recovers below ``budget_s × recover_frac``.
+    """Online solver governor over a *ladder* of policies — by default
+    MILP → decomposed → greedy (exact, then regionally-exact, then
+    heuristic).  Escalate one tier when the rolling mean ``plan_time_s``
+    over the last ``k`` plans exceeds ``budget_s``; de-escalate one tier
+    once the rolling mean recovers below ``budget_s × recover_frac``.
 
-    While the fast policy runs, its (cheap) plan times flow into the same
-    rolling window, so the mean decays and the controller re-tries the
-    MILP — the classic hysteresis loop of an online solver governor.
+    While a cheaper tier runs, its plan times flow into the same rolling
+    window, so the mean decays and the controller climbs back toward the
+    exact solver — the classic hysteresis loop; a mean that stays hot
+    cascades all the way down to greedy.
     NOTE: switching depends on wall-clock solver latency, so adaptive runs
     are NOT covered by the telemetry-fingerprint determinism contract."""
 
@@ -341,32 +371,54 @@ class AdaptivePolicy(ReconfigPolicy):
 
     def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
                  budget_s: float = 0.25, k: int = 5, recover_frac: float = 0.5,
-                 **milp_kwargs):
-        super().__init__(move_penalty, accept_threshold)
+                 tiers: Sequence[str] = ("milp", "decomposed", "greedy"),
+                 cost_model=None, **milp_kwargs):
+        super().__init__(move_penalty, accept_threshold, cost_model)
         self.budget_s = budget_s
         self.recover_frac = recover_frac
-        self.slow: ReconfigPolicy = MilpPolicy(move_penalty, accept_threshold,
-                                               **milp_kwargs)
-        self.fast: ReconfigPolicy = GreedyPolicy(move_penalty, accept_threshold)
-        self.using_fast = False
+        self.tiers: List[ReconfigPolicy] = []
+        for tier in tiers:
+            kwargs = dict(milp_kwargs) if tier == "milp" else {}
+            self.tiers.append(get_policy(
+                tier, move_penalty=move_penalty,
+                accept_threshold=accept_threshold,
+                cost_model=cost_model, **kwargs))
+        if not self.tiers:
+            raise ValueError("adaptive needs at least one tier")
+        self.level = 0
         self.switches = 0
         self._times: deque = deque(maxlen=max(int(k), 1))
 
     @property
+    def active(self) -> ReconfigPolicy:
+        return self.tiers[self.level]
+
+    @property
     def active_name(self) -> str:
-        return self.fast.name if self.using_fast else self.slow.name
+        return self.active.name
+
+    @property
+    def using_fast(self) -> bool:
+        """True once the governor sits on the last (cheapest) tier."""
+        return self.level == len(self.tiers) - 1
+
+    def observe(self, now: float = 0.0, curves: Optional[Mapping] = None,
+                executor=None) -> None:
+        for tier in self.tiers:
+            tier.observe(now=now, curves=curves, executor=executor)
 
     def plan(self, engine: PlacementEngine, window: Sequence[int],
              weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
-        pol = self.fast if self.using_fast else self.slow
+        pol = self.active
         res = pol.plan(engine, window, weights)
+        self.last_plan_stats = getattr(pol, "last_plan_stats", None)
         self._times.append(res.plan_time_s)
         mean = sum(self._times) / len(self._times)
-        if not self.using_fast and mean > self.budget_s:
-            self.using_fast = True
+        if mean > self.budget_s and self.level < len(self.tiers) - 1:
+            self.level += 1
             self.switches += 1
-        elif self.using_fast and mean <= self.budget_s * self.recover_frac:
-            self.using_fast = False
+        elif mean <= self.budget_s * self.recover_frac and self.level > 0:
+            self.level -= 1
             self.switches += 1
         return res
 
@@ -377,7 +429,17 @@ POLICIES: Dict[str, Type[ReconfigPolicy]] = {
 }
 
 
+def _ensure_planner_registered() -> None:
+    """Late-bind the planner subsystem's policies (decomposed / horizon)
+    into the registry.  `fleet.planner` imports this module, so the
+    registration has to happen lazily to avoid a cycle; importing
+    `repro.fleet` performs it eagerly."""
+    if "decomposed" not in POLICIES:
+        from . import planner  # noqa: F401  (registers on import)
+
+
 def get_policy(name: str, **kwargs) -> ReconfigPolicy:
+    _ensure_planner_registered()
     try:
         cls = POLICIES[name]
     except KeyError:

@@ -36,6 +36,8 @@ from .events import (
     DemandDrift,
     Event,
     EventQueue,
+    LinkFailure,
+    LinkRecovery,
     MigrationComplete,
     MigrationStart,
     NodeFailure,
@@ -57,6 +59,9 @@ class RuntimeConfig:
     reconfig_on_failure: bool = True
     check_invariants: bool = True  # occupancy audit after every tick
     rate_epsilon: float = 0.05     # min relative rate change worth re-admitting
+    # Bandwidth each active migration debits against admission control on
+    # every link it crosses (0 = legacy unreserved transfers).
+    migration_reserve_mbps: float = 2.0
 
 
 class FleetRuntime:
@@ -72,7 +77,10 @@ class FleetRuntime:
         self.engine = PlacementEngine(topo, all_sites=all_sites)
         self.policy = policy
         self.config = config or RuntimeConfig()
-        self.executor = MigrationExecutor(state_mb=self.config.state_mb)
+        self.executor = MigrationExecutor(
+            state_mb=self.config.state_mb,
+            reserve_mbps=self.config.migration_reserve_mbps,
+        )
         self.now = 0.0
         self._since_reconfig = 0
         self._events = EventQueue()   # bound to the live queue by run()
@@ -130,6 +138,14 @@ class FleetRuntime:
         elif isinstance(ev, NodeRecovery):
             c["recoveries"] += 1
             self.engine.set_node_online(ev.node_id, True)
+            self.executor.on_capacity_freed(self.engine, self.now, events)
+            if self.config.reconfig_on_failure:
+                self._tick("recovery", tel, events)
+        elif isinstance(ev, LinkFailure):
+            self._on_link_failure(ev, events, tel)
+        elif isinstance(ev, LinkRecovery):
+            c["link_recoveries"] += 1
+            self.engine.set_link_online(ev.link_id, True)
             self.executor.on_capacity_freed(self.engine, self.now, events)
             if self.config.reconfig_on_failure:
                 self._tick("recovery", tel, events)
@@ -210,6 +226,32 @@ class FleetRuntime:
         if self.config.reconfig_on_failure:
             self._tick("failure", tel, events)
 
+    def _on_link_failure(self, ev: LinkFailure, events: EventQueue,
+                         tel: Telemetry) -> None:
+        """Uplink/backbone cut: candidate paths through the link become
+        infeasible, transfers crossing it are aborted with source rollback
+        (`executor.on_link_failure`), then every app whose live path used
+        the link is evicted and re-placed (or lost)."""
+        c = tel.counters
+        c["link_failures"] += 1
+        self.engine.set_link_online(ev.link_id, False)
+        rolled_back, homeless = self.executor.on_link_failure(
+            self.engine, ev.link_id, self.now, events)
+        c["migrations_aborted"] += len(rolled_back) + len(homeless)
+        c["migration_rollbacks"] += len(rolled_back)
+        for req_id in homeless:
+            if self._readmit(req_id):
+                c["linkfail_moved"] += 1
+            else:
+                c["migration_lost"] += 1
+        for req_id in self.engine.apps_on_link(ev.link_id):
+            if self._readmit(req_id):
+                c["linkfail_moved"] += 1
+            else:
+                c["linkfail_lost"] += 1
+        if self.config.reconfig_on_failure:
+            self._tick("failure", tel, events)
+
     # -------------------------------------------------------------- helpers
     def _forget(self, req_id: int) -> None:
         self._curves.pop(req_id, None)
@@ -259,7 +301,14 @@ class FleetRuntime:
         if not window:
             return
         weights = {r: self._rates.get(r, 1.0) for r in window}
+        observe = getattr(self.policy, "observe", None)
+        if observe is not None:
+            # Context the planner subsystem consumes: the simulated clock
+            # and rate curves (rolling-horizon forecasts) and the executor
+            # ledger (migration-aware move pricing).
+            observe(now=self.now, curves=self._curves, executor=self.executor)
         res = self.policy.plan(self.engine, window, weights=weights)
+        stats = getattr(self.policy, "last_plan_stats", None)
         n_started = 0
         if res.accepted and res.moves:
             n_started = self.executor.begin(self.engine, res, self.now, events)
@@ -282,6 +331,10 @@ class FleetRuntime:
             n_inflight=self.executor.n_inflight,
             utilization=util,
             utilization_max=util_max,
+            n_regions=stats.n_regions if stats else 0,
+            boundary_crossings=stats.boundary_crossings if stats else 0,
+            region_solve_max_s=stats.region_solve_max_s if stats else 0.0,
+            forecast_error=stats.forecast_error if stats else None,
         ))
         if self.config.check_invariants and not self.engine.occupancy_invariants_ok():
             raise AssertionError("occupancy invariants violated after tick")

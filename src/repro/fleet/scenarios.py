@@ -20,6 +20,9 @@ schedule + runtime config:
   mid-run and recover later (failover + re-optimization on recovery).
 * ``site-outage``          — correlated failure: ALL nodes of one cloud
   site fail together and recover together.
+* ``backbone-cut``         — a carrier→cloud backbone link is cut while
+  transfers cross it (abort + source rollback, path filtering, eviction
+  of apps routed over the link) and repaired later.
 * ``flapping-node``        — one node periodically fails and recovers,
   churning placements (and colliding with in-flight migrations).
 * ``hetero-expansion``     — a TPU pod fleet where cheap capacity comes
@@ -41,6 +44,8 @@ from .events import (
     AppArrival,
     Event,
     EventQueue,
+    LinkFailure,
+    LinkRecovery,
     NodeFailure,
     NodeRecovery,
     RateCurve,
@@ -94,31 +99,50 @@ def _site_nodes(topo: Topology, site_id: str) -> List[str]:
 
 
 # ----------------------------------------------------------------- scenarios
-def paper_steady_state(seed: int = 0, n_arrivals: int = 1100) -> ScenarioSpec:
+#
+# Every paper-topology scenario takes ``scale``: tier counts, arrival
+# volume and arrival *rate* all multiply, so per-node load density stays
+# at the paper's level while the topology (and the reconfiguration MILP)
+# grows ×2/×4/×8 — the ROADMAP solver-scaling sweep.  ``window`` /
+# ``reconfig_every`` default to 100×scale but can be forced (the bench
+# sweep uses 400×scale to record the monolithic solver's latency cliff).
+
+
+def paper_steady_state(seed: int = 0, n_arrivals: Optional[int] = None,
+                       scale: int = 1, window: Optional[int] = None,
+                       reconfig_every: Optional[int] = None) -> ScenarioSpec:
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_arrivals = 1100 * scale if n_arrivals is None else n_arrivals
     events = _poisson_arrivals(topo, rng, n_arrivals,
-                               mean_interarrival_s=10.0,
+                               mean_interarrival_s=10.0 / scale,
                                mean_lifetime_s=4_000.0)
+    if window is None:
+        window = 100 * scale
+    if reconfig_every is None:
+        reconfig_every = 100 * scale
     return ScenarioSpec("paper-steady-state", topo, events,
-                        RuntimeConfig(reconfig_every=100, window=100))
+                        RuntimeConfig(reconfig_every=reconfig_every,
+                                      window=window))
 
 
-def diurnal_streams(seed: int = 0, n_arrivals: int = 500,
+def diurnal_streams(seed: int = 0, n_arrivals: Optional[int] = None,
                     period_s: float = 4_000.0,
-                    sample_every_s: float = 150.0) -> ScenarioSpec:
+                    sample_every_s: float = 150.0,
+                    scale: int = 1) -> ScenarioSpec:
     """Continuous per-app load curves instead of step demand drift: a
     shared day/night sinusoid (random amplitude per app), ~10 % of apps go
     viral with a burst segment, and the arrival rate itself swings over
     the same period."""
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_arrivals = 500 * scale if n_arrivals is None else n_arrivals
     reqs = sample_requests(topo, n_arrivals, rng)
     events: List[Tuple[float, Event]] = []
     t = 0.0
     for req in reqs:
         arrival_rate = 1.0 + 0.8 * np.sin(2.0 * np.pi * t / period_s)
-        t += float(rng.exponential(8.0 / max(arrival_rate, 0.2)))
+        t += float(rng.exponential(8.0 / scale / max(arrival_rate, 0.2)))
         bursts: Tuple[Tuple[float, float, float], ...] = ()
         if rng.random() < 0.1:   # viral app: one strong burst mid-life
             bursts = ((t + float(rng.uniform(200.0, 1_500.0)),
@@ -133,39 +157,47 @@ def diurnal_streams(seed: int = 0, n_arrivals: int = 500,
                                      rate_curve=curve)))
     events.append((sample_every_s, RequestRateUpdate(sample_every_s, t)))
     return ScenarioSpec("diurnal-streams", topo, events,
-                        RuntimeConfig(reconfig_every=60, window=80))
+                        RuntimeConfig(reconfig_every=60 * scale,
+                                      window=80 * scale))
 
 
-def flash_crowd(seed: int = 0, n_background: int = 350, n_burst: int = 150) -> ScenarioSpec:
+def flash_crowd(seed: int = 0, n_background: Optional[int] = None,
+                n_burst: Optional[int] = None, scale: int = 1) -> ScenarioSpec:
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_background = 350 * scale if n_background is None else n_background
+    n_burst = 150 * scale if n_burst is None else n_burst
     events = _poisson_arrivals(topo, rng, n_background,
-                               mean_interarrival_s=16.0,
+                               mean_interarrival_s=16.0 / scale,
                                mean_lifetime_s=3_000.0)
     burst_t0 = events[len(events) // 2][0]   # burst lands mid-run
     hot_sites = [f"input{i}" for i in range(5)]  # one user-edge region
     burst = sample_requests(topo, n_burst, rng, start_id=n_background)
     t = burst_t0
     for req in burst:
-        t += float(rng.exponential(0.4))     # ~150 arrivals in ~60 s
+        t += float(rng.exponential(0.4 / scale))  # ~150·scale arrivals in ~60 s
         req = dataclasses.replace(
             req, input_site=hot_sites[int(rng.integers(len(hot_sites)))])
         events.append((t, AppArrival(req, float(rng.exponential(600.0)))))
     return ScenarioSpec("flash-crowd", topo, events,
-                        RuntimeConfig(reconfig_every=50, window=100))
+                        RuntimeConfig(reconfig_every=50 * scale,
+                                      window=100 * scale))
 
 
-def flash_crowd_during_reconfig(seed: int = 0, n_background: int = 400,
-                                n_burst: int = 120) -> ScenarioSpec:
+def flash_crowd_during_reconfig(seed: int = 0, n_background: Optional[int] = None,
+                                n_burst: Optional[int] = None,
+                                scale: int = 1) -> ScenarioSpec:
     """The regime the paper's relocation-during-operation story hinges on:
     a reconfiguration is forced, and while its migrations are still copying
     state a flash crowd arrives on one edge region AND running apps there
     spike (burst segments on their curves); a GPU node then fails
     mid-transfer window, aborting the migrations headed to it."""
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_background = 400 * scale if n_background is None else n_background
+    n_burst = 120 * scale if n_burst is None else n_burst
     hot_sites = [f"input{i}" for i in range(5)]
-    burst_t0 = n_background * 12.0 * 0.55    # mid-run, after plenty of churn
+    burst_t0 = n_background * 12.0 / scale * 0.55   # mid-run, after churn
 
     def curve_fn(i: int, t_arrival: float) -> Optional[RateCurve]:
         # Apps arriving before the crowd carry a coordinated burst segment:
@@ -176,7 +208,7 @@ def flash_crowd_during_reconfig(seed: int = 0, n_background: int = 400,
         return None
 
     events = _poisson_arrivals(topo, rng, n_background,
-                               mean_interarrival_s=12.0,
+                               mean_interarrival_s=12.0 / scale,
                                mean_lifetime_s=3_500.0,
                                curve_fn=curve_fn)
     # Force a reconfiguration just before the crowd: its migrations (tens
@@ -185,7 +217,7 @@ def flash_crowd_during_reconfig(seed: int = 0, n_background: int = 400,
     burst = sample_requests(topo, n_burst, rng, start_id=n_background)
     t = burst_t0
     for req in burst:
-        t += float(rng.exponential(0.5))
+        t += float(rng.exponential(0.5 / scale))
         req = dataclasses.replace(
             req, input_site=hot_sites[int(rng.integers(len(hot_sites)))])
         events.append((t, AppArrival(req, float(rng.exponential(600.0)))))
@@ -194,50 +226,82 @@ def flash_crowd_during_reconfig(seed: int = 0, n_background: int = 400,
     events.append((burst_t0 + 600.0, NodeRecovery("cloud0_gpu0")))
     events.append((burst_t0 / 2.0, RequestRateUpdate(60.0, burst_t0 + 300.0)))
     return ScenarioSpec("flash-crowd-during-reconfig", topo, events,
-                        RuntimeConfig(reconfig_every=50, window=100))
+                        RuntimeConfig(reconfig_every=50 * scale,
+                                      window=100 * scale))
 
 
-def node_outage(seed: int = 0, n_arrivals: int = 500) -> ScenarioSpec:
+def node_outage(seed: int = 0, n_arrivals: Optional[int] = None,
+                scale: int = 1) -> ScenarioSpec:
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_arrivals = 500 * scale if n_arrivals is None else n_arrivals
     events = _poisson_arrivals(topo, rng, n_arrivals,
-                               mean_interarrival_s=10.0,
+                               mean_interarrival_s=10.0 / scale,
                                mean_lifetime_s=4_000.0)
     horizon = events[-1][0]
     for k, node in enumerate(("cloud0_gpu0", "cloud0_gpu1", "cloud1_fpga0")):
         events.append((horizon * 0.5 + k, NodeFailure(node)))
         events.append((horizon * 0.8 + k, NodeRecovery(node)))
     return ScenarioSpec("node-outage", topo, events,
-                        RuntimeConfig(reconfig_every=80, window=100))
+                        RuntimeConfig(reconfig_every=80 * scale,
+                                      window=100 * scale))
 
 
-def site_outage(seed: int = 0, n_arrivals: int = 450,
-                site: str = "cloud1") -> ScenarioSpec:
+def site_outage(seed: int = 0, n_arrivals: Optional[int] = None,
+                site: str = "cloud1", scale: int = 1) -> ScenarioSpec:
     """Correlated failure: every device node of one cloud site goes dark in
     the same instant (power/network cut) and the whole site returns later."""
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_arrivals = 450 * scale if n_arrivals is None else n_arrivals
     events = _poisson_arrivals(topo, rng, n_arrivals,
-                               mean_interarrival_s=10.0,
+                               mean_interarrival_s=10.0 / scale,
                                mean_lifetime_s=4_000.0)
     horizon = events[-1][0]
     for node in _site_nodes(topo, site):
         events.append((horizon * 0.5, NodeFailure(node)))
         events.append((horizon * 0.8, NodeRecovery(node)))
     return ScenarioSpec("site-outage", topo, events,
-                        RuntimeConfig(reconfig_every=80, window=100))
+                        RuntimeConfig(reconfig_every=80 * scale,
+                                      window=100 * scale))
 
 
-def flapping_node(seed: int = 0, n_arrivals: int = 450,
+def backbone_cut(seed: int = 0, n_arrivals: Optional[int] = None,
+                 link: str = "link_carrier0_cloud0",
+                 scale: int = 1) -> ScenarioSpec:
+    """Uplink-cut failure (ROADMAP open item): a carrier→cloud backbone
+    link is cut mid-run.  A reconfiguration is forced just before the cut
+    so transfers crossing the link are in flight when it dies (abort +
+    source rollback); every app whose live path used the link is evicted
+    and re-placed below the cut (or lost), and the link returns later."""
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology(scale=scale)
+    if link not in topo.links:
+        raise ValueError(f"unknown link {link!r}")
+    n_arrivals = 450 * scale if n_arrivals is None else n_arrivals
+    events = _poisson_arrivals(topo, rng, n_arrivals,
+                               mean_interarrival_s=10.0 / scale,
+                               mean_lifetime_s=4_000.0)
+    horizon = events[-1][0]
+    events.append((horizon * 0.5 - 5.0, ReconfigTick()))
+    events.append((horizon * 0.5, LinkFailure(link)))
+    events.append((horizon * 0.8, LinkRecovery(link)))
+    return ScenarioSpec("backbone-cut", topo, events,
+                        RuntimeConfig(reconfig_every=80 * scale,
+                                      window=100 * scale))
+
+
+def flapping_node(seed: int = 0, n_arrivals: Optional[int] = None,
                   node: str = "cloud0_gpu0", up_s: float = 600.0,
-                  down_s: float = 200.0) -> ScenarioSpec:
+                  down_s: float = 200.0, scale: int = 1) -> ScenarioSpec:
     """One node flaps: repeatedly fails for ``down_s`` then recovers for
     ``up_s`` over the middle half of the run — each flap evicts its apps,
     aborts transfers headed to it, and triggers re-optimization."""
     rng = np.random.default_rng(seed)
-    topo = build_paper_topology()
+    topo = build_paper_topology(scale=scale)
+    n_arrivals = 450 * scale if n_arrivals is None else n_arrivals
     events = _poisson_arrivals(topo, rng, n_arrivals,
-                               mean_interarrival_s=10.0,
+                               mean_interarrival_s=10.0 / scale,
                                mean_lifetime_s=4_000.0)
     horizon = events[-1][0]
     t = horizon * 0.25
@@ -246,23 +310,34 @@ def flapping_node(seed: int = 0, n_arrivals: int = 450,
         events.append((t + down_s, NodeRecovery(node)))
         t += down_s + up_s
     return ScenarioSpec("flapping-node", topo, events,
-                        RuntimeConfig(reconfig_every=80, window=100))
+                        RuntimeConfig(reconfig_every=80 * scale,
+                                      window=100 * scale))
 
 
-def hetero_expansion(seed: int = 0, n_jobs: int = 140) -> ScenarioSpec:
-    """TPU fleet: expensive pods serve first; cheap pods come online later."""
+def hetero_expansion(seed: int = 0, n_jobs: Optional[int] = None,
+                     scale: int = 1) -> ScenarioSpec:
+    """TPU fleet: expensive pods serve first; cheap pods come online later.
+    ``scale`` replicates the 5-pod group (suffix ``-gN``) and the job mix."""
     rng = np.random.default_rng(seed)
-    pods = [PodSpec("tokyo-a", 256, 1.2), PodSpec("tokyo-b", 256, 1.2),
-            PodSpec("osaka-v5p", 256, 2.1),
-            PodSpec("spot-a", 256, 0.8), PodSpec("spot-b", 256, 0.8)]
+    n_jobs = 140 * scale if n_jobs is None else n_jobs
+    pods: List[PodSpec] = []
+    spot_pods: List[str] = []
+    for g in range(scale):
+        sfx = "" if scale == 1 else f"-g{g}"
+        pods += [PodSpec(f"tokyo-a{sfx}", 256, 1.2),
+                 PodSpec(f"tokyo-b{sfx}", 256, 1.2),
+                 PodSpec(f"osaka-v5p{sfx}", 256, 2.1),
+                 PodSpec(f"spot-a{sfx}", 256, 0.8),
+                 PodSpec(f"spot-b{sfx}", 256, 0.8)]
+        spot_pods += [f"spot-a{sfx}", f"spot-b{sfx}"]
     topo = build_fleet_topology(pods)
     events: List[Tuple[float, Event]] = []
     # The spot pods are "not yet provisioned": fail them before any arrival.
-    for pod in ("spot-a", "spot-b"):
+    for pod in spot_pods:
         events.append((0.0, NodeFailure(f"{pod}_tpu")))
     t = 0.0
     for i in range(n_jobs):
-        t += float(rng.exponential(30.0))
+        t += float(rng.exponential(30.0 / scale))
         step = float(rng.uniform(0.5, 5.0))
         job = JobSpec(i, f"arch{i % 5}", "train_4k", chips=32,
                       step_time_s=step,
@@ -270,10 +345,11 @@ def hetero_expansion(seed: int = 0, n_jobs: int = 140) -> ScenarioSpec:
                       budget_usd_month=float(rng.uniform(5e4, 3e5)) if i % 2 else None)
         events.append((t, AppArrival(job.request(), float(rng.exponential(900.0)))))
     horizon = t
-    for k, pod in enumerate(("spot-a", "spot-b")):   # expansion lands mid-run
+    for k, pod in enumerate(spot_pods):              # expansion lands mid-run
         events.append((horizon * 0.55 + k, NodeRecovery(f"{pod}_tpu")))
     return ScenarioSpec("hetero-expansion", topo, events,
-                        RuntimeConfig(reconfig_every=16, window=32),
+                        RuntimeConfig(reconfig_every=16 * scale,
+                                      window=32 * scale),
                         all_sites=True)
 
 
@@ -284,6 +360,7 @@ SCENARIOS: Dict[str, Callable[..., ScenarioSpec]] = {
     "flash-crowd-during-reconfig": flash_crowd_during_reconfig,
     "node-outage": node_outage,
     "site-outage": site_outage,
+    "backbone-cut": backbone_cut,
     "flapping-node": flapping_node,
     "hetero-expansion": hetero_expansion,
 }

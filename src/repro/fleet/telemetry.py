@@ -23,6 +23,23 @@ import json
 from typing import Dict, List, Optional
 
 
+@dataclasses.dataclass
+class PlanStats:
+    """Planner-side detail for one tick, produced by the decomposed /
+    rolling-horizon planners (`fleet.planner`) and surfaced on the tick
+    record.  ``region_solve_s`` is wall-clock and therefore excluded from
+    fingerprints (like ``solver_time_s``)."""
+
+    n_regions: int = 0                 # regional subproblems actually solved
+    boundary_crossings: int = 0        # apps assigned outside their home region
+    region_solve_s: List[float] = dataclasses.field(default_factory=list)
+    forecast_error: Optional[float] = None  # mean |predicted−realized|/realized
+
+    @property
+    def region_solve_max_s(self) -> float:
+        return max(self.region_solve_s, default=0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class MigrationRecord:
     """One finished/aborted/cancelled migration (executor ledger row)."""
@@ -56,6 +73,11 @@ class TickRecord:
     n_inflight: int                # active + waiting after the tick
     utilization: float             # Σ used / Σ capacity over online nodes
     utilization_max: float         # hottest online node
+    # Planner-subsystem detail (zero / None under monolithic policies).
+    n_regions: int = 0
+    boundary_crossings: int = 0
+    region_solve_max_s: float = 0.0         # wall clock; not fingerprinted
+    forecast_error: Optional[float] = None  # rolling-horizon planner only
 
     @property
     def moved_ratio(self) -> float:
@@ -87,6 +109,9 @@ class Telemetry:
         "arrivals_inflight": 0, "rejected_inflight": 0,
         # request-stream sampling
         "rate_updates": 0, "rate_evicted": 0,
+        # link-cut failures (backbone/uplink outages)
+        "link_failures": 0, "link_recoveries": 0,
+        "linkfail_moved": 0, "linkfail_lost": 0,
     })
 
     # ------------------------------------------------------------ summaries
@@ -162,6 +187,7 @@ class Telemetry:
         d["summary"].pop("mean_solver_time_s", None)
         for t in d["ticks"]:
             t.pop("solver_time_s", None)
+            t.pop("region_solve_max_s", None)
         return hashlib.sha256(
             json.dumps(d, sort_keys=True).encode()
         ).hexdigest()

@@ -205,26 +205,35 @@ class TestAdaptivePolicy:
             self.name = name
             self.plan_time_s = plan_time_s
             self.calls = 0
+            self.last_plan_stats = None
 
         def plan(self, engine, window, weights=None):
             self.calls += 1
             return ReconfigResult(list(window), [], [], 0.0, 0.0, False,
                                   None, self.plan_time_s)
 
-    def test_switches_to_fast_and_back(self):
+    def test_default_ladder_is_milp_decomposed_greedy(self):
+        pol = get_policy("adaptive")
+        assert [t.name for t in pol.tiers] == ["milp", "decomposed", "greedy"]
+        assert pol.active_name == "milp" and not pol.using_fast
+
+    def test_escalates_down_the_ladder_and_recovers(self):
         pol = get_policy("adaptive", budget_s=1.0, k=2, recover_frac=0.5)
         slow = self._Stub("milp", 3.0)
+        mid = self._Stub("decomposed", 0.02)
         fast = self._Stub("greedy", 0.01)
-        pol.slow, pol.fast = slow, fast
+        pol.tiers = [slow, mid, fast]
         engine = object()
-        pol.plan(engine, [])          # mean 3.0 > 1.0 → switch to fast
+        pol.plan(engine, [])          # mean 3.0 > 1.0 → escalate to mid
+        assert pol.active_name == "decomposed" and not pol.using_fast
+        pol.plan(engine, [])          # mean (3.0+0.02)/2 > 1.0 → escalate again
         assert pol.using_fast and pol.active_name == "greedy"
-        pol.plan(engine, [])          # mean (3.0+0.01)/2 > 0.5 → stay fast
-        assert pol.using_fast
-        pol.plan(engine, [])          # mean (0.01+0.01)/2 ≤ 0.5 → recover
-        assert not pol.using_fast and pol.active_name == "milp"
-        assert slow.calls == 1 and fast.calls == 2
-        assert pol.switches == 2
+        pol.plan(engine, [])          # mean (0.02+0.01)/2 ≤ 0.5 → recover 1 tier
+        assert pol.active_name == "decomposed" and not pol.using_fast
+        pol.plan(engine, [])          # mean stays cheap → back to exact MILP
+        assert pol.active_name == "milp"
+        assert slow.calls == 1 and mid.calls == 2 and fast.calls == 1
+        assert pol.switches == 4
 
     def test_registered_and_runs(self):
         spec = build_scenario("paper-steady-state", seed=0, n_arrivals=150)

@@ -1,0 +1,437 @@
+"""Planner-subsystem tests: partitioner invariants, decomposed-vs-MILP
+parity, rolling-horizon forecasting, migration-aware move pricing,
+link-cut failures, bandwidth-reserving transfers, and the scale ×4
+solver-latency acceptance criterion (slow-marked)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PlacementEngine,
+    build_paper_topology,
+    sample_requests,
+)
+from repro.core.apps import NAS_FT, PlacementRequest, Requirement
+from repro.core.cluster import JobSpec, PodSpec, build_fleet_topology
+from repro.core.migration import Move
+from repro.core.placement import STATE_PLACED
+from repro.core.satisfaction import normalize_weights
+from repro.fleet import (
+    AppArrival,
+    DemandForecaster,
+    EventQueue,
+    LinkFailure,
+    MigrationCostModel,
+    MigrationExecutor,
+    RateCurve,
+    build_scenario,
+    get_policy,
+    partition_topology,
+)
+
+_TOPO = build_paper_topology()  # immutable; shared across tests
+
+
+def _loaded_engine(topo=None, n_apps=120, seed=3):
+    topo = topo or _TOPO
+    rng = np.random.default_rng(seed)
+    engine = PlacementEngine(topo)
+    for r in sample_requests(topo, n_apps, rng):
+        engine.place(r)
+    return engine
+
+
+def _assert_node_cover(topo, part):
+    covered = sorted(n for r in part.regions for n in r.nodes)
+    assert covered == sorted(topo.nodes)           # every node exactly once
+    assert set(part.region_of_node) == set(topo.nodes)
+    assert set(part.region_of_site) == set(topo.sites)
+
+
+# ------------------------------------------------------------- partitioner
+class TestPartitioner:
+    def test_paper_topology_per_cloud_regions(self):
+        part = partition_topology(_TOPO)
+        assert len(part.regions) == 5              # one region per cloud subtree
+        _assert_node_cover(_TOPO, part)
+        # Cloud subtrees are disjoint: no link crosses a region boundary.
+        assert part.boundary_links == frozenset()
+        interior = set().union(*(r.interior_links for r in part.regions))
+        assert interior == set(_TOPO.links)
+
+    def test_scaled_topology_scales_regions(self):
+        topo = build_paper_topology(scale=2)
+        part = partition_topology(topo)
+        assert len(part.regions) == 10
+        _assert_node_cover(topo, part)
+
+    def test_fabric_root_splits_into_pod_regions(self):
+        """A root site with no device nodes (the TPU-fleet star hub) is
+        split automatically; the pod↔fabric links become boundary links."""
+        topo = build_fleet_topology([PodSpec(f"pod{i}", 64, 1.0) for i in range(4)])
+        part = partition_topology(topo)
+        _assert_node_cover(topo, part)
+        ids = {r.region_id for r in part.regions}
+        assert ids == {"fabric", "pod0", "pod1", "pod2", "pod3"}
+        assert part.boundary_links == frozenset(topo.links)
+
+    def test_max_region_nodes_splits_recursively(self):
+        part = partition_topology(_TOPO, max_region_nodes=40)
+        _assert_node_cover(_TOPO, part)
+        for region in part.regions:
+            # Splittable regions obey the cap; singleton roots may not.
+            if len(region.sites) > 1:
+                assert len(region.nodes) <= 40
+        assert len(part.regions) > 5
+        assert part.boundary_links                 # cuts create boundaries
+
+    def test_k_regions_merges_deterministically(self):
+        a = partition_topology(_TOPO, k_regions=2)
+        b = partition_topology(_TOPO, k_regions=2)
+        assert len(a.regions) == 2
+        assert [r.region_id for r in a.regions] == [r.region_id for r in b.regions]
+        _assert_node_cover(_TOPO, a)
+
+    @given(scale=st.integers(1, 3), cap=st.sampled_from([None, 20, 60, 120]))
+    @settings(max_examples=10, deadline=None)
+    def test_partition_covers_every_node_exactly_once(self, scale, cap):
+        topo = build_paper_topology(scale=scale)
+        part = partition_topology(topo, max_region_nodes=cap)
+        _assert_node_cover(topo, part)
+        # Link classification is a partition of the link set too.
+        seen = {}
+        for region in part.regions:
+            for lid in region.interior_links:
+                assert seen.setdefault(lid, region.region_id) == region.region_id
+        boundary = set().union(*(r.boundary_links for r in part.regions))
+        assert boundary.isdisjoint(seen.keys())
+        assert boundary | set(seen) == set(topo.links)
+
+
+# ------------------------------------------------------- decomposed planner
+class TestDecomposedPlanner:
+    def test_matches_monolithic_milp_at_scale_1(self):
+        """Acceptance: ≥95 % of the monolithic MILP's traffic-weighted
+        satisfaction gain on the paper topology (the per-cloud regions
+        block-diagonalize the problem, so it is exact in practice)."""
+        engine = _loaded_engine(n_apps=300)
+        window = engine.recent(100)
+        rng = np.random.default_rng(0)
+        weights = {r: float(rng.uniform(0.2, 5.0)) for r in window}
+        milp = get_policy("milp").plan(engine, window, weights=weights)
+        dec = get_policy("decomposed").plan(engine, window, weights=weights)
+        assert milp.accepted and dec.accepted
+        assert dec.gain >= 0.95 * milp.gain - 1e-9
+
+    def test_merged_plan_never_exceeds_capacity(self):
+        """The merge invariant at scale ×2: the joint assignment fits the
+        window-excluded capacity pool (no node/link double-booking)."""
+        topo = build_paper_topology(scale=2)
+        engine = _loaded_engine(topo, n_apps=500, seed=1)
+        window = engine.recent(200)
+        rng = np.random.default_rng(1)
+        weights = {r: float(rng.uniform(0.2, 5.0)) for r in window}
+        res = get_policy("decomposed").plan(engine, window, weights=weights)
+        node_cap, link_cap = engine.free_capacity_excluding(window)
+        chosen = {mv.req_id: mv.new for mv in res.moves}
+        for r in window:
+            placed = engine.placed[r]
+            cand = chosen.get(r, placed.candidate)
+            node_cap[cand.node.node_id] -= placed.request.app.device_usage
+            for l in cand.links:
+                link_cap[l.link_id] -= placed.request.app.bandwidth_mbps
+        assert all(v >= -1e-9 for v in node_cap.values())
+        assert all(v >= -1e-9 for v in link_cap.values())
+
+    @given(seed=st.integers(0, 200), window=st.sampled_from([30, 80, 150]))
+    @settings(max_examples=10, deadline=None)
+    def test_merged_plan_capacity_property(self, seed, window):
+        engine = _loaded_engine(n_apps=200, seed=seed)
+        win = engine.recent(window)
+        res = get_policy("decomposed").plan(engine, win)
+        node_cap, link_cap = engine.free_capacity_excluding(win)
+        chosen = {mv.req_id: mv.new for mv in res.moves}
+        for r in win:
+            placed = engine.placed[r]
+            cand = chosen.get(r, placed.candidate)
+            node_cap[cand.node.node_id] -= placed.request.app.device_usage
+            for l in cand.links:
+                link_cap[l.link_id] -= placed.request.app.bandwidth_mbps
+        assert all(v >= -1e-9 for v in node_cap.values())
+        assert all(v >= -1e-9 for v in link_cap.values())
+
+    def test_coordination_pass_crosses_region_boundaries(self):
+        """Local region solves cannot leave a pod (candidates restricted);
+        the arbitration sweep must admit the cross-region moves onto the
+        cheap empty pod — and count them."""
+        pods = [PodSpec("dear-a", 256, 2.0), PodSpec("dear-b", 256, 2.0),
+                PodSpec("cheap", 256, 0.5)]
+        engine = PlacementEngine(build_fleet_topology(pods), all_sites=True)
+        for i, pod in enumerate(["dear-a", "dear-a", "dear-b"]):
+            job = JobSpec(i, "a", "t", chips=64, step_time_s=1.0,
+                          step_slo_s=None, budget_usd_month=10 ** 9)
+            req = job.request()
+            cand = next(c for c in engine.enumerate_feasible(req)
+                        if c.node.site_id == pod)
+            engine.commit(req, cand)
+        pol = get_policy("decomposed")
+        res = pol.plan(engine, engine.recent(3))
+        assert res.accepted
+        assert {m.new.node.site_id for m in res.moves} == {"cheap"}
+        assert pol.last_plan_stats.boundary_crossings == 3
+        assert pol.last_plan_stats.n_regions >= 1
+
+    def test_boundary_budget_never_evicts_live_assignment(self):
+        """Even a zero boundary budget must keep every region's do-nothing
+        assignment feasible (budgets defer new cross-boundary traffic,
+        they cannot evict existing traffic) — the coordination sweep then
+        recovers the cross-boundary moves."""
+        engine = _loaded_engine(n_apps=300)
+        window = engine.recent(100)
+        milp = get_policy("milp").plan(engine, window)
+        dec = get_policy("decomposed", max_region_nodes=40,
+                         boundary_budget_frac=0.0).plan(engine, window)
+        assert dec.accepted
+        assert dec.gain >= 0.9 * milp.gain - 1e-9
+
+    def test_plan_stats_surface_in_telemetry(self):
+        spec = build_scenario("paper-steady-state", seed=0, n_arrivals=250)
+        rt = spec.make_runtime(get_policy("decomposed"))
+        tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+        assert tel.ticks and all(t.n_regions >= 1 for t in tel.ticks)
+        assert rt.engine.occupancy_invariants_ok()
+
+
+# -------------------------------------------------- rolling-horizon planner
+class TestRollingHorizon:
+    def test_peak_forecast_anticipates_burst(self):
+        fc = DemandForecaster(horizon_s=600.0, samples=4, agg="peak")
+        curves = {7: RateCurve(base=1.0, bursts=((300.0, 120.0, 3.0),))}
+        out = fc.forecast(0.0, curves, [7, 8], {7: 1.0, 8: 1.3})
+        assert out[7] == pytest.approx(3.0)        # burst inside the horizon
+        assert out[8] == pytest.approx(1.3)        # no curve → realized weight
+
+    def test_mean_forecast_and_error_scoring(self):
+        fc = DemandForecaster(horizon_s=400.0, samples=2, agg="mean")
+        curves = {1: RateCurve(base=2.0)}
+        first = fc.forecast(0.0, curves, [1], {1: 2.0})
+        assert first[1] == pytest.approx(2.0)
+        assert fc.last_error is None               # nothing to score yet
+        fc.forecast(400.0, curves, [1], {1: 1.0})  # realized halved
+        assert fc.last_error == pytest.approx(abs(2.0 - 1.0) / 1.0)
+
+    def test_horizon_policy_plans_against_forecast(self):
+        engine = _loaded_engine(n_apps=80)
+        window = engine.recent(30)
+        pol = get_policy("horizon", horizon_s=600.0)
+        burst_app = window[0]
+        curves = {burst_app: RateCurve(base=1.0, bursts=((200.0, 300.0, 4.0),))}
+        pol.observe(now=0.0, curves=curves, executor=None)
+        res = pol.plan(engine, window, weights={r: 1.0 for r in window})
+        # The burst app dominates the planning objective (peak forecast)…
+        predicted = pol.forecaster.last.predicted
+        assert predicted[burst_app] == pytest.approx(4.0)
+        norm_fc = normalize_weights(window, predicted)
+        assert norm_fc[burst_app] > 1.0
+        # …but the REPORTED weights stay realized, so the tick's
+        # traffic-weighted metrics are comparable across policies.
+        assert res.weights is not None
+        assert res.weights[burst_app] == pytest.approx(1.0)
+
+    def test_horizon_runs_deterministically_on_streams(self):
+        fps = []
+        for _ in range(2):
+            spec = build_scenario("diurnal-streams", seed=4, n_arrivals=250)
+            rt = spec.make_runtime(get_policy("horizon"))
+            tel = rt.run(spec.event_queue(), scenario=spec.name, seed=4)
+            assert any(t.forecast_error is not None for t in tel.ticks[1:])
+            fps.append(tel.fingerprint())
+        assert fps[0] == fps[1]
+
+
+# ------------------------------------------------- migration-aware pricing
+class _FakeExecutor:
+    def __init__(self, shares):
+        self._shares = shares
+
+    def link_shares(self):
+        return dict(self._shares)
+
+
+class TestMigrationCostModel:
+    def _move_cands(self, engine):
+        placed = next(iter(engine.placed.values()))
+        other = next(c for c in engine.enumerate_feasible(placed.request)
+                     if c.node.node_id != placed.candidate.node.node_id)
+        return placed.candidate, other
+
+    def test_contention_raises_the_penalty(self):
+        engine = _loaded_engine(n_apps=40)
+        old, new = self._move_cands(engine)
+        model = MigrationCostModel(state_mb=64.0, time_coef=0.01)
+        idle = model.penalty(old, new, 0.01)
+        lid = (new.links or old.links)[0].link_id
+        model.bind(_FakeExecutor({lid: 3}))        # 3 transfers already on it
+        congested = model.penalty(old, new, 0.01)
+        assert congested > idle > 0.01             # transfer time priced in
+        assert model.penalty(old, old, 0.01) == 0.0
+
+    def test_policies_accept_the_cost_model(self):
+        engine = _loaded_engine(n_apps=120)
+        window = engine.recent(40)
+        for name in ("milp", "greedy", "decomposed"):
+            pol = get_policy(name, cost_model=MigrationCostModel())
+            res = pol.plan(engine, window)
+            assert [s.req_id for s in res.satisfaction] == list(window)
+            assert res.s_before == pytest.approx(2.0 * len(window))
+
+    def test_higher_transfer_cost_suppresses_marginal_moves(self):
+        engine = _loaded_engine(n_apps=120)
+        window = engine.recent(40)
+        plain = get_policy("milp").plan(engine, window)
+        pricey = get_policy(
+            "milp", cost_model=MigrationCostModel(time_coef=10.0)
+        ).plan(engine, window)
+        assert pricey.n_moved <= plain.n_moved
+
+
+# ------------------------------------------------------- link-cut failures
+class TestLinkFailures:
+    def test_offline_link_filters_candidates(self):
+        engine = PlacementEngine(_TOPO)
+        req = PlacementRequest(0, NAS_FT, "input0",
+                               Requirement(r_upper=None, p_upper=10_000.0,
+                                           objective="response"))
+        with_link = [c for c in engine.enumerate_feasible(req)
+                     if any(l.link_id == "link_carrier0_cloud0" for l in c.links)]
+        assert with_link                           # cloud candidates exist
+        engine.set_link_online("link_carrier0_cloud0", False)
+        for c in engine.enumerate_feasible(req):
+            assert all(l.link_id != "link_carrier0_cloud0" for l in c.links)
+        assert not engine.fits(req, with_link[0])
+        engine.set_link_online("link_carrier0_cloud0", True)
+        assert engine.offline_links == set()
+
+    def test_cut_aborts_crossing_transfer_with_source_rollback(self):
+        engine = PlacementEngine(_TOPO)
+        req = PlacementRequest(0, NAS_FT, "input0",
+                               Requirement(r_upper=None, p_upper=10_000.0,
+                                           objective="response"))
+        cands = engine.enumerate_feasible(req)
+        src = next(c for c in cands if c.node.site_id == "carrier0")
+        dst = next(c for c in cands if c.node.site_id == "cloud0")
+        engine.commit(req, src)
+        executor = MigrationExecutor()
+        events = EventQueue()
+        mv = Move(0, src, dst, 1.0)
+        engine.placed[0].state = "migrating"
+        executor.waiting.append(mv)
+        executor._pump(engine, 0.0, events)
+        assert 0 in executor.active
+        cut = "link_carrier0_cloud0"
+        assert cut in executor.active[0].links
+        engine.set_link_online(cut, False)
+        rolled_back, homeless = executor.on_link_failure(engine, cut, 1.0, events)
+        assert rolled_back == [0] and homeless == []
+        assert engine.placed[0].candidate == src
+        assert engine.placed[0].state == STATE_PLACED
+        assert executor.records[-1].outcome == "aborted"
+        assert all(v == 0.0 for v in engine.link_reserved.values())
+        assert engine.occupancy_invariants_ok()
+
+    def test_backbone_cut_scenario_end_to_end(self):
+        fps = []
+        for _ in range(2):
+            spec = build_scenario("backbone-cut", seed=0, n_arrivals=250)
+            rt = spec.make_runtime(get_policy("greedy"))
+            tel = rt.run(spec.event_queue(), scenario=spec.name, seed=0)
+            c = tel.counters
+            assert c["link_failures"] == 1 and c["link_recoveries"] == 1
+            assert c["linkfail_moved"] + c["linkfail_lost"] >= 1
+            assert "link_carrier0_cloud0" not in rt.engine.offline_links
+            assert rt.engine.occupancy_invariants_ok()
+            fps.append(tel.fingerprint())
+        assert fps[0] == fps[1]
+
+
+# ------------------------------------------- bandwidth-reserving transfers
+class TestBandwidthReservingTransfers:
+    def _setup(self, reserve_mbps):
+        """App 0 lives at carrier0 (2 Mbps over the 10 Mbps user uplink)
+        and starts migrating to cloud0; app 1 then arrives needing the
+        same uplink (price cap admits cloud only)."""
+        engine = PlacementEngine(_TOPO)
+        req = PlacementRequest(0, NAS_FT, "input0",
+                               Requirement(r_upper=None, p_upper=10_000.0,
+                                           objective="response"))
+        cands = engine.enumerate_feasible(req)
+        src = next(c for c in cands if c.node.site_id == "carrier0")
+        dst = next(c for c in cands if c.node.site_id == "cloud0")
+        engine.commit(req, src)
+        executor = MigrationExecutor(reserve_mbps=reserve_mbps)
+        events = EventQueue()
+        engine.placed[0].state = "migrating"
+        executor.waiting.append(Move(0, src, dst, 1.0))
+        executor._pump(engine, 0.0, events)
+        assert 0 in executor.active
+        return engine
+
+    def test_saturating_migration_rejects_previously_admitted_arrival(self):
+        arrival = PlacementRequest(1, NAS_FT, "input0",
+                                   Requirement(r_upper=None, p_upper=7_500.0,
+                                               objective="response"))
+        # Without reservations the arrival is admitted (6 Mbps residual)…
+        engine = self._setup(reserve_mbps=0.0)
+        assert engine.place(arrival) is not None
+        # …with an 8 Mbps reservation (clamped to the 6 Mbps residual) the
+        # very same arrival is rejected: migration traffic now counts
+        # against admission control.
+        engine = self._setup(reserve_mbps=8.0)
+        assert engine.link_reserved["link_user0_carrier0"] == pytest.approx(6.0)
+        assert engine.place(arrival) is None
+        assert engine.occupancy_invariants_ok()
+
+
+# -------------------------------------------------- scale ×4 acceptance
+@pytest.mark.slow
+class TestScaleAcceptance:
+    BUDGET_S = 0.25   # AdaptivePolicy's default solver-time budget
+
+    def test_decomposed_within_budget_where_milp_blows_it(self):
+        """ISSUE acceptance: at scale ×4 (window 400×scale, the ROADMAP
+        window sweep) the decomposed planner produces an accepted plan
+        within the adaptive solver budget on ticks where the monolithic
+        MILP exceeds it — while matching ≥95 % of its satisfaction gain.
+
+        Wall-clock capability is measured best-of-3 per policy so a
+        transiently loaded machine (the suite runs after the JAX-heavy
+        modules) doesn't turn the claim into a flake."""
+        topo = build_paper_topology(scale=4)
+        engine = _loaded_engine(topo, n_apps=2500, seed=0)
+        window = engine.recent(1600)
+        rng = np.random.default_rng(0)
+        weights = {r: float(rng.uniform(0.2, 5.0)) for r in window}
+        milp_t, dec_t = [], []
+        for _ in range(3):
+            milp = get_policy("milp").plan(engine, window, weights=weights)
+            dec = get_policy("decomposed").plan(engine, window, weights=weights)
+            milp_t.append(milp.plan_time_s)
+            dec_t.append(dec.plan_time_s)
+            assert dec.accepted
+            assert dec.gain >= 0.95 * milp.gain - 1e-9
+        assert min(dec_t) < min(milp_t)
+        if min(milp_t) > self.BUDGET_S:
+            assert min(dec_t) <= self.BUDGET_S
+
+    def test_determinism_fingerprint_scale4(self):
+        """Decomposed planning keeps the replay contract at scale ×4."""
+        fps = []
+        for _ in range(2):
+            spec = build_scenario("paper-steady-state", seed=2, scale=4,
+                                  n_arrivals=900)
+            rt = spec.make_runtime(get_policy("decomposed"))
+            tel = rt.run(spec.event_queue(), scenario=spec.name, seed=2)
+            assert tel.counters["admitted"] > 0 and tel.ticks
+            fps.append(tel.fingerprint())
+        assert fps[0] == fps[1]
