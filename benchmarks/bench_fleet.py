@@ -27,13 +27,15 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga", "adaptive",
-                    "decomposed", "horizon")
+                    "decomposed", "incremental", "horizon")
 
 #: The cliff sweep: cheaper policy set (no GA — its cost is orthogonal to
 #: topology scale) over the scenarios that exercise steady churn and the
-#: new link-cut path.
+#: new link-cut path.  ``incremental`` rides next to ``decomposed`` so the
+#: rows expose the incremental-vs-full planning latency column directly.
 SCALE_SWEEP_SCALES = (2, 4, 8)
-SCALE_SWEEP_POLICIES = ("milp", "decomposed", "horizon", "adaptive", "greedy")
+SCALE_SWEEP_POLICIES = ("milp", "decomposed", "incremental", "horizon",
+                        "adaptive", "greedy")
 
 
 def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
@@ -61,6 +63,10 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
         "max_region_solve_s": round(max((t.region_solve_max_s for t in ticks),
                                         default=0.0), 6),
         "boundary_crossings": sum(t.boundary_crossings for t in ticks),
+        # incremental-planning telemetry (zero under non-incremental policies)
+        "regions_solved": sum(t.n_regions for t in ticks),
+        "regions_reused": sum(t.regions_reused for t in ticks),
+        "warm_start_hits": sum(t.warm_start_hits for t in ticks),
         **d["counters"],
         **d["summary"],
     }
@@ -109,10 +115,65 @@ def scale_sweep(
     return rows
 
 
+def steady_tick_rows(scales: Sequence[int] = (2, 4),
+                     seed: int = 0, n_ticks: int = 5) -> List[Dict]:
+    """Steady-state tick cost microbench: the paper's relocation loop
+    re-solves *periodically regardless of churn*, so the cost of a tick in
+    a quiet period — no arrivals/departures/drifts since the last plan —
+    is a first-class quantity.  The full decomposed planner pays its whole
+    solve chain every time; the incremental planner's change journal sees
+    no dirty regions and replays every cached plan.  One row per
+    (scale, policy) with the first (cold) tick split out."""
+    import numpy as np
+
+    from repro.core import PlacementEngine, build_paper_topology, sample_requests
+    from repro.fleet import get_policy
+
+    rows: List[Dict] = []
+    for scale in scales:
+        topo = build_paper_topology(scale=scale)
+        engine = PlacementEngine(topo)
+        rng = np.random.default_rng(seed)
+        for r in sample_requests(topo, 625 * scale, rng):
+            engine.place(r)
+        window = engine.recent(400 * scale)
+        weights = {r: 1.0 for r in window}
+        base = None
+        for pol in ("decomposed", "incremental"):
+            p = get_policy(pol)
+            times, res = [], None
+            for _ in range(n_ticks):
+                res = p.plan(engine, window, weights=weights)
+                times.append(res.plan_time_s)
+            stats = p.last_plan_stats
+            key = (round(res.s_after, 9),
+                   tuple(sorted((m.req_id, m.new.node.node_id)
+                                for m in res.moves)))
+            if base is None:
+                base = key
+            assert key == base, "steady-tick parity violated"
+            rows.append({
+                "benchmark": "steady_tick",
+                "scenario": "steady-tick",
+                "policy": pol,
+                "scale": scale,
+                "window": len(window),
+                "first_tick_s": round(times[0], 6),
+                "mean_steady_tick_s": round(
+                    sum(times[1:]) / max(len(times) - 1, 1), 6),
+                "regions_solved_last": stats.n_regions,
+                "regions_reused_last": stats.regions_reused,
+                "warm_start_hits_last": stats.warm_start_hits,
+            })
+    return rows
+
+
 def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     """CI sanity slice: fast cells with every moving part exercised
     (request streams, in-flight migrations, adaptive switching, the
-    decomposed planner at topology scale ×``scale``, a backbone cut)."""
+    decomposed and incremental planners at topology scale ×``scale``, a
+    backbone cut).  The incremental cell doubles as the solver
+    microbenchmark: CI asserts its warm-start hit-rate is > 0."""
     return [
         _cell("paper-steady-state", "greedy", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 250}),
@@ -121,6 +182,8 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
         _cell("backbone-cut", "milp", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 200}),
         _cell("paper-steady-state", "decomposed", seed, with_ticks=False,
+              scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
+        _cell("paper-steady-state", "incremental", seed, with_ticks=False,
               scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
     ]
 

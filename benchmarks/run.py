@@ -29,11 +29,13 @@ def run_json(out_path: str, seed: int) -> int:
         SCALE_SWEEP_POLICIES,
         SCALE_SWEEP_SCALES,
         scale_sweep,
+        steady_tick_rows,
         sweep,
     )
 
     rows = sweep(seed=seed)
     scaled = scale_sweep(seed=seed)
+    steady = steady_tick_rows(seed=seed)
     doc = {
         "benchmark": "fleet_runtime",
         "seed": seed,
@@ -41,12 +43,26 @@ def run_json(out_path: str, seed: int) -> int:
         "scale_sweep": {"scales": list(SCALE_SWEEP_SCALES),
                         "policies": list(SCALE_SWEEP_POLICIES)},
         "rows": rows + scaled,
+        "steady_tick": steady,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {out_path}: {len(rows)} scale-1 rows + "
-          f"{len(scaled)} scale-sweep rows")
+          f"{len(scaled)} scale-sweep rows + {len(steady)} steady-tick rows")
+    for sc in sorted({r["scale"] for r in steady}):
+        by_pol = {r["policy"]: r for r in steady if r["scale"] == sc}
+        dec, inc = by_pol["decomposed"], by_pol["incremental"]
+        ratio = dec["mean_steady_tick_s"] / max(inc["mean_steady_tick_s"], 1e-9)
+        print(f"  steady-tick x{sc}: decomposed={dec['mean_steady_tick_s']*1e3:.1f}ms "
+              f"incremental={inc['mean_steady_tick_s']*1e3:.1f}ms "
+              f"({ratio:.1f}x, reused {inc['regions_reused_last']}/"
+              f"{inc['regions_reused_last'] + inc['regions_solved_last']})")
     ok = 0
+    # Incremental-vs-full acceptance: identical behavior fingerprints at
+    # scale ×1 (deterministic policies), and the ×4 window-1600 sweep's
+    # planning-latency ratio.
+    by_cell = {(r["scenario"], r["scale"], r["policy"]): r
+               for r in rows + scaled}
     for r in rows + scaled:
         flag = ""
         if (r["scenario"] == "paper-steady-state" and r["policy"] == "milp"
@@ -56,7 +72,18 @@ def run_json(out_path: str, seed: int) -> int:
                       and abs(r["mean_moved_ratio"] - 1.96) <= 0.15)
             flag = f"  [paper envelope ±0.15: {'OK' if in_env else 'MISS'}]"
             ok |= 0 if in_env else 1
-        print(f"  {r['scenario']:28s} {r['policy']:10s} x{r['scale']:<2d} "
+        if r["policy"] == "incremental":
+            dec = by_cell.get((r["scenario"], r["scale"], "decomposed"))
+            if dec is not None:
+                if r["scale"] == 1:
+                    same = r["fingerprint"] == dec["fingerprint"]
+                    flag += f"  [fp == decomposed: {'OK' if same else 'MISS'}]"
+                    ok |= 0 if same else 1
+                elif dec["mean_solver_time_s"] > 0:
+                    speedup = dec["mean_solver_time_s"] / max(
+                        r["mean_solver_time_s"], 1e-9)
+                    flag += f"  [vs decomposed: {speedup:.1f}x]"
+        print(f"  {r['scenario']:28s} {r['policy']:11s} x{r['scale']:<2d} "
               f"ratio={_ratio(r['mean_moved_ratio'])} "
               f"ratio_w={_ratio(r['mean_moved_ratio_weighted'])} "
               f"moves={r['moves']:4d} "
@@ -76,11 +103,16 @@ def run_smoke(seed: int, scale: int) -> int:
         ok = r["admitted"] > 0 and r["ticks"] > 0
         if r["scenario"] == "backbone-cut":
             ok = ok and r["link_failures"] > 0
+        if r["policy"] == "incremental":
+            # Solver microbenchmark gate: the warm-start path must be live.
+            ok = ok and r["warm_start_hits"] > 0
         bad |= 0 if ok else 1
-        print(f"  {r['scenario']:28s} {r['policy']:10s} x{r['scale']:<2d} "
+        print(f"  {r['scenario']:28s} {r['policy']:11s} x{r['scale']:<2d} "
               f"admitted={r['admitted']} ticks={r['ticks']} "
               f"migs={r['migrations_completed']} "
               f"ratio={_ratio(r['mean_moved_ratio'])} "
+              f"warm={r['warm_start_hits']}/{r['regions_solved']} "
+              f"reused={r['regions_reused']} "
               f"[{'OK' if ok else 'FAIL'}]")
     return bad
 

@@ -15,6 +15,8 @@ reconfiguration layer (`core.reconfig`) and the TPU-fleet scheduler
 from __future__ import annotations
 
 import dataclasses
+import itertools
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -33,6 +35,87 @@ from .topology import Topology
 
 STATE_PLACED = "placed"
 STATE_MIGRATING = "migrating"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChangeRecord:
+    """One engine mutation and the resources it touched — the unit of the
+    per-tick change journal incremental planners consume (arrivals,
+    departures, drifts = release+place pairs, failures, recoveries, move
+    lifecycle steps, and transfer bandwidth reservations)."""
+
+    kind: str
+    req_id: Optional[int]
+    nodes: Tuple[str, ...]
+    links: Tuple[str, ...]
+
+
+class ChangeJournal:
+    """Bounded append-only log of engine mutations.
+
+    Consumers keep a cursor (a value of ``total``) and ask for everything
+    ``since`` it; when the ring has dropped entries past a cursor the
+    journal answers ``None`` — "I can't tell you what changed, treat the
+    whole fleet as dirty"."""
+
+    def __init__(self, maxlen: int = 100_000) -> None:
+        self._q: deque = deque(maxlen=maxlen)
+        self.total = 0
+
+    def record(self, kind: str, req_id: Optional[int] = None,
+               nodes: Sequence[str] = (), links: Sequence[str] = ()) -> None:
+        self._q.append(ChangeRecord(kind, req_id, tuple(nodes), tuple(links)))
+        self.total += 1
+
+    @property
+    def start(self) -> int:
+        """Cursor of the oldest retained entry."""
+        return self.total - len(self._q)
+
+    def since(self, cursor: int) -> Optional[List[ChangeRecord]]:
+        """Entries appended after ``cursor``; None when the ring already
+        dropped some of them (the caller must invalidate everything)."""
+        if cursor < self.start:
+            return None
+        if cursor >= self.total:
+            return []
+        return list(itertools.islice(self._q, cursor - self.start, None))
+
+
+@dataclasses.dataclass
+class CandidateSet:
+    """A request's feasibility-filtered candidates plus pre-extracted
+    per-candidate metric arrays (hot-path vectorization: policies and the
+    MILP builder consume the arrays instead of touching attributes)."""
+
+    cands: List[Candidate]
+    response_arr: np.ndarray       # response_s per candidate
+    price_arr: np.ndarray          # price per candidate
+    node_id_arr: np.ndarray        # node_id per candidate ('<U' array)
+    index_of: Dict[str, int]       # node_id -> candidate index
+    _moved_masks: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def moved_mask(self, node_id: str) -> np.ndarray:
+        """Boolean mask of candidates NOT on ``node_id`` (the move-penalty
+        mask), cached per current node — string comparison over the
+        candidate array is a measurable per-tick cost at fleet scale."""
+        m = self._moved_masks.get(node_id)
+        if m is None:
+            m = self.node_id_arr != node_id
+            self._moved_masks[node_id] = m
+        return m
+
+
+def _make_candidate_set(cands: List[Candidate]) -> CandidateSet:
+    k = len(cands)
+    return CandidateSet(
+        cands=cands,
+        response_arr=np.fromiter((c.response_s for c in cands), np.float64, k),
+        price_arr=np.fromiter((c.price for c in cands), np.float64, k),
+        node_id_arr=np.array([c.node.node_id for c in cands]) if k
+        else np.array([], dtype=str),
+        index_of={c.node.node_id: j for j, c in enumerate(cands)},
+    )
 
 
 @dataclasses.dataclass
@@ -78,7 +161,11 @@ class PlacementEngine:
         # flushed whenever that state flips).  Large-window policies call
         # `enumerate_feasible` for every window app every tick — without
         # the cache that enumeration dominates plan time at scale ×4/×8.
-        self._cand_cache: Dict[PlacementRequest, List[Candidate]] = {}
+        # Entries carry pre-extracted metric arrays (`CandidateSet`).
+        self._cand_cache: Dict[int, CandidateSet] = {}
+        # Mutation journal: incremental planners map the entries since
+        # their last plan onto partition regions and re-solve only those.
+        self.journal = ChangeJournal()
         # In-flight migrations (fleet runtime): destination reservation per
         # migrating app.  While a pre-copy transfer runs, BOTH the source
         # candidate and the destination reservation are occupied (the
@@ -99,6 +186,8 @@ class PlacementEngine:
         else:
             self.offline_nodes.add(node_id)
         self._cand_cache.clear()
+        self.journal.record("recovery" if online else "failure",
+                            nodes=(node_id,))
 
     def set_link_online(self, link_id: str, online: bool) -> None:
         """Mark a link cut/repaired.  Offline links disqualify every
@@ -111,6 +200,8 @@ class PlacementEngine:
         else:
             self.offline_links.add(link_id)
         self._cand_cache.clear()
+        self.journal.record("link_recovery" if online else "link_failure",
+                            links=(link_id,))
 
     def apps_on_node(self, node_id: str) -> List[int]:
         """req_ids whose *source* copy lives on ``node_id`` (admission
@@ -170,16 +261,27 @@ class PlacementEngine:
             if amt > 0.0:
                 self.link_reserved[lid] += amt
                 out[lid] = amt
+        if out:
+            self.journal.record("reserve", links=tuple(out))
         return out
 
     def release_link_bandwidth(self, reserved: Dict[str, float]) -> None:
         for lid, amt in reserved.items():
             self.link_reserved[lid] = max(self.link_reserved[lid] - amt, 0.0)
+        if reserved:
+            self.journal.record("unreserve", links=tuple(reserved))
 
     def _occupy(self, request: PlacementRequest, cand: Candidate, sign: float) -> None:
         self.node_used[cand.node.node_id] += sign * request.app.device_usage
         for link in cand.links:
             self.link_used[link.link_id] += sign * request.app.bandwidth_mbps
+
+    def _journal(self, kind: str, req_id: int, *cands: Candidate) -> None:
+        """Record a placement mutation touching the given candidates'
+        resources (node + uplink path per candidate)."""
+        nodes = tuple(c.node.node_id for c in cands)
+        links = tuple(l.link_id for c in cands for l in c.links)
+        self.journal.record(kind, req_id=req_id, nodes=nodes, links=links)
 
     # ----------------------------------------------------------- placement
     def enumerate_feasible(self, request: PlacementRequest) -> List[Candidate]:
@@ -187,16 +289,24 @@ class PlacementEngine:
         capacity — the candidate set reconfiguration policies optimize
         over.  Cached per request until the online state changes; callers
         get a fresh list (candidates themselves are immutable)."""
-        cached = self._cand_cache.get(request)
+        return list(self.candidate_set(request).cands)
+
+    def candidate_set(self, request: PlacementRequest) -> CandidateSet:
+        """`enumerate_feasible` plus the cached per-candidate metric arrays
+        (response/price/node-id) — the form the vectorized policies and the
+        MILP builder consume.  The returned object is shared: callers must
+        not mutate it."""
+        cached = self._cand_cache.get(request.req_id)
         if cached is None:
             cands = enumerate_candidates(self.topo, request, self.allow_cpu_fallback,
                                          all_sites=self.all_sites)
             cands = filter_candidates(request, cands)
-            cached = [c for c in cands
-                      if c.node.node_id not in self.offline_nodes
-                      and not any(l.link_id in self.offline_links for l in c.links)]
-            self._cand_cache[request] = cached
-        return list(cached)
+            cands = [c for c in cands
+                     if c.node.node_id not in self.offline_nodes
+                     and not any(l.link_id in self.offline_links for l in c.links)]
+            cached = _make_candidate_set(cands)
+            self._cand_cache[request.req_id] = cached
+        return cached
 
     def feasible_candidates(self, request: PlacementRequest) -> List[Candidate]:
         """Constraints (2)–(5) applied to the raw candidate set."""
@@ -208,7 +318,7 @@ class PlacementEngine:
         cands = self.feasible_candidates(request)
         if not cands:
             self.rejected.append(request)
-            self._cand_cache.pop(request, None)   # dead request: no re-plan
+            self._cand_cache.pop(request.req_id, None)   # dead request: no re-plan
             return None
         if request.requirement.objective == OBJ_RESPONSE:
             key = lambda c: (c.response_s, c.price, c.node.node_id)
@@ -222,7 +332,7 @@ class PlacementEngine:
         cands = self.feasible_candidates(request)
         if not cands:
             self.rejected.append(request)
-            self._cand_cache.pop(request, None)
+            self._cand_cache.pop(request.req_id, None)
             return None
         # Single-app window: encode objective metric via r/p_before = 1 and
         # zeroing the other term by scaling; simplest is direct coefficients.
@@ -239,7 +349,7 @@ class PlacementEngine:
         res = solve_milp(problem, backend=backend)
         if not res.ok:
             self.rejected.append(request)
-            self._cand_cache.pop(request, None)
+            self._cand_cache.pop(request.req_id, None)
             return None
         choice = index.decode(res.x)[0]
         return self.commit(request, cands[choice])
@@ -251,6 +361,7 @@ class PlacementEngine:
         app = PlacedApp(request, cand, cand.response_s, cand.price)
         self.placed[request.req_id] = app
         self.placement_order.append(request.req_id)
+        self._journal("arrival", request.req_id, cand)
         return app
 
     # ------------------------------------------- migration (time-extended)
@@ -274,6 +385,7 @@ class PlacementEngine:
         self._occupy(app.request, new_cand, +1.0)
         self.in_flight[req_id] = new_cand
         app.state = STATE_MIGRATING
+        self._journal("move_begin", req_id, new_cand)
         return True
 
     def commit_move(self, req_id: int) -> PlacedApp:
@@ -281,6 +393,7 @@ class PlacementEngine:
         becomes the live placement and the source copy (if any) is freed."""
         app = self.placed[req_id]
         new_cand = self.in_flight.pop(req_id)
+        old_cand = app.candidate
         if req_id in self.suspended:
             self.suspended.discard(req_id)   # source already released
         else:
@@ -289,6 +402,7 @@ class PlacementEngine:
         app.response_s = new_cand.response_s
         app.price = new_cand.price
         app.state = STATE_PLACED
+        self._journal("move_commit", req_id, old_cand, new_cand)
         return app
 
     def abort_move(self, req_id: int) -> PlacedApp:
@@ -301,6 +415,7 @@ class PlacementEngine:
         self._occupy(app.request, new_cand, -1.0)
         if req_id not in self.suspended:
             app.state = STATE_PLACED
+        self._journal("move_abort", req_id, new_cand)
         return app
 
     def suspend(self, req_id: int) -> PlacedApp:
@@ -313,6 +428,7 @@ class PlacementEngine:
         self._occupy(app.request, app.candidate, -1.0)
         self.suspended.add(req_id)
         app.state = STATE_MIGRATING
+        self._journal("suspend", req_id, app.candidate)
         return app
 
     def resume_at_source(self, req_id: int) -> bool:
@@ -324,6 +440,7 @@ class PlacementEngine:
         self._occupy(app.request, app.candidate, +1.0)
         self.suspended.discard(req_id)
         app.state = STATE_PLACED
+        self._journal("resume", req_id, app.candidate)
         return True
 
     def drop(self, req_id: int) -> None:
@@ -337,7 +454,9 @@ class PlacementEngine:
             self._occupy(app.request, dest, -1.0)
         self.placement_order.remove(req_id)
         self.rejected.append(app.request)
-        self._cand_cache.pop(app.request, None)
+        self._cand_cache.pop(req_id, None)
+        self._journal("drop", req_id,
+                      *((dest,) if dest is not None else ()))
 
     # ----------------------------------------------------------- migration
     def apply_move(self, req_id: int, new_cand: Candidate) -> PlacedApp:
@@ -353,9 +472,11 @@ class PlacementEngine:
             self._occupy(app.request, app.candidate, +1.0)  # roll back
             raise
         self._occupy(app.request, new_cand, +1.0)
+        old_cand = app.candidate
         app.candidate = new_cand
         app.response_s = new_cand.response_s
         app.price = new_cand.price
+        self._journal("move", req_id, old_cand, new_cand)
         return app
 
     def release(self, req_id: int) -> None:
@@ -367,7 +488,9 @@ class PlacementEngine:
         if dest is not None:
             self._occupy(app.request, dest, -1.0)
         self.placement_order.remove(req_id)
-        self._cand_cache.pop(app.request, None)
+        self._cand_cache.pop(req_id, None)
+        self._journal("departure", req_id, app.candidate,
+                      *((dest,) if dest is not None else ()))
 
     def free_capacity_excluding(
         self, window: Sequence[int]

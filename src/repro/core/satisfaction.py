@@ -16,7 +16,7 @@ import dataclasses
 from typing import Dict, Mapping, Optional, Sequence
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class AppSatisfaction:
     req_id: int
     r_before: float

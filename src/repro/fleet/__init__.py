@@ -55,10 +55,11 @@ from .policies import (  # noqa: F401
     ReconfigPolicy,
     get_policy,
 )
-from .planner import (  # noqa: F401  (also registers decomposed/horizon)
+from .planner import (  # noqa: F401  (also registers decomposed/incremental/horizon)
     DecomposedPolicy,
     DemandForecaster,
     HorizonPolicy,
+    IncrementalPolicy,
     MigrationCostModel,
     Partition,
     Region,

@@ -8,7 +8,10 @@ giving up the satisfaction objective:
                     with boundary-link budgets
   decomposed      — one small MILP per region + a greedy coordination pass
                     arbitrating cross-boundary moves, merged into one
-                    conflict-free `ReconfigResult`
+                    conflict-free `ReconfigResult`; its *incremental* mode
+                    (policy ``incremental``) consumes the engine's change
+                    journal to re-solve only dirty regions, replaying
+                    cached plans for clean ones and warm-starting the rest
   forecast        — sample each app's `RateCurve` ahead of the clock
                     (peak/mean over a rolling horizon) + forecast-error
                     scoring
@@ -17,16 +20,18 @@ giving up the satisfaction objective:
   migration_cost  — price each candidate move's transfer time (executor
                     ledger contention included) into the move penalty
 
-Importing this package registers the ``decomposed`` and ``horizon``
-policies in `fleet.policies.POLICIES`; `repro.fleet` imports it eagerly.
+Importing this package registers the ``decomposed``, ``incremental`` and
+``horizon`` policies in `fleet.policies.POLICIES`; `repro.fleet` imports
+it eagerly.
 """
 
 from ..policies import POLICIES
-from .decomposed import DecomposedPolicy  # noqa: F401
+from .decomposed import DecomposedPolicy, IncrementalPolicy  # noqa: F401
 from .forecast import DemandForecaster, Forecast  # noqa: F401
 from .horizon import HorizonPolicy  # noqa: F401
 from .migration_cost import MigrationCostModel  # noqa: F401
 from .partition import Partition, Region, partition_topology  # noqa: F401
 
 POLICIES.setdefault(DecomposedPolicy.name, DecomposedPolicy)
+POLICIES.setdefault(IncrementalPolicy.name, IncrementalPolicy)
 POLICIES.setdefault(HorizonPolicy.name, HorizonPolicy)

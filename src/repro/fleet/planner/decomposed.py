@@ -1,9 +1,9 @@
 """Decomposed reconfiguration: partition → solve → coordinate → merge.
 
-The monolithic MILP re-optimizes the whole window jointly; its dense
-constraint matrix grows with window × topology and falls off a latency
-cliff right where the north-star begins.  The decomposed planner exploits
-the tree structure instead:
+The monolithic MILP re-optimizes the whole window jointly; its constraint
+matrix grows with window × topology and falls off a latency cliff right
+where the north-star begins.  The decomposed planner exploits the tree
+structure instead:
 
 1. **partition** the site tree into regions (`planner.partition`) — on the
    paper topology one region per cloud subtree, which block-diagonalizes
@@ -27,17 +27,42 @@ the tree structure instead:
    plan can never double-book a node or link (the property tests assert
    exactly this against `free_capacity_excluding`).
 
-On the paper topology at scale ×1 the regional MILPs partition the
-monolithic problem into its natural blocks and the result matches the
-exact solver; at scale ×4/×8 the regional problems stay constant-size
-while the monolithic matrix explodes — see ``BENCH_fleet.json``'s scale
-sweep for the recorded cliff.
+**Incremental mode** (``incremental=True``, registered as the
+``incremental`` policy) makes the per-tick cost proportional to the
+*delta* since the last plan:
+
+* the engine's change journal (`PlacementEngine.journal`) is mapped onto
+  partition regions — an arrival/departure/drift/failure/recovery only
+  dirties the regions whose nodes or links it touched (a boundary-link
+  event dirties BOTH adjacent regions);
+* a clean region whose exact MILP inputs (apps, weights, candidate sets,
+  shadow residuals — boundary budgets included) match the cached
+  signature **reuses its cached assignment** instead of re-solving.  The
+  signature guard is what keeps reuse sound under Gauss–Seidel coupling:
+  if an earlier region's claims shifted this region's visible residuals,
+  the signature differs and the region re-solves;
+* dirty regions re-solve with the previous assignment (cached plan
+  re-projected onto the current candidate set, else the live do-nothing
+  assignment) as a **warm start** — the B&B backend prunes against it and
+  branches toward it, and either backend falls back to it on deadline.
+
+The merged result is byte-identical to the full decomposed planner's (the
+telemetry fingerprint asserts this end-to-end): reuse only ever replays a
+solve whose inputs were proven unchanged.  The byte-parity contract is
+scoped to the default HiGHS backend (which ignores the incumbent except
+as a deadline fallback); under the scipy-free B&B fallback a warm start
+can return a *different representative of tied optima* — the objective,
+gain and satisfaction are identical, but the chosen nodes (and hence
+fingerprints) may differ on symmetric topologies.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from repro.core.lp import AppVars, build_joint_milp
 from repro.core.placement import PlacementEngine
@@ -48,13 +73,32 @@ from repro.core.topology import Topology
 
 from ..policies import (
     ReconfigPolicy,
-    _result_from_assignment,
+    _result_from_batch,
     _Shadow,
-    _window_context,
     _WindowApp,
 )
 from ..telemetry import PlanStats
 from .partition import Partition, partition_topology
+
+
+@dataclasses.dataclass
+class _RegionPlan:
+    """Cached outcome of one region's MILP: the exact input signature it
+    was solved under and the chosen candidate per app (global candidate
+    index + node id, for cross-checking after candidate-set rebuilds)."""
+
+    sig: Tuple
+    choices: Dict[int, Tuple[int, str]]    # req_id -> (cand idx, node_id)
+
+
+@dataclasses.dataclass
+class _RegionInputs:
+    """Everything one regional MILP consumes, assembled without solving."""
+
+    app_vars: List[AppVars]
+    keeps: List[np.ndarray]        # kept candidate indices, sorted ascending
+    node_cap: Dict[str, float]
+    link_cap: Dict[str, float]
 
 
 class DecomposedPolicy(ReconfigPolicy):
@@ -67,7 +111,8 @@ class DecomposedPolicy(ReconfigPolicy):
                  k_regions: Optional[int] = None,
                  boundary_budget_frac: float = 0.5,
                  coordinate: bool = True,
-                 backend: str = "auto", time_limit_s: float = 10.0):
+                 backend: str = "auto", time_limit_s: float = 10.0,
+                 incremental: bool = False):
         super().__init__(move_penalty, accept_threshold, cost_model)
         self.max_region_nodes = max_region_nodes
         self.k_regions = k_regions
@@ -75,59 +120,172 @@ class DecomposedPolicy(ReconfigPolicy):
         self.coordinate = coordinate
         self.backend = backend
         self.time_limit_s = time_limit_s
+        self.incremental = incremental
         # Last (topo, partition) pair — topologies are immutable, and a
         # policy plans against one fleet at a time, so one slot suffices
         # (a dict keyed by id() would pin every topology ever seen).
         self._partition: Optional[Partition] = None
+        # Incremental state: per-region cached plans, the journal cursor
+        # they are valid from, and the engine they were observed on.
+        self._region_cache: Dict[str, _RegionPlan] = {}
+        self._cursor = 0
+        self._engine: Optional[PlacementEngine] = None
+        self.last_dirty_regions: Optional[Set[str]] = None
+        # Whole-tick replay cache: (window, norm weights, result pieces,
+        # plan stats).  Valid only while the journal stays empty.
+        self._tick_cache: Optional[Tuple] = None
 
     # -------------------------------------------------------------- partition
     def partition_for(self, topo: Topology) -> Partition:
         if self._partition is None or self._partition.topo is not topo:
             self._partition = partition_topology(
                 topo, self.max_region_nodes, self.k_regions)
+            self._region_cache.clear()
         return self._partition
+
+    # ---------------------------------------------------------------- journal
+    def _dirty_since(self, engine: PlacementEngine,
+                     part: Partition) -> Optional[Set[str]]:
+        """Regions touched by engine mutations since the last plan; None
+        means "unknown — treat everything dirty" (first plan against this
+        engine, or the journal ring already dropped entries)."""
+        if self._engine is not engine:
+            self._engine = engine
+            self._region_cache.clear()
+            self._cursor = engine.journal.total
+            return None
+        entries = engine.journal.since(self._cursor)
+        self._cursor = engine.journal.total
+        if entries is None:
+            self._region_cache.clear()
+            return None
+        dirty: Set[str] = set()
+        for e in entries:
+            for nid in e.nodes:
+                rid = part.region_of_node.get(nid)
+                if rid is not None:
+                    dirty.add(rid)
+            for lid in e.links:
+                dirty.update(part.regions_of_link(lid))
+        return dirty
 
     # ------------------------------------------------------------------- plan
     def plan(self, engine: PlacementEngine, window: Sequence[int],
              weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         t0 = time.perf_counter()
-        ctx = _window_context(engine, window)
         norm = normalize_weights(window, weights) if weights is not None else None
+        # Whole-tick replay: with an empty journal and identical window +
+        # weights, the entire plan — not just each region's — is determined
+        # by the cached result.  This is the paper's quiet-period periodic
+        # re-calculation collapsing to O(1): nothing changed, nothing paid.
+        # (Gated off under a cost model: its penalties also depend on the
+        # executor ledger, which is not fully journaled at reserve=0.)
+        if (self.incremental and self.cost_model is None
+                and self._tick_cache is not None
+                and self._engine is engine
+                and engine.journal.total == self._cursor):
+            c_window, c_norm, c_moves, c_sat, c_s_after, c_accepted, c_stats \
+                = self._tick_cache
+            if c_window == tuple(window) and c_norm == norm:
+                self.last_dirty_regions = set()
+                self.last_plan_stats = dataclasses.replace(
+                    c_stats, n_regions=0, region_solve_s=[],
+                    warm_start_hits=0, warm_start_misses=0, n_feasible=0,
+                    regions_reused=c_stats.regions_reused + c_stats.n_regions)
+                return ReconfigResult(
+                    list(window), list(c_moves), list(c_sat),
+                    2.0 * len(c_sat), c_s_after, c_accepted, None,
+                    time.perf_counter() - t0, weights=norm)
+        batch_ctx = self._window_costs(engine, window, norm)
+        ctx, costv, movers = batch_ctx.ctx, batch_ctx.costv, batch_ctx.movers
         part = self.partition_for(engine.topo)
+        dirty = self._dirty_since(engine, part) if self.incremental else None
+        self.last_dirty_regions = dirty
 
         # One shared shadow ledger = live residual capacity (window apps
-        # charged at their current homes).  Every tentative claim below
-        # goes through it, which is what makes the merge conflict-free.
-        shadow = _Shadow(*engine.free_capacity_excluding(window))
-        for wa in ctx:
-            shadow.occupy(wa.placed.request.app,
-                          wa.candidates[wa.current_idx], +1.0)
+        # charged at their current homes — i.e. the engine's remaining
+        # capacity as-is; `free_capacity_excluding` + re-charging every
+        # window app would reproduce exactly this, minus a float roundtrip).
+        # Every tentative claim below goes through it, which is what makes
+        # the merge conflict-free.
+        shadow = _Shadow(
+            {nid: engine.node_remaining(nid) for nid in engine.topo.nodes},
+            {lid: engine.link_remaining(lid) for lid in engine.topo.links})
         assignment = [wa.current_idx for wa in ctx]
 
-        # Movers: apps with ≥1 strictly-improving candidate.  Only they
-        # enter the regional MILPs — the rest stay pinned, so the solve
-        # size tracks churn rather than window size.
-        movers: List[bool] = []
-        for wa in ctx:
-            w = norm[wa.placed.req_id] if norm else 1.0
-            cur = self._cost(wa, wa.current_idx, w)
-            movers.append(any(
-                self._cost(wa, j, w) < cur - 1e-12
-                for j in range(len(wa.candidates)) if j != wa.current_idx))
-
+        # Movers (apps with ≥1 strictly-improving candidate) came from the
+        # fused window pass above: only they enter the regional MILPs — the
+        # rest stay pinned, so the solve size tracks churn rather than
+        # window size.  The per-app cost vectors feed the coordination
+        # sweep and the improving-candidate pruning.
         groups: Dict[str, List[int]] = {}
         for i, wa in enumerate(ctx):
             rid = part.region_of_node[wa.placed.candidate.node.node_id]
             groups.setdefault(rid, []).append(i)
 
+        # Per-region triage: lift each mover set out of the shared pool,
+        # assemble the exact MILP inputs, and either replay the cached plan
+        # (incremental, clean region, identical inputs) or queue a solve.
+        # With boundary links the queued solves run sequentially against the
+        # evolving shadow (Gauss–Seidel); on boundary-free partitions the
+        # regional problems share no resource rows, so they are solved as
+        # ONE block-diagonal MILP — one solver call per tick instead of one
+        # per region, with bit-identical per-region optima.
         region_solve_s: List[float] = []
+        n_solved = reused = hits = misses = n_feasible = 0
+        batch: List[Tuple[object, List[int], _RegionInputs, Optional[Tuple]]] = []
+        sequential = bool(part.boundary_links)
         for region in part.regions:
-            idxs = [i for i in groups.get(region.region_id, ()) if movers[i]]
+            rid = region.region_id
+            idxs = [i for i in groups.get(rid, ()) if movers[i]]
             if not idxs:
+                self._region_cache.pop(rid, None)
                 continue
             rt0 = time.perf_counter()
-            self._solve_region(ctx, idxs, region, part, shadow, norm, assignment)
-            region_solve_s.append(time.perf_counter() - rt0)
+            for i in idxs:
+                shadow.occupy(ctx[i].placed.request.app,
+                              ctx[i].candidates[assignment[i]], -1.0)
+            inputs = self._region_inputs(ctx, idxs, region, part, shadow,
+                                         norm, assignment, costv)
+            sig = self._signature(ctx, idxs, norm, inputs) \
+                if self.incremental else None
+            cached = self._region_cache.get(rid)
+            if (cached is not None and dirty is not None and rid not in dirty
+                    and cached.sig == sig
+                    and self._replay(cached, ctx, idxs, assignment)):
+                reused += 1
+            elif sequential:
+                res = self._solve_region(ctx, idxs, inputs, cached, assignment)
+                region_solve_s.append(time.perf_counter() - rt0)
+                n_solved += 1
+                if res.warm_start == "hit":
+                    hits += 1
+                elif res.warm_start == "miss":
+                    misses += 1
+                if res.status == "feasible":
+                    n_feasible += 1
+                self._cache_region(rid, sig, ctx, idxs, assignment,
+                                   res.status == "optimal")
+            else:
+                batch.append((region, idxs, inputs, sig))
+            for i in idxs:   # re-occupy the (possibly new) choices
+                shadow.occupy(ctx[i].placed.request.app,
+                              ctx[i].candidates[assignment[i]], +1.0)
+
+        if batch:
+            bt0 = time.perf_counter()
+            res = self._solve_batch(ctx, batch, assignment, shadow)
+            region_solve_s.append(time.perf_counter() - bt0)
+            n_solved += len(batch)
+            if res.warm_start == "hit":
+                hits += len(batch)
+            elif res.warm_start == "miss":
+                misses += len(batch)
+            if res.status == "feasible":
+                n_feasible += 1
+            for region, idxs, _, sig in batch:
+                self._cache_region(region.region_id, sig, ctx, idxs,
+                                   assignment, res.status == "optimal")
 
         # Without boundary links every candidate lives in its app's home
         # region (a crossing path would need a crossing link), so the
@@ -135,18 +293,30 @@ class DecomposedPolicy(ReconfigPolicy):
         # optima — skip it.
         crossings = 0
         if self.coordinate and part.boundary_links:
-            crossings = self._coordinate(ctx, part, shadow, norm, assignment)
+            crossings = self._coordinate(ctx, part, shadow, assignment, costv)
 
         self.last_plan_stats = PlanStats(
-            n_regions=len(region_solve_s),
+            n_regions=n_solved,
             boundary_crossings=crossings,
             region_solve_s=region_solve_s,
+            regions_reused=reused,
+            warm_start_hits=hits,
+            warm_start_misses=misses,
+            n_feasible=n_feasible,
         )
-        return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0, norm)
+        result = _result_from_batch(window, batch_ctx, assignment,
+                                    self.accept_threshold, t0, norm)
+        if self.incremental and n_feasible == 0:
+            # Deadline incumbents are wall-clock artifacts — never replay.
+            self._tick_cache = (tuple(window), norm, tuple(result.moves),
+                                tuple(result.satisfaction), result.s_after,
+                                result.accepted, self.last_plan_stats)
+        else:
+            self._tick_cache = None
+        return result
 
-    # ----------------------------------------------------------- region solve
-    def _solve_region(
+    # ------------------------------------------------------------ region MILP
+    def _region_inputs(
         self,
         ctx: List[_WindowApp],
         idxs: List[int],
@@ -155,31 +325,61 @@ class DecomposedPolicy(ReconfigPolicy):
         shadow: _Shadow,
         norm: Optional[Dict[int, float]],
         assignment: List[int],
-    ) -> None:
-        """Joint MILP over the region's apps, candidates restricted to
-        in-region nodes, against the shared shadow residual (boundary links
-        budgeted).  On solver failure the current assignment stands."""
-        for i in idxs:   # lift the region's apps out of the shared pool
-            shadow.occupy(ctx[i].placed.request.app,
-                          ctx[i].candidates[assignment[i]], -1.0)
+        costv: List[np.ndarray],
+    ) -> _RegionInputs:
+        """Assemble the regional MILP: candidates restricted to in-region
+        nodes AND strictly improving on the app's live cost (the live
+        candidate always in play — the same pinning approximation the
+        mover filter already makes, applied per candidate), against the
+        shared shadow residual with boundary links budgeted."""
         app_vars: List[AppVars] = []
-        keeps: List[List[int]] = []
+        keeps: List[np.ndarray] = []
+        # On a boundary-free partition every candidate path stays inside
+        # its app's home region (a crossing path would need a crossing
+        # link), so the per-candidate region lookup is skipped wholesale.
+        check_region = bool(part.boundary_links)
+        vector_pens = self.cost_model is None
         for i in idxs:
             wa = ctx[i]
-            keep = [j for j, c in enumerate(wa.candidates)
-                    if part.region_of_node[c.node.node_id] == region.region_id
-                    or j == assignment[i]]   # live candidate always in play
+            resp, price, nodes = wa.metric_arrays()
+            keep_mask = costv[i] < costv[i][assignment[i]] - 1e-12
+            if check_region:
+                keep_mask &= np.fromiter(
+                    (part.region_of_node[nid] == region.region_id
+                     for nid in nodes),
+                    bool, len(wa.candidates))
+            keep_mask[assignment[i]] = True   # live candidate always in play
+            keep = np.nonzero(keep_mask)[0]
             cands = [wa.candidates[j] for j in keep]
             w = norm[wa.placed.req_id] if norm else 1.0
+            pens = (self._moved_mask(wa)[keep] * self.move_penalty
+                    if vector_pens
+                    else [self._move_penalty(wa, c) for c in cands])
             app_vars.append(AppVars(
                 request=wa.placed.request,
                 candidates=cands,
                 current_node_id=wa.placed.candidate.node.node_id,
                 r_before=wa.placed.response_s / w,
                 p_before=wa.placed.price / w,
-                move_penalties=[self._move_penalty(wa, c) for c in cands],
+                move_penalties=pens,
+                response_arr=resp[keep],
+                price_arr=price[keep],
+                node_id_arr=nodes[keep],
             ))
             keeps.append(keep)
+
+        node_cap: Dict[str, float] = {}
+        link_cap: Dict[str, float] = {}
+        if not check_region:
+            # Disjoint regions: offer the region's whole resource pool (the
+            # builder only emits rows for candidate-touched resources, so
+            # extra keys are free — and far fewer dict ops than walking
+            # every candidate's path).
+            for nid in region.nodes:
+                node_cap[nid] = shadow.node[nid]
+            for lid in region.interior_links:
+                link_cap[lid] = shadow.link[lid]
+            return _RegionInputs(app_vars, keeps, node_cap, link_cap)
 
         # Boundary links offer only a budgeted share of their residual —
         # but never less than what the region's *live* assignment needs,
@@ -191,8 +391,6 @@ class DecomposedPolicy(ReconfigPolicy):
             for l in wa.candidates[assignment[i]].links:
                 live_need[l.link_id] = (live_need.get(l.link_id, 0.0)
                                         + wa.placed.request.app.bandwidth_mbps)
-        node_cap: Dict[str, float] = {}
-        link_cap: Dict[str, float] = {}
         for av in app_vars:
             for cand in av.candidates:
                 node_cap[cand.node.node_id] = shadow.node[cand.node.node_id]
@@ -202,16 +400,169 @@ class DecomposedPolicy(ReconfigPolicy):
                         cap = max(cap * self.boundary_budget_frac,
                                   live_need.get(l.link_id, 0.0))
                     link_cap[l.link_id] = cap
+        return _RegionInputs(app_vars, keeps, node_cap, link_cap)
 
+    def _signature(self, ctx: List[_WindowApp], idxs: List[int],
+                   norm: Optional[Dict[int, float]],
+                   inputs: _RegionInputs) -> Tuple:
+        """Exact identity of one regional MILP.  Two ticks with equal
+        signatures would hand the solver byte-identical problems, so the
+        cached assignment can be replayed without solving.  Floats are
+        compared exactly: a spurious mismatch merely re-solves."""
+        apps_sig = []
+        for pos, i in enumerate(idxs):
+            wa = ctx[i]
+            av = inputs.app_vars[pos]
+            _, _, nodes = wa.metric_arrays()
+            apps_sig.append((
+                wa.placed.req_id,
+                wa.current_idx,
+                nodes.tobytes(),                # full candidate-set identity
+                inputs.keeps[pos].tobytes(),
+                av.r_before, av.p_before,       # weight-scaled baselines
+                np.asarray(av.move_penalties).tobytes(),
+            ))
+        # Caps are assembled in deterministic (app, candidate) order, so
+        # insertion order is itself part of the identity — no sort needed.
+        return (tuple(apps_sig),
+                tuple(inputs.node_cap.items()),
+                tuple(inputs.link_cap.items()))
+
+    def _replay(self, cached: _RegionPlan, ctx: List[_WindowApp],
+                idxs: List[int], assignment: List[int]) -> bool:
+        """Apply a cached region plan.  Cross-checks every choice against
+        the live candidate set; any mismatch rejects the replay (the caller
+        then re-solves)."""
+        staged: List[Tuple[int, int]] = []
+        for i in idxs:
+            wa = ctx[i]
+            got = cached.choices.get(wa.placed.req_id)
+            if got is None:
+                return False
+            j, node_id = got
+            if j >= len(wa.candidates) \
+                    or wa.candidates[j].node.node_id != node_id:
+                return False
+            staged.append((i, j))
+        for i, j in staged:
+            assignment[i] = j
+        return True
+
+    def _cache_region(self, rid: str, sig: Optional[Tuple],
+                      ctx: List[_WindowApp], idxs: List[int],
+                      assignment: List[int], proven: bool) -> None:
+        """Remember a region's solved assignment for replay/warm starts.
+        Only proven-optimal solves are replayable: a deadline incumbent
+        depends on wall clock, not on the inputs."""
+        if not self.incremental:
+            return
+        if proven:
+            self._region_cache[rid] = _RegionPlan(sig, {
+                ctx[i].placed.req_id:
+                    (assignment[i],
+                     ctx[i].candidates[assignment[i]].node.node_id)
+                for i in idxs})
+        else:
+            self._region_cache.pop(rid, None)
+
+    def _solve_batch(self, ctx: List[_WindowApp],
+                     batch: List[Tuple[object, List[int], _RegionInputs,
+                                       Optional[Tuple]]],
+                     assignment: List[int], shadow: _Shadow):
+        """One block-diagonal MILP over every queued region (boundary-free
+        partitions only: the regional problems share no capacity row, so
+        the joint solve IS the per-region solves — minus the per-call
+        solver overhead that dominates small regional MILPs)."""
+        app_vars: List[AppVars] = []
+        keeps: List[List[int]] = []
+        flat_idxs: List[int] = []
+        node_cap: Dict[str, float] = {}
+        link_cap: Dict[str, float] = {}
+        for _, idxs, inputs, _sig in batch:
+            app_vars.extend(inputs.app_vars)
+            keeps.extend(inputs.keeps)
+            flat_idxs.extend(idxs)
+            node_cap.update(inputs.node_cap)
+            link_cap.update(inputs.link_cap)
         problem, index = build_joint_milp(app_vars, node_cap, link_cap)
+        x0 = None
+        if self.incremental:
+            x0 = np.zeros(problem.n())
+            off = 0
+            for region, idxs, inputs, _sig in batch:
+                off = self._scatter_incumbent(
+                    x0, off, ctx, idxs, inputs,
+                    self._region_cache.get(region.region_id), assignment)
         res = solve_milp(problem, backend=self.backend,
-                         time_limit_s=self.time_limit_s)
+                         time_limit_s=self.time_limit_s, x0=x0)
         if res.ok:
             for pos, choice in enumerate(index.decode(res.x)):
-                assignment[idxs[pos]] = keeps[pos][choice]
-        for i in idxs:   # re-occupy the (possibly new) choices
-            shadow.occupy(ctx[i].placed.request.app,
-                          ctx[i].candidates[assignment[i]], +1.0)
+                i = flat_idxs[pos]
+                new_j = int(keeps[pos][choice])
+                if new_j != assignment[i]:
+                    shadow.occupy(ctx[i].placed.request.app,
+                                  ctx[i].candidates[assignment[i]], -1.0)
+                    shadow.occupy(ctx[i].placed.request.app,
+                                  ctx[i].candidates[new_j], +1.0)
+                    assignment[i] = new_j
+        return res
+
+    def _solve_region(self, ctx: List[_WindowApp], idxs: List[int],
+                      inputs: _RegionInputs, cached: Optional[_RegionPlan],
+                      assignment: List[int]):
+        """Solve one regional MILP (warm-started in incremental mode) and
+        write the decoded choices into ``assignment``.  On solver failure
+        the current assignment stands."""
+        problem, index = build_joint_milp(inputs.app_vars, inputs.node_cap,
+                                          inputs.link_cap)
+        x0 = None
+        if self.incremental:
+            x0 = self._warm_start(problem.n(), ctx, idxs, inputs, cached,
+                                  assignment)
+        res = solve_milp(problem, backend=self.backend,
+                         time_limit_s=self.time_limit_s, x0=x0)
+        if res.ok:
+            for pos, choice in enumerate(index.decode(res.x)):
+                assignment[idxs[pos]] = int(inputs.keeps[pos][choice])
+        return res
+
+    def _incumbent_choice(self, wa: _WindowApp, keep: np.ndarray,
+                          current_j: int,
+                          cached: Optional[_RegionPlan]) -> int:
+        """Warm-start choice for one app: the cached plan's candidate
+        re-projected onto the current keep-list, else the live
+        (do-nothing) candidate — which is always feasible, so the solver
+        starts with a true upper bound."""
+        if cached is not None:
+            got = cached.choices.get(wa.placed.req_id)
+            if got is not None:
+                jc, node_id = got
+                if jc < len(wa.candidates) \
+                        and wa.candidates[jc].node.node_id == node_id \
+                        and jc in keep:
+                    return jc
+        return current_j
+
+    def _scatter_incumbent(self, x0: np.ndarray, off: int,
+                           ctx: List[_WindowApp], idxs: List[int],
+                           inputs: _RegionInputs,
+                           cached: Optional[_RegionPlan],
+                           assignment: List[int]) -> int:
+        """One-hot the incumbent choice of each app into ``x0`` starting at
+        ``off``; returns the offset past the region's variables."""
+        for pos, i in enumerate(idxs):
+            keep = inputs.keeps[pos]
+            j = self._incumbent_choice(ctx[i], keep, assignment[i], cached)
+            x0[off + int(np.searchsorted(keep, j))] = 1.0
+            off += len(keep)
+        return off
+
+    def _warm_start(self, n: int, ctx: List[_WindowApp], idxs: List[int],
+                    inputs: _RegionInputs, cached: Optional[_RegionPlan],
+                    assignment: List[int]) -> np.ndarray:
+        x0 = np.zeros(n)
+        self._scatter_incumbent(x0, 0, ctx, idxs, inputs, cached, assignment)
+        return x0
 
     # ------------------------------------------------------------ coordinate
     def _coordinate(
@@ -219,8 +570,8 @@ class DecomposedPolicy(ReconfigPolicy):
         ctx: List[_WindowApp],
         part: Partition,
         shadow: _Shadow,
-        norm: Optional[Dict[int, float]],
         assignment: List[int],
+        costv: List[np.ndarray],
     ) -> int:
         """Greedy arbitration over the FULL candidate lists: each app (in
         req_id order) may take any strictly cheaper candidate — including
@@ -231,18 +582,30 @@ class DecomposedPolicy(ReconfigPolicy):
         for i in order:
             wa = ctx[i]
             app = wa.placed.request.app
-            w = norm[wa.placed.req_id] if norm else 1.0
             home = part.region_of_node[wa.placed.candidate.node.node_id]
+            costs = costv[i]
             shadow.occupy(app, wa.candidates[assignment[i]], -1.0)
-            best, best_cost = assignment[i], self._cost(wa, assignment[i], w)
-            for j in range(len(wa.candidates)):
-                if j == assignment[i]:
-                    continue
-                cost = self._cost(wa, j, w)
-                if cost < best_cost - 1e-12 and shadow.fits(app, wa.candidates[j]):
-                    best, best_cost = j, cost
+            best = assignment[i]
+            better = np.nonzero(costs < costs[best] - 1e-12)[0]
+            if better.size:
+                # Cheapest fitting candidate wins (stable sort → ties break
+                # toward the lowest candidate index).
+                for j in better[np.argsort(costs[better], kind="stable")]:
+                    if shadow.fits(app, wa.candidates[int(j)]):
+                        best = int(j)
+                        break
             shadow.occupy(app, wa.candidates[best], +1.0)
             assignment[i] = best
             if part.region_of_node[wa.candidates[best].node.node_id] != home:
                 crossings += 1
         return crossings
+
+
+class IncrementalPolicy(DecomposedPolicy):
+    """`DecomposedPolicy` with incremental mode on by default — registered
+    as the ``incremental`` policy name."""
+
+    name = "incremental"
+
+    def __init__(self, *args, incremental: bool = True, **kwargs):
+        super().__init__(*args, incremental=incremental, **kwargs)

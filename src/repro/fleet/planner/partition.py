@@ -60,6 +60,16 @@ class Partition:
     def region(self, region_id: str) -> Region:
         return next(r for r in self.regions if r.region_id == region_id)
 
+    def regions_of_link(self, link_id: str) -> Tuple[str, ...]:
+        """Region(s) a link belongs to: one for an interior link, both
+        endpoint regions for a boundary link — the regions an event on that
+        link dirties (a boundary-link failure must invalidate BOTH adjacent
+        regions' cached plans)."""
+        link = self.topo.links[link_id]
+        ra = self.region_of_site[link.site_a]
+        rb = self.region_of_site[link.site_b]
+        return (ra,) if ra == rb else (ra, rb)
+
 
 def _subtree_sites(topo: Topology, root: str,
                    children: Dict[str, List[str]]) -> List[str]:
@@ -84,9 +94,14 @@ def partition_topology(
             children.setdefault(site.parent, []).append(site.site_id)
     for kids in children.values():
         kids.sort()
+    # One O(nodes) pass; preserves `nodes_at` ordering without its
+    # per-call list copies (the splitting loops call it per site).
+    nodes_by_site: Dict[str, List] = {}
+    for node in topo.nodes.values():
+        nodes_by_site.setdefault(node.site_id, []).append(node)
 
     def n_nodes(sites: List[str]) -> int:
-        return sum(len(topo.nodes_at(s)) for s in sites)
+        return sum(len(nodes_by_site.get(s, ())) for s in sites)
 
     groups: List[Tuple[str, List[str]]] = []   # (region_id, sites)
     roots = sorted(s.site_id for s in topo.sites.values() if s.parent is None)
@@ -95,7 +110,7 @@ def partition_topology(
         root = queue.popleft()
         sites = _subtree_sites(topo, root, children)
         kids = children.get(root, [])
-        fabric_root = root in roots and not topo.nodes_at(root) and kids
+        fabric_root = root in roots and not nodes_by_site.get(root) and kids
         oversized = (max_region_nodes is not None
                      and n_nodes(sites) > max_region_nodes and kids)
         if fabric_root or oversized:
@@ -137,7 +152,7 @@ def partition_topology(
     for rid, sites in groups:
         nodes: List[str] = []
         for sid in sites:
-            for node in topo.nodes_at(sid):
+            for node in nodes_by_site.get(sid, ()):
                 nodes.append(node.node_id)
                 region_of_node[node.node_id] = rid
         regions.append(Region(

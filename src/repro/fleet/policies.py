@@ -12,9 +12,12 @@ through the same contract:
 * ``ga``         — `core.ga.GeneticSearch` over per-app candidate genes
 * ``decomposed`` — partition → per-region MILPs → boundary arbitration →
                    merge (`fleet.planner.decomposed`; scales to big fleets)
+* ``incremental``— decomposed + change-journal dirty-region tracking: clean
+                   regions reuse their cached plan, dirty ones re-solve with
+                   the previous assignment as a warm start
 * ``horizon``    — rolling-horizon wrapper: plans against forecast demand
                    sampled from each app's `RateCurve` (`fleet.planner.horizon`)
-* ``adaptive``   — solver governor over a MILP → decomposed → greedy ladder,
+* ``adaptive``   — solver governor over a MILP → incremental → greedy ladder,
                    escalating when the rolling solver latency blows a budget
 * ``noop``       — never moves anything (control baseline)
 
@@ -45,19 +48,34 @@ from repro.core.ga import GaConfig, GeneticSearch
 from repro.core.migration import Move
 from repro.core.placement import PlacedApp, PlacementEngine
 from repro.core.reconfig import ReconfigResult, Reconfigurator
-from repro.core.satisfaction import (
-    AppSatisfaction,
-    normalize_weights,
-    weighted_window_sum,
-)
+from repro.core.satisfaction import AppSatisfaction, normalize_weights
 
 
 # ------------------------------------------------------------------ helpers
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _WindowApp:
     placed: PlacedApp
     candidates: List[Candidate]
     current_idx: int
+    # Pre-extracted per-candidate metric arrays (engine `CandidateSet`);
+    # None only on the defensive re-enumeration path.
+    response_arr: Optional[np.ndarray] = None
+    price_arr: Optional[np.ndarray] = None
+    node_id_arr: Optional[np.ndarray] = None
+    cset: Optional[object] = None   # the engine CandidateSet (mask cache)
+
+    def metric_arrays(self):
+        """(response, price, node_id) arrays, built lazily when the fast
+        path could not supply them."""
+        if self.response_arr is None:
+            k = len(self.candidates)
+            self.response_arr = np.fromiter(
+                (c.response_s for c in self.candidates), np.float64, k)
+            self.price_arr = np.fromiter(
+                (c.price for c in self.candidates), np.float64, k)
+            self.node_id_arr = np.array(
+                [c.node.node_id for c in self.candidates])
+        return self.response_arr, self.price_arr, self.node_id_arr
 
 
 class _Shadow:
@@ -79,18 +97,79 @@ class _Shadow:
                    for l in cand.links)
 
 
+@dataclasses.dataclass(slots=True)
+class _WindowBatch:
+    """Fused per-window context: the `_WindowApp` list plus concatenated
+    candidate-metric arrays (cost vectors are views into ``costs_all``-style
+    storage).  The optional arrays are None under a cost model (per-app
+    fallback path) — `_result_from_batch` then degrades to the loop form."""
+
+    ctx: List[_WindowApp]
+    costv: List[np.ndarray]
+    movers: List[bool]
+    offs: Optional[np.ndarray] = None       # block offsets into *_all
+    resp_all: Optional[np.ndarray] = None
+    price_all: Optional[np.ndarray] = None
+    rb: Optional[np.ndarray] = None         # per-app response/price baselines
+    pb: Optional[np.ndarray] = None
+    w: Optional[np.ndarray] = None          # normalized traffic weights
+    cur_idx: Optional[np.ndarray] = None
+
+
+def _result_from_batch(
+    window: Sequence[int],
+    batch: _WindowBatch,
+    assignment: Sequence[int],
+    accept_threshold: float,
+    t0: float,
+    weights: Optional[Dict[int, float]] = None,
+) -> ReconfigResult:
+    """Vectorized `_result_from_assignment` over the fused window arrays."""
+    ctx = batch.ctx
+    if batch.offs is None or not ctx:
+        return _result_from_assignment(window, ctx, assignment,
+                                       accept_threshold, t0, weights)
+    choice = np.asarray(assignment, dtype=np.int64)
+    flat = batch.offs + choice
+    ra = batch.resp_all[flat]
+    pa = batch.price_all[flat]
+    ratio = ra / batch.rb + pa / batch.pb
+    s_after = float((batch.w * ratio).sum()) if weights is not None \
+        else float(ratio.sum())
+    sat = [AppSatisfaction(req_id, rb, r_a, pb, p_a)
+           for req_id, rb, r_a, pb, p_a in zip(
+               window, batch.rb.tolist(), ra.tolist(),
+               batch.pb.tolist(), pa.tolist())]
+    moves: List[Move] = []
+    for i in np.nonzero(choice != batch.cur_idx)[0]:
+        wa = ctx[i]
+        cand = wa.candidates[assignment[i]]
+        if cand.node.node_id != wa.placed.candidate.node.node_id:
+            moves.append(Move(wa.placed.request.req_id, wa.placed.candidate,
+                              cand, float(ratio[i])))
+    s_before = 2.0 * len(ctx)   # normalized weights keep the baseline here
+    accepted = bool(moves) and (s_before - s_after) > accept_threshold
+    return ReconfigResult(list(window), moves, sat, s_before, s_after,
+                          accepted, None, time.perf_counter() - t0,
+                          weights=weights)
+
+
+def _resolve_window_app(engine: PlacementEngine, placed: PlacedApp) -> _WindowApp:
+    """One window app's context: the engine's cached candidate set with the
+    live candidate located in it — or, defensively, prepended to a fresh
+    copy when it no longer re-enumerates (then ``current_idx == 0`` and the
+    metric arrays rebuild lazily)."""
+    cs = engine.candidate_set(placed.request)
+    cur = cs.index_of.get(placed.candidate.node.node_id, -1)
+    if cur >= 0 and (cs.cands[cur] is placed.candidate
+                     or cs.cands[cur] == placed.candidate):
+        return _WindowApp(placed, cs.cands, cur, cs.response_arr,
+                          cs.price_arr, cs.node_id_arr, cs)
+    return _WindowApp(placed, [placed.candidate] + list(cs.cands), 0)
+
+
 def _window_context(engine: PlacementEngine, window: Sequence[int]) -> List[_WindowApp]:
-    out: List[_WindowApp] = []
-    for req_id in window:
-        placed = engine.placed[req_id]
-        cands = engine.enumerate_feasible(placed.request)
-        try:
-            cur = cands.index(placed.candidate)
-        except ValueError:  # defensive: live candidate always re-enumerates
-            cands = [placed.candidate] + cands
-            cur = 0
-        out.append(_WindowApp(placed, cands, cur))
-    return out
+    return [_resolve_window_app(engine, engine.placed[r]) for r in window]
 
 
 def _ratio(placed: PlacedApp, cand: Candidate) -> float:
@@ -107,20 +186,20 @@ def _result_from_assignment(
 ) -> ReconfigResult:
     moves: List[Move] = []
     sat: List[AppSatisfaction] = []
+    s_after = 0.0
     for wa, choice in zip(ctx, assignment):
         cand = wa.candidates[choice]
         placed = wa.placed
-        sat.append(AppSatisfaction(
-            placed.req_id,
-            r_before=placed.response_s, r_after=cand.response_s,
-            p_before=placed.price, p_after=cand.price,
-        ))
-        if cand.node.node_id != placed.candidate.node.node_id:
-            moves.append(Move(placed.req_id, placed.candidate, cand,
-                              _ratio(placed, cand)))
+        rb, pb = placed.response_s, placed.price
+        ra, pa = cand.response_s, cand.price
+        ratio = ra / rb + pa / pb
+        req_id = placed.request.req_id
+        sat.append(AppSatisfaction(req_id, rb, ra, pb, pa))
+        s_after += weights[req_id] * ratio if weights else ratio
+        if choice != wa.current_idx \
+                and cand.node.node_id != placed.candidate.node.node_id:
+            moves.append(Move(req_id, placed.candidate, cand, ratio))
     s_before = 2.0 * len(ctx)   # normalized weights keep the baseline here
-    s_after = (weighted_window_sum(sat, weights) if weights
-               else sum(s.ratio for s in sat))
     accepted = bool(moves) and (s_before - s_after) > accept_threshold
     return ReconfigResult(list(window), moves, sat, s_before, s_after,
                           accepted, None, time.perf_counter() - t0,
@@ -176,6 +255,92 @@ class ReconfigPolicy:
         cand = wa.candidates[choice]
         return w * _ratio(wa.placed, cand) + self._move_penalty(wa, cand)
 
+    def _moved_mask(self, wa: _WindowApp) -> np.ndarray:
+        """Candidates NOT on the live node (cache-backed when possible)."""
+        cur = wa.placed.candidate.node.node_id
+        if wa.cset is not None:
+            return wa.cset.moved_mask(cur)
+        _, _, nodes = wa.metric_arrays()
+        return nodes != cur
+
+    def _cost_vector(self, wa: _WindowApp, w: float = 1.0) -> np.ndarray:
+        """`_cost` over every candidate at once (hot-path form of the mover
+        scan and the coordination sweep)."""
+        resp, price, _ = wa.metric_arrays()
+        ratios = resp / wa.placed.response_s + price / wa.placed.price
+        if self.cost_model is None:
+            pens = self._moved_mask(wa) * self.move_penalty
+        else:
+            pens = np.fromiter((self._move_penalty(wa, c) for c in wa.candidates),
+                               np.float64, len(wa.candidates))
+        return w * ratios + pens
+
+    def _batch_cost_vectors(self, ctx: List[_WindowApp],
+                            norm: Optional[Dict[int, float]]):
+        """(cost vectors, mover flags) built per app — the cost-model
+        fallback behind `_window_costs` (model penalties are inherently
+        per-candidate Python; the no-model case takes `_window_costs`'s
+        fused numpy pass instead)."""
+        costv = []
+        movers = []
+        for wa in ctx:
+            w = norm[wa.placed.req_id] if norm else 1.0
+            costs = self._cost_vector(wa, w)
+            costv.append(costs)
+            movers.append(bool((costs < costs[wa.current_idx] - 1e-12).any()))
+        return costv, movers
+
+    def _window_costs(self, engine: PlacementEngine, window: Sequence[int],
+                      norm: Optional[Dict[int, float]]):
+        """`_window_context` + `_batch_cost_vectors` fused into one pass
+        over the window (the two separate 10k-app loops were a measurable
+        share of fleet-scale tick latency).  Returns a `_WindowBatch` whose
+        concatenated metric arrays also feed `_result_from_batch`."""
+        if self.cost_model is not None:   # per-candidate Python penalties
+            ctx = _window_context(engine, window)
+            costv, movers = self._batch_cost_vectors(ctx, norm)
+            return _WindowBatch(ctx, costv, movers)
+        ctx: List[_WindowApp] = []
+        k = len(window)
+        sizes = np.empty(k, dtype=np.int64)
+        rb_arr = np.empty(k)
+        pb_arr = np.empty(k)
+        w_arr = np.empty(k)
+        cur_idx = np.empty(k, dtype=np.int64)
+        resp_parts: List[np.ndarray] = []
+        price_parts: List[np.ndarray] = []
+        mask_parts: List[np.ndarray] = []
+        placed_map = engine.placed
+        for i, req_id in enumerate(window):
+            placed = placed_map[req_id]
+            wa = _resolve_window_app(engine, placed)
+            mask = self._moved_mask(wa)
+            cur = wa.current_idx
+            resp, price, _ = wa.metric_arrays()
+            ctx.append(wa)
+            sizes[i] = resp.size
+            rb_arr[i] = placed.response_s
+            pb_arr[i] = placed.price
+            w_arr[i] = norm[req_id] if norm else 1.0
+            cur_idx[i] = cur
+            resp_parts.append(resp)
+            price_parts.append(price)
+            mask_parts.append(mask)
+        if not ctx:
+            return _WindowBatch(ctx, [], [])
+        offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        resp_all = np.concatenate(resp_parts)
+        price_all = np.concatenate(price_parts)
+        costs_all = (resp_all * np.repeat(w_arr / rb_arr, sizes)
+                     + price_all * np.repeat(w_arr / pb_arr, sizes)
+                     + np.concatenate(mask_parts) * self.move_penalty)
+        block_min = np.minimum.reduceat(costs_all, offs)
+        mover_flags = block_min < costs_all[offs + cur_idx] - 1e-12
+        costv = [costs_all[offs[i]:offs[i] + sizes[i]] for i in range(k)]
+        return _WindowBatch(ctx, costv, [bool(b) for b in mover_flags],
+                            offs=offs, resp_all=resp_all, price_all=price_all,
+                            rb=rb_arr, pb=pb_arr, w=w_arr, cur_idx=cur_idx)
+
 
 class NoOpPolicy(ReconfigPolicy):
     """Control: measures what continuous operation looks like without the
@@ -212,7 +377,14 @@ class MilpPolicy(ReconfigPolicy):
             backend=self.backend, time_limit_s=self.time_limit_s,
             cost_model=self.cost_model,
         )
-        return recon.plan(window, weights=weights)
+        res = recon.plan(window, weights=weights)
+        # Surface proven-vs-incumbent solver quality: a "feasible" status
+        # means the deadline expired before optimality was proven.
+        from .telemetry import PlanStats  # late: telemetry imports nothing here
+        self.last_plan_stats = PlanStats(
+            n_feasible=int(res.solver is not None
+                           and res.solver.status == "feasible"))
+        return res
 
 
 class GreedyPolicy(ReconfigPolicy):
@@ -325,6 +497,11 @@ class GaPolicy(ReconfigPolicy):
                                        if j != wa.current_idx][: self.k_candidates - 1]
             wa.candidates = [wa.candidates[j] for j in keep]
             wa.current_idx = 0
+            # Metric arrays and the CandidateSet mask cache are indexed by
+            # candidate position — drop both so any later consumer rebuilds
+            # against the pruned list.
+            wa.response_arr = wa.price_arr = wa.node_id_arr = None
+            wa.cset = None
         node_cap, link_cap = engine.free_capacity_excluding(window)
 
         def fitness(gene) -> float:
@@ -355,8 +532,8 @@ class GaPolicy(ReconfigPolicy):
 
 class AdaptivePolicy(ReconfigPolicy):
     """Online solver governor over a *ladder* of policies — by default
-    MILP → decomposed → greedy (exact, then regionally-exact, then
-    heuristic).  Escalate one tier when the rolling mean ``plan_time_s``
+    MILP → incremental → greedy (exact, then regionally-exact with
+    journal-driven reuse, then heuristic).  Escalate one tier when the rolling mean ``plan_time_s``
     over the last ``k`` plans exceeds ``budget_s``; de-escalate one tier
     once the rolling mean recovers below ``budget_s × recover_frac``.
 
@@ -371,7 +548,7 @@ class AdaptivePolicy(ReconfigPolicy):
 
     def __init__(self, move_penalty: float = 0.01, accept_threshold: float = 0.0,
                  budget_s: float = 0.25, k: int = 5, recover_frac: float = 0.5,
-                 tiers: Sequence[str] = ("milp", "decomposed", "greedy"),
+                 tiers: Sequence[str] = ("milp", "incremental", "greedy"),
                  cost_model=None, **milp_kwargs):
         super().__init__(move_penalty, accept_threshold, cost_model)
         self.budget_s = budget_s

@@ -335,6 +335,9 @@ class FleetRuntime:
             boundary_crossings=stats.boundary_crossings if stats else 0,
             region_solve_max_s=stats.region_solve_max_s if stats else 0.0,
             forecast_error=stats.forecast_error if stats else None,
+            regions_reused=stats.regions_reused if stats else 0,
+            warm_start_hits=stats.warm_start_hits if stats else 0,
+            n_feasible=stats.n_feasible if stats else 0,
         ))
         if self.config.check_invariants and not self.engine.occupancy_invariants_ok():
             raise AssertionError("occupancy invariants violated after tick")

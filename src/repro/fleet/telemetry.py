@@ -34,6 +34,14 @@ class PlanStats:
     boundary_crossings: int = 0        # apps assigned outside their home region
     region_solve_s: List[float] = dataclasses.field(default_factory=list)
     forecast_error: Optional[float] = None  # mean |predicted−realized|/realized
+    # Incremental-planning detail (`incremental` policy mode): regions whose
+    # cached plan was reused instead of re-solved, warm-start incumbent
+    # hits/misses across the regional solves, and solves that returned a
+    # deadline incumbent ("feasible") instead of a proven optimum.
+    regions_reused: int = 0
+    warm_start_hits: int = 0
+    warm_start_misses: int = 0
+    n_feasible: int = 0
 
     @property
     def region_solve_max_s(self) -> float:
@@ -78,6 +86,10 @@ class TickRecord:
     boundary_crossings: int = 0
     region_solve_max_s: float = 0.0         # wall clock; not fingerprinted
     forecast_error: Optional[float] = None  # rolling-horizon planner only
+    # Incremental-planning detail (zero under non-incremental policies).
+    regions_reused: int = 0
+    warm_start_hits: int = 0
+    n_feasible: int = 0                     # deadline incumbents; not fingerprinted
 
     @property
     def moved_ratio(self) -> float:
@@ -182,12 +194,23 @@ class Telemetry:
         }
 
     def fingerprint(self) -> str:
-        """Stable digest of everything except wall-clock solver latency."""
+        """Stable digest of the run's *behavior*: what was placed, moved,
+        and reported — excluding wall-clock solver latency, deadline
+        incumbents (timeout-dependent) and the planner's internal work
+        accounting (how many regions were solved vs reused, warm-start
+        hits).  Excluding the policy label and the work accounting is what
+        lets the incremental planner assert byte-identical behavior against
+        the full decomposed planner."""
         d = self.to_dict()
+        d.pop("policy", None)
         d["summary"].pop("mean_solver_time_s", None)
         for t in d["ticks"]:
             t.pop("solver_time_s", None)
             t.pop("region_solve_max_s", None)
+            t.pop("n_regions", None)
+            t.pop("regions_reused", None)
+            t.pop("warm_start_hits", None)
+            t.pop("n_feasible", None)
         return hashlib.sha256(
             json.dumps(d, sort_keys=True).encode()
         ).hexdigest()

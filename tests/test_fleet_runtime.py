@@ -212,9 +212,9 @@ class TestAdaptivePolicy:
             return ReconfigResult(list(window), [], [], 0.0, 0.0, False,
                                   None, self.plan_time_s)
 
-    def test_default_ladder_is_milp_decomposed_greedy(self):
+    def test_default_ladder_is_milp_incremental_greedy(self):
         pol = get_policy("adaptive")
-        assert [t.name for t in pol.tiers] == ["milp", "decomposed", "greedy"]
+        assert [t.name for t in pol.tiers] == ["milp", "incremental", "greedy"]
         assert pol.active_name == "milp" and not pol.using_fast
 
     def test_escalates_down_the_ladder_and_recovers(self):

@@ -1,0 +1,404 @@
+"""Incremental warm-started planning tests: bounded-variable simplex,
+solver warm starts + honest "feasible" statuses, vectorized decode, the
+engine change journal, and the incremental policy's correctness contract —
+a warm-started/incremental plan must match the cold full re-solve exactly
+(objective, moves, and end-to-end telemetry fingerprint) under randomized
+event journals, and a boundary-link failure must invalidate BOTH adjacent
+regions' cached plans."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PlacementEngine,
+    build_paper_topology,
+    sample_requests,
+)
+from repro.core.lp import AppVars, JointIndex, build_joint_milp
+from repro.core.placement import ChangeJournal
+from repro.core.simplex import solve_lp
+from repro.core.solver import MilpProblem, solve_milp
+from repro.fleet import build_scenario, get_policy
+
+_TOPO = build_paper_topology()  # immutable; shared across tests
+
+
+def _loaded_engine(topo=None, n_apps=120, seed=3):
+    topo = topo or _TOPO
+    rng = np.random.default_rng(seed)
+    engine = PlacementEngine(topo)
+    for r in sample_requests(topo, n_apps, rng):
+        engine.place(r)
+    return engine
+
+
+def _random_assignment_milp(rng, n_apps=4, n_slots=3):
+    n = n_apps * n_slots
+    c = rng.uniform(0.5, 3.0, size=n)
+    A_eq = np.zeros((n_apps, n))
+    for i in range(n_apps):
+        A_eq[i, i * n_slots:(i + 1) * n_slots] = 1.0
+    b_eq = np.ones(n_apps)
+    usage = rng.uniform(0.3, 1.0, size=n_apps)
+    A_ub = np.zeros((n_slots, n))
+    for s in range(n_slots):
+        for i in range(n_apps):
+            A_ub[s, i * n_slots + s] = usage[i]
+    b_ub = rng.uniform(1.0, 3.0, size=n_slots)
+    return MilpProblem(c=c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                       integrality=np.ones(n))
+
+
+# ------------------------------------------------- bounded-variable simplex
+class TestBoundedSimplex:
+    def test_optimum_at_upper_bounds(self):
+        # min −x1−2x2  s.t. x1+x2 ≤ 3, 0 ≤ x ≤ 2  →  x=(1,2), obj −5.
+        res = solve_lp(np.array([-1.0, -2.0]), np.array([[1.0, 1.0]]),
+                       np.array([3.0]), ub=np.array([2.0, 2.0]))
+        assert res.ok and res.objective == pytest.approx(-5.0)
+        assert np.allclose(res.x, [1.0, 2.0])
+
+    def test_pure_bound_flip_no_constraints_binding(self):
+        # min −x over 0 ≤ x ≤ 2 with a slack constraint x ≤ 10.
+        res = solve_lp(np.array([-1.0]), np.array([[1.0]]), np.array([10.0]),
+                       ub=np.array([2.0]))
+        assert res.ok and res.objective == pytest.approx(-2.0)
+
+    def test_equality_with_bounds(self):
+        # min x+2y st x+y=1, x ≤ 0.3 (as a bound, not a row) → obj 1.7.
+        res = solve_lp(np.array([1.0, 2.0]),
+                       A_eq=np.array([[1.0, 1.0]]), b_eq=np.array([1.0]),
+                       ub=np.array([0.3, np.inf]))
+        assert res.ok and res.objective == pytest.approx(1.7)
+
+    def test_zero_upper_bound_pins_variable(self):
+        res = solve_lp(np.array([-5.0, -1.0]), np.array([[1.0, 1.0]]),
+                       np.array([2.0]), ub=np.array([0.0, np.inf]))
+        assert res.ok and res.objective == pytest.approx(-2.0)
+        assert res.x[0] == pytest.approx(0.0)
+
+    def test_box_only_problem(self):
+        res = solve_lp(np.array([-1.0, 2.0, 0.0]), ub=np.array([3.0, 1.0, 1.0]))
+        assert res.ok and res.objective == pytest.approx(-3.0)
+
+    def test_redundant_rows_leave_artificial_stuck_in_basis(self):
+        """A linearly dependent equality row leaves its artificial basic at
+        value 0 after phase 1; phase 2 must tolerate that (regression: the
+        truncated bound array used to raise IndexError)."""
+        res = solve_lp(np.array([-1.0, -2.0]),
+                       A_eq=np.array([[1.0, 1.0], [1.0, 1.0]]),
+                       b_eq=np.array([1.0, 1.0]), ub=np.array([1.0, 1.0]))
+        assert res.ok and res.objective == pytest.approx(-2.0)
+        assert np.allclose(res.x, [0.0, 1.0])
+
+    def test_randomized_matches_scipy(self):
+        """Seeded sweep vs scipy HiGHS with mixed finite/infinite bounds
+        (runs without hypothesis — this is the load-bearing check that the
+        native bound handling did not change any optimum)."""
+        from scipy.optimize import linprog
+
+        rng = np.random.default_rng(7)
+        checked = 0
+        for _ in range(120):
+            n = int(rng.integers(1, 7))
+            m = int(rng.integers(0, 5))
+            me = int(rng.integers(0, 3))
+            c = rng.normal(size=n)
+            A = rng.normal(size=(m, n))
+            b = rng.uniform(-0.5, 3.0, size=m)
+            Ae = rng.normal(size=(me, n))
+            be = rng.uniform(-0.5, 2.0, size=me)
+            ub = np.where(rng.random(n) < 0.7,
+                          rng.uniform(0.0, 4.0, size=n), np.inf)
+            ours = solve_lp(c, A, b, Ae, be, ub=ub)
+            ref = linprog(c, A_ub=A if m else None, b_ub=b if m else None,
+                          A_eq=Ae if me else None, b_eq=be if me else None,
+                          bounds=[(0, None if not np.isfinite(u) else u)
+                                  for u in ub],
+                          method="highs")
+            if ref.status == 0 and ours.ok:
+                assert ours.objective == pytest.approx(ref.fun, abs=1e-6)
+                assert (ours.x >= -1e-7).all() and (ours.x <= ub + 1e-7).all()
+                checked += 1
+            elif ref.status == 2:
+                # HiGHS presolve folds "infeasible or unbounded" into 2;
+                # only a claimed OPTIMUM would be a real disagreement.
+                assert ours.status in ("infeasible", "unbounded")
+        assert checked > 40   # the sweep must mostly hit solvable LPs
+
+
+# ---------------------------------------------------- warm starts / status
+class TestWarmStarts:
+    def test_hit_seeds_incumbent_and_matches_cold(self):
+        rng = np.random.default_rng(11)
+        for _ in range(25):
+            p = _random_assignment_milp(rng)
+            cold = solve_milp(p, backend="bnb")
+            if not cold.ok:
+                continue
+            warm = solve_milp(p, backend="bnb", x0=cold.x)
+            assert warm.warm_start == "hit"
+            assert warm.status == "optimal"
+            assert warm.objective == pytest.approx(cold.objective, abs=1e-9)
+            assert warm.nodes_explored <= cold.nodes_explored
+
+    def test_infeasible_x0_is_a_miss(self):
+        p = _random_assignment_milp(np.random.default_rng(2))
+        res = solve_milp(p, backend="bnb", x0=np.zeros(p.n()))
+        assert res.warm_start == "miss"
+        assert res.status == "optimal"
+
+    def test_deadline_incumbent_reports_feasible_not_optimal(self):
+        """The old `_solve_bnb` mislabeled a deadline incumbent as
+        "optimal"; it must now be the distinct "feasible" status (still
+        ok — the assignment is usable, just not proven optimal)."""
+        p = _random_assignment_milp(np.random.default_rng(3))
+        ref = solve_milp(p, backend="highs")
+        res = solve_milp(p, backend="bnb", time_limit_s=0.0, x0=ref.x)
+        assert res.status == "feasible"
+        assert res.ok
+        assert res.objective == pytest.approx(ref.objective, abs=1e-9)
+
+    def test_deadline_without_incumbent_is_timeout(self):
+        p = _random_assignment_milp(np.random.default_rng(4))
+        res = solve_milp(p, backend="bnb", time_limit_s=0.0)
+        assert res.status == "timeout" and not res.ok and res.x is None
+
+    def test_infeasible_problem_stays_infeasible(self):
+        p = MilpProblem(
+            c=np.array([1.0, 1.0]),
+            A_ub=np.array([[1.0, 1.0]]), b_ub=np.array([0.5]),
+            A_eq=np.array([[1.0, 1.0]]), b_eq=np.array([1.0]),
+            integrality=np.ones(2),
+        )
+        for backend in ("bnb", "highs"):
+            res = solve_milp(p, backend=backend, x0=np.array([1.0, 0.0]))
+            assert res.status == "infeasible"
+            assert res.warm_start == "miss"
+
+    def test_milp_policy_surfaces_feasible_status(self):
+        engine = _loaded_engine(n_apps=60)
+        pol = get_policy("milp")
+        pol.plan(engine, engine.recent(30))
+        assert pol.last_plan_stats is not None
+        assert pol.last_plan_stats.n_feasible == 0   # plenty of budget
+
+
+# -------------------------------------------------------- vectorized decode
+class TestDecode:
+    def test_matches_per_block_argmax(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            sizes = rng.integers(1, 9, size=int(rng.integers(1, 12)))
+            offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+            x = rng.random(int(sizes.sum()))
+            # exact ties inside a block must resolve to the FIRST argmax
+            if x.size >= 2 and sizes[0] >= 2:
+                x[1] = x[0]
+            index = JointIndex(apps=[object()] * len(sizes), offsets=offsets)
+            expect = [int(np.argmax(x[o:o + s]))
+                      for o, s in zip(offsets, sizes)]
+            assert index.decode(x) == expect
+
+    def test_empty(self):
+        assert JointIndex(apps=[], offsets=np.array([])).decode(
+            np.array([])) == []
+
+    def test_empty_window_builds_and_solves(self):
+        """build_joint_milp([]) must stay a well-formed empty problem and
+        both backends must answer it (regression: the vectorized builder
+        raised on np.concatenate of no arrays)."""
+        p, idx = build_joint_milp([], {}, {})
+        assert p.n() == 0 and idx.decode(np.zeros(0)) == []
+        for backend in ("bnb", "highs"):
+            res = solve_milp(p, backend=backend)
+            assert res.ok and res.objective == 0.0
+
+
+# ------------------------------------------------------------ change journal
+class TestChangeJournal:
+    def test_record_since_and_truncation(self):
+        j = ChangeJournal(maxlen=4)
+        cursor = j.total
+        for k in range(3):
+            j.record("arrival", req_id=k, nodes=(f"n{k}",))
+        got = j.since(cursor)
+        assert [e.req_id for e in got] == [0, 1, 2]
+        assert j.since(j.total) == []
+        for k in range(3, 8):   # overflow the ring
+            j.record("arrival", req_id=k)
+        assert j.since(cursor) is None          # dropped → unknown
+        assert j.since(j.total - 2) is not None
+
+    def test_engine_mutations_are_journaled(self):
+        engine = _loaded_engine(n_apps=10)
+        cursor = engine.journal.total
+        req_id = engine.placement_order[0]
+        cand = engine.placed[req_id].candidate
+        engine.release(req_id)
+        engine.set_node_online(cand.node.node_id, False)
+        engine.set_node_online(cand.node.node_id, True)
+        kinds = [e.kind for e in engine.journal.since(cursor)]
+        assert kinds == ["departure", "failure", "recovery"]
+        entry = engine.journal.since(cursor)[0]
+        assert cand.node.node_id in entry.nodes
+        assert set(l.link_id for l in cand.links) <= set(entry.links)
+
+
+# -------------------------------------------- incremental == cold decomposed
+def _plan_key(res):
+    return (round(res.s_after, 9),
+            tuple((m.req_id, m.new.node.node_id) for m in res.moves))
+
+
+def _random_events(engine, topo, rng, start_id):
+    """Apply a random batch of engine-level events (the journal source):
+    departures, arrivals, drifts (release+re-place), node flaps."""
+    n_dep = int(rng.integers(0, 4))
+    alive = list(engine.placement_order)
+    for req_id in rng.choice(alive, size=min(n_dep, len(alive)),
+                             replace=False):
+        engine.release(int(req_id))
+    n_arr = int(rng.integers(0, 6))
+    for r in sample_requests(topo, n_arr, rng, start_id=start_id):
+        engine.place(r)
+    start_id += n_arr
+    if rng.random() < 0.3 and engine.placement_order:
+        nid = engine.placed[engine.placement_order[0]].candidate.node.node_id
+        engine.set_node_online(nid, False)
+        for req_id in engine.apps_on_node(nid):
+            engine.release(req_id)
+        engine.set_node_online(nid, True)
+    return start_id
+
+
+class TestIncrementalMatchesCold:
+    def test_randomized_event_journal_parity(self):
+        """The acceptance property, hypothesis-free: across randomized
+        event journals the incremental policy's plan (reusing cached
+        regions + warm starts) equals a cold decomposed re-solve —
+        objective AND chosen moves."""
+        rng = np.random.default_rng(0)
+        engine = _loaded_engine(n_apps=150, seed=1)
+        inc = get_policy("incremental")
+        start_id = 10_000
+        for round_no in range(8):
+            window = engine.recent(60)
+            weights = {r: float(rng.uniform(0.2, 5.0)) for r in window}
+            a = inc.plan(engine, window, weights=weights)
+            b = get_policy("decomposed").plan(engine, window, weights=weights)
+            assert _plan_key(a) == _plan_key(b), f"round {round_no}"
+            start_id = _random_events(engine, _TOPO, rng, start_id)
+
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=10, deadline=None)
+    def test_randomized_event_journal_parity_property(self, seed):
+        rng = np.random.default_rng(seed)
+        engine = _loaded_engine(n_apps=100, seed=seed % 7)
+        inc = get_policy("incremental")
+        start_id = 10_000
+        for _ in range(3):
+            window = engine.recent(40)
+            weights = {r: float(rng.uniform(0.2, 5.0)) for r in window}
+            a = inc.plan(engine, window, weights=weights)
+            b = get_policy("decomposed").plan(engine, window, weights=weights)
+            assert _plan_key(a) == _plan_key(b)
+            start_id = _random_events(engine, _TOPO, rng, start_id)
+
+    def test_steady_state_skips_all_region_solves(self):
+        """ISSUE acceptance: a tick with no topology-changing events since
+        the last plan must skip ≥ 80 % of region solves (here: all)."""
+        engine = _loaded_engine(n_apps=300)
+        window = engine.recent(100)
+        inc = get_policy("incremental")
+        first = inc.plan(engine, window)
+        solved_first = inc.last_plan_stats.n_regions
+        assert solved_first > 0
+        assert inc.last_plan_stats.warm_start_hits > 0
+        second = inc.plan(engine, window)
+        stats = inc.last_plan_stats
+        assert _plan_key(second) == _plan_key(first)
+        assert stats.regions_reused == solved_first
+        total = stats.regions_reused + stats.n_regions
+        assert stats.n_regions == 0
+        assert stats.regions_reused / total >= 0.8
+
+    def test_boundary_link_failure_invalidates_both_regions(self):
+        """A boundary-link event must dirty BOTH adjacent regions: their
+        cached plans re-solve while every other region is replayed."""
+        engine = _loaded_engine(n_apps=300, seed=5)
+        window = engine.recent(120)
+        inc = get_policy("incremental", max_region_nodes=40)
+        inc.plan(engine, window)
+        part = inc.partition_for(engine.topo)
+        assert part.boundary_links
+        cached = set(inc._region_cache)
+        assert cached
+        lid = sorted(part.boundary_links)[0]
+        ra, rb = part.regions_of_link(lid)
+        assert ra != rb
+        engine.set_link_online(lid, False)
+        engine.set_link_online(lid, True)   # candidates identical again
+        res = inc.plan(engine, window)
+        stats = inc.last_plan_stats
+        assert inc.last_dirty_regions == {ra, rb}
+        # every cached region NOT adjacent to the link was replayed …
+        assert stats.regions_reused == len(cached - {ra, rb})
+        # … and the adjacent ones (when they had movers) were re-solved.
+        assert stats.n_regions == len(cached & {ra, rb})
+        cold = get_policy("decomposed", max_region_nodes=40).plan(
+            engine, window)
+        assert _plan_key(res) == _plan_key(cold)
+
+    def test_runtime_fingerprint_parity(self):
+        """End-to-end: a full scenario run under `incremental` produces the
+        exact behavior fingerprint of `decomposed` (the fingerprint hashes
+        placements, moves, migrations and counters — not the planner's
+        internal work accounting)."""
+        for sc, n in (("paper-steady-state", 250), ("diurnal-streams", 200),
+                      ("backbone-cut", 250)):
+            fps = {}
+            for pol in ("decomposed", "incremental"):
+                spec = build_scenario(sc, seed=0, n_arrivals=n)
+                rt = spec.make_runtime(get_policy(pol))
+                tel = rt.run(spec.event_queue(), scenario=sc, seed=0)
+                assert rt.engine.occupancy_invariants_ok()
+                fps[pol] = tel.fingerprint()
+                if pol == "incremental":
+                    assert sum(t.warm_start_hits for t in tel.ticks) > 0
+            assert fps["decomposed"] == fps["incremental"], sc
+
+    def test_sparse_and_dense_builders_agree(self):
+        """`build_joint_milp` emits scipy CSR on the hot path and dense
+        only for the numpy-simplex fallback; both encode the same MILP."""
+        import repro.core.lp as lp_mod
+
+        engine = _loaded_engine(n_apps=40)
+        window = engine.recent(20)
+        app_vars = []
+        for req_id in window:
+            placed = engine.placed[req_id]
+            cands = engine.enumerate_feasible(placed.request)
+            app_vars.append(AppVars(
+                request=placed.request, candidates=cands,
+                current_node_id=placed.candidate.node.node_id,
+                r_before=placed.response_s, p_before=placed.price))
+        node_cap = {nid: engine.node_remaining(nid) for nid in engine.topo.nodes}
+        link_cap = {lid: engine.link_remaining(lid) for lid in engine.topo.links}
+        sparse_p, _ = build_joint_milp(app_vars, node_cap, link_cap, 0.01)
+        assert hasattr(sparse_p.A_ub, "toarray")
+        old = lp_mod._HAVE_SPARSE
+        lp_mod._HAVE_SPARSE = False
+        try:
+            dense_p, _ = build_joint_milp(app_vars, node_cap, link_cap, 0.01)
+        finally:
+            lp_mod._HAVE_SPARSE = old
+        assert np.allclose(sparse_p.A_ub.toarray(), dense_p.A_ub)
+        assert np.allclose(sparse_p.A_eq.toarray(), dense_p.A_eq)
+        assert np.allclose(sparse_p.c, dense_p.c)
+        assert np.allclose(sparse_p.b_ub, dense_p.b_ub)
+        r_s = solve_milp(sparse_p, backend="highs")
+        r_d = solve_milp(dense_p, backend="bnb")
+        assert r_s.ok and r_d.ok
+        assert r_d.objective == pytest.approx(r_s.objective, abs=1e-6)
