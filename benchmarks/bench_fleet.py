@@ -9,8 +9,10 @@ subsystem's decomposed and rolling-horizon policies) and reports the
 paper's fig. 5 quantities as time-series aggregates: moved ratio, mean
 moved-app satisfaction X+Y (raw and traffic-weighted), solver latency,
 the time-extended migration accounting (started / completed / aborted
-transfers, durations, downtime, collisions) and the planner detail
-(regions solved, boundary crossings, per-region solve latency).
+transfers, durations, downtime, collisions), the elastic-bridge phase
+totals (snapshot / transfer / restore seconds per run, per-migration in
+``migrations_series``) and the planner detail (regions solved, boundary
+crossings, per-region solve latency).
 
 ``scale_sweep()`` grows the paper topology ×2/×4/×8 with window
 400×scale (the ROADMAP window sweep) — the rows record where the
@@ -39,11 +41,17 @@ SCALE_SWEEP_POLICIES = ("milp", "decomposed", "incremental", "horizon",
 
 
 def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
-          scenario_kwargs: Optional[Dict] = None) -> Dict:
+          scenario_kwargs: Optional[Dict] = None,
+          backend=None) -> Dict:
+    """``backend`` overrides the scenario's elastic-bridge backend
+    (`RuntimeConfig.elastic_backend`); None keeps the default simulated
+    backend.  The row records which backend executed the migrations."""
     from repro.fleet import build_scenario, get_policy
 
     kwargs = dict(scenario_kwargs or {})
     spec = build_scenario(sc, seed=seed, **kwargs)
+    if backend is not None:
+        spec.config.elastic_backend = backend
     runtime = spec.make_runtime(get_policy(pol))
     t0 = time.perf_counter()
     tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
@@ -55,6 +63,7 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
         "policy": pol,
         "seed": seed,
         "scale": kwargs.get("scale", 1),
+        "backend": runtime.executor.backend.name,
         "wall_s": round(wall, 3),
         "fingerprint": tel.fingerprint(),
         # solver-latency cliff evidence: worst tick vs the adaptive budget
@@ -172,8 +181,15 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     """CI sanity slice: fast cells with every moving part exercised
     (request streams, in-flight migrations, adaptive switching, the
     decomposed and incremental planners at topology scale ×``scale``, a
-    backbone cut).  The incremental cell doubles as the solver
-    microbenchmark: CI asserts its warm-start hit-rate is > 0."""
+    backbone cut, and the elastic bridge).  The incremental cell doubles
+    as the solver microbenchmark: CI asserts its warm-start hit-rate is
+    > 0.  The bridge cells are gated too: the site-outage pair must agree
+    on fingerprints between the simulated and flat backends (the
+    no-declared-state fallback is the flat model), and the
+    hetero-expansion cell must show nonzero byte-derived snapshot/restore
+    phase times."""
+    from repro.fleet import FlatStateBackend
+
     return [
         _cell("paper-steady-state", "greedy", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 250}),
@@ -185,6 +201,14 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
               scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
         _cell("paper-steady-state", "incremental", seed, with_ticks=False,
               scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
+        # Elastic-bridge smoke: simulated-vs-flat parity on site-outage …
+        _cell("site-outage", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 150}),
+        _cell("site-outage", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 150},
+              backend=FlatStateBackend(64.0)),
+        # … and byte-derived phase timings on declared-state jobs.
+        _cell("hetero-expansion", "greedy", seed, with_ticks=False),
     ]
 
 

@@ -1,0 +1,108 @@
+"""Docs-consistency check: fail when a ``docs/*.md`` page references a
+code symbol that no longer exists in the tree.
+
+Heuristic by design (a grep, not an import): the documentation quotes
+symbols in backtick spans.  Every span is mined for *symbol-looking*
+tokens — identifiers with an underscore, CamelCase names, ``calls()``, and
+dotted paths — and each token must appear as an identifier somewhere in
+``src/``, ``tests/``, ``benchmarks/`` or ``examples/`` (or be a real file
+path).  Plain-English backticked words without symbol shape are ignored,
+so prose like `window` or `milp` never false-positives, while a renamed
+`reshard_restore` or deleted `MigrationExecutor` breaks the build the
+moment a doc still mentions it.
+
+    PYTHONPATH=src python benchmarks/check_docs.py [docs ...]
+
+Exit status: 0 = docs consistent, 1 = stale references found (the count
+is printed; it is NOT the exit code — codes wrap modulo 256).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Set, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CODE_DIRS = ("src", "tests", "benchmarks", "examples")
+
+_IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+_CAMEL = re.compile(r"^[A-Z][a-z0-9]+[A-Z]")         # e.g. MeshPlan
+_SPAN = re.compile(r"`([^`\n]+)`")
+
+
+def _code_identifiers() -> Set[str]:
+    """Every identifier token in the code tree, plus file/dir basenames
+    (so `elastic_bridge` resolves via elastic_bridge.py)."""
+    idents: Set[str] = set()
+    for top in CODE_DIRS:
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, top)):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for name in filenames:
+                stem, ext = os.path.splitext(name)
+                idents.update(_IDENT.findall(stem))
+                if ext != ".py":
+                    continue
+                with open(os.path.join(dirpath, name), errors="replace") as f:
+                    idents.update(_IDENT.findall(f.read()))
+            idents.update(_IDENT.findall(os.path.basename(dirpath)))
+    return idents
+
+
+def _symbol_tokens(span: str) -> Iterable[str]:
+    """Symbol-looking tokens inside one backtick span."""
+    if not span.isascii():
+        return []          # math/prose spans (Σ w_k·(X_k + Y_k), arrows …)
+    out: List[str] = []
+    for tok in _IDENT.findall(span):
+        looks_symbol = (
+            "_" in tok
+            or _CAMEL.match(tok)
+            or f"{tok}(" in span       # quoted call: plan(), observe(now=…)
+            or f"{tok}." in span or f".{tok}" in span   # dotted path part
+        )
+        if looks_symbol:
+            out.append(tok)
+    return out
+
+
+def _is_real_path(span: str) -> bool:
+    return ("/" in span or span.endswith((".py", ".md", ".json"))) and (
+        os.path.exists(os.path.join(ROOT, span))
+        or os.path.exists(os.path.join(ROOT, "docs", span)))
+
+
+def check(doc_paths: Iterable[str]) -> List[Tuple[str, int, str, str]]:
+    """Returns (doc, line, span, missing-token) for every stale reference."""
+    idents = _code_identifiers()
+    stale: List[Tuple[str, int, str, str]] = []
+    for doc in doc_paths:
+        with open(doc) as f:
+            for lineno, line in enumerate(f, 1):
+                for span in _SPAN.findall(line):
+                    if _is_real_path(span):
+                        continue
+                    for tok in _symbol_tokens(span):
+                        if tok not in idents:
+                            stale.append((os.path.relpath(doc, ROOT),
+                                          lineno, span, tok))
+    return stale
+
+
+def main(argv: List[str]) -> int:
+    docs = argv or sorted(
+        os.path.join(ROOT, "docs", n)
+        for n in os.listdir(os.path.join(ROOT, "docs")) if n.endswith(".md"))
+    stale = check(docs)
+    for doc, lineno, span, tok in stale:
+        print(f"{doc}:{lineno}: `{span}` references unknown symbol '{tok}'")
+    if stale:
+        print(f"{len(stale)} stale reference(s) across {len(docs)} pages")
+        return 1
+    print(f"docs consistent: {len(docs)} pages, 0 stale references")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

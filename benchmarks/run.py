@@ -8,9 +8,11 @@
 Default mode prints ``name,key=value,...`` CSV rows for every section.
 ``--json`` runs the fleet sweep (scale ×1 scenario × policy grid, plus the
 ×2/×4/×8 solver-scaling sweep with 400×scale windows) and writes
-machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a 4-cell
-CI sanity slice (request streams + adaptive policy, a backbone cut, the
-decomposed planner at ``--scale``) and exits non-zero on any failure.
+machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a CI
+sanity slice (request streams + adaptive policy, a backbone cut, the
+decomposed/incremental planners at ``--scale``, and the elastic-bridge
+cells: simulated-vs-flat fingerprint parity plus byte-derived phase
+timings on hetero-expansion) and exits non-zero on any failure.
 """
 
 import argparse
@@ -106,14 +108,35 @@ def run_smoke(seed: int, scale: int) -> int:
         if r["policy"] == "incremental":
             # Solver microbenchmark gate: the warm-start path must be live.
             ok = ok and r["warm_start_hits"] > 0
+        if r["scenario"] == "hetero-expansion":
+            # Elastic-bridge gate: declared-state jobs must execute real
+            # snapshot → transfer → restore pipelines with byte-derived
+            # phase times.
+            ok = (ok and r["migrations_completed"] > 0
+                  and r["total_snapshot_s"] > 0 and r["total_restore_s"] > 0)
         bad |= 0 if ok else 1
         print(f"  {r['scenario']:28s} {r['policy']:11s} x{r['scale']:<2d} "
+              f"backend={r['backend']:9s} "
               f"admitted={r['admitted']} ticks={r['ticks']} "
               f"migs={r['migrations_completed']} "
               f"ratio={_ratio(r['mean_moved_ratio'])} "
               f"warm={r['warm_start_hits']}/{r['regions_solved']} "
               f"reused={r['regions_reused']} "
+              f"phases={r['total_snapshot_s']:.2f}/"
+              f"{r['total_transfer_s']:.2f}/{r['total_restore_s']:.2f}s "
               f"[{'OK' if ok else 'FAIL'}]")
+    # Elastic-bridge parity gate: the simulated backend's no-declared-state
+    # fallback must be behavior-identical to the flat executor model.
+    pair = {r["backend"]: r["fingerprint"] for r in rows
+            if r["scenario"] == "site-outage"}
+    if len(pair) == 2:
+        same = pair["simulated"] == pair["flat"]
+        print(f"  bridge parity (site-outage simulated vs flat): "
+              f"{'OK' if same else 'FAIL'}")
+        bad |= 0 if same else 1
+    else:
+        print("  bridge parity pair missing from smoke rows [FAIL]")
+        bad |= 1
     return bad
 
 

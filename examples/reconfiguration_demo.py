@@ -5,8 +5,9 @@
      (Step 5 — first-come-first-served fills the cheap pods),
   3. run the in-operation reconfiguration (Step 7): the LP trial-solve
      finds a placement with higher group satisfaction and emits migrations,
-  4. EXECUTE one migration for a real (tiny) training job: checkpoint →
-     re-shard → resume — the framework's live migration,
+  4. EXECUTE one migration for a real (tiny) training job through the
+     elastic bridge (`fleet.elastic_bridge`): snapshot → reshard →
+     resume with per-phase timings — the framework's live migration,
   5. report the satisfaction ratios (the paper's fig. 5(b) quantity).
 
     PYTHONPATH=src python examples/reconfiguration_demo.py
@@ -18,12 +19,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.cluster import FleetScheduler, JobSpec, PodSpec, build_fleet_topology
+from repro.fleet.elastic_bridge import LiveElasticBackend, execute_move
 from repro.models import reduced
-from repro.runtime.elastic import MeshPlan, reshard_restore
-from repro.ckpt import save
-from repro.train import init_state, make_optimizer
+from repro.runtime.elastic import MeshPlan
+from repro.train import make_optimizer
 from repro.train.trainer import TrainerConfig, make_synthetic_trainer
-import jax
 
 
 def main():
@@ -70,9 +70,10 @@ def main():
               f"{mv.new.node.site_id}  (ratio {mv.ratio:.4f})")
     sched.recon.apply(res)
 
-    # ---- 4. live-migrate one real training job ----
+    # ---- 4. live-migrate one real training job through the bridge ----
     if res.moves:
         mv = res.moves[0]
+        req = sched.engine.placed[mv.req_id].request
         print(f"\nexecuting migration of job {mv.req_id} as ckpt→reshard→resume:")
         cfg = reduced(get_config("granite-3-2b"), vocab_size=128)
         opt = make_optimizer("adamw", lr=1e-3)
@@ -80,13 +81,25 @@ def main():
             tcfg = TrainerConfig(steps=6, log_every=2, ckpt_dir=d, ckpt_every=100)
             trainer = make_synthetic_trainer(cfg, tcfg, global_batch=4, seq_len=32)
             state = trainer.run()
-            save(d, 6, state, extra={"step": 6})          # pause + snapshot
-            mesh = MeshPlan((1, 1), ("data", "model")).build()  # target slice
-            state2, step, _ = reshard_restore(d, cfg, opt, mesh)
-            print(f"  restored at step {step} on {mv.new.node.site_id}; resuming")
+            # The elastic bridge runs the same pipeline the fleet runtime
+            # simulates: snapshot (ckpt.save), transfer (priced over the
+            # move's links), restore (MeshPlan rebuild over the
+            # destination's devices + reshard_restore).
+            backend = LiveElasticBackend()
+            backend.register_job(mv.req_id, d, cfg, opt,
+                                 MeshPlan((1, 1), ("data", "model")))
+            backend.update_state(mv.req_id, state, step=6)   # pause
+            phases = execute_move(backend, req, mv)
+            resumed = backend.resumed[mv.req_id]
+            print(f"  phases: snapshot {phases.snapshot_s:.3f}s + "
+                  f"transfer {phases.transfer_s:.3f}s ({phases.mbits:.0f} Mb) + "
+                  f"restore {phases.restore_s:.3f}s "
+                  f"→ downtime {phases.downtime_s:.3f}s")
+            print(f"  restored at step {resumed.step} on "
+                  f"{mv.new.node.site_id} (mesh {resumed.plan.shape}); resuming")
             tcfg2 = TrainerConfig(steps=10, log_every=2)
             trainer2 = make_synthetic_trainer(cfg, tcfg2, global_batch=4, seq_len=32)
-            trainer2.run(state=state2, start_step=step)
+            trainer2.run(state=resumed.state, start_step=resumed.step)
         print("  migration complete — no training progress lost")
 
     # ---- 5. the paper's metric ----

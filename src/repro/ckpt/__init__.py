@@ -1,5 +1,5 @@
 """Atomic sharded checkpointing with cross-mesh resharding restore."""
 from .checkpoint import (  # noqa: F401
-    CheckpointManager, latest_checkpoint, list_checkpoints, read_extra,
-    restore, save,
+    CheckpointManager, checkpoint_nbytes, latest_checkpoint, list_checkpoints,
+    read_extra, restore, save, shard_count, tree_nbytes,
 )

@@ -68,6 +68,39 @@ def _path_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
 
+def tree_nbytes(tree: Any) -> int:
+    """Checkpoint payload bytes of ``tree`` — arrays *or* ShapeDtypeStructs
+    (anything with ``.shape``/``.dtype``).  This is the exact uncompressed
+    byte count `save` serializes, so callers can size a migration's state
+    transfer without materializing the state (`fleet.elastic_bridge` sizes
+    simulated transfers from `train.state_shapes` output through here)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shape = tuple(getattr(leaf, "shape", ()))
+        dtype = np.dtype(getattr(leaf, "dtype", np.float32))
+        total += int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return total
+
+
+def shard_count(nbytes: int) -> int:
+    """Number of shard files `save` would emit for ``nbytes`` of payload
+    (one per ~`_SHARD_BYTES` flush, minimum one)."""
+    return max(1, -(-int(nbytes) // _SHARD_BYTES))
+
+
+def checkpoint_nbytes(path: str) -> Tuple[int, int]:
+    """(payload bytes, shard-file count) of a committed checkpoint, from its
+    manifest — the byte count a cross-node migration actually copies."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    total = 0
+    shards = set()
+    for leaf in manifest["leaves"]:
+        total += int(np.prod(leaf["shape"], dtype=np.int64)) * np.dtype(leaf["dtype"]).itemsize
+        shards.add(leaf["shard"])
+    return total, max(len(shards), 1)
+
+
 def save(directory: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
     """Synchronous atomic save; returns the checkpoint path."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)

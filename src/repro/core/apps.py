@@ -37,6 +37,12 @@ class AppProfile:
     data_mb: float            # C_k  (transferred per request)
     proc_time_s: float        # B^p_{i,k} on the offload device
     cpu_proc_time_s: Optional[float] = None  # un-offloaded fallback (unused in paper sim)
+    # Migratable state (checkpoint payload) in MB.  None = the app carries
+    # no declared state and migrations fall back to the executor's flat
+    # default; training jobs (`core.cluster.JobSpec`) declare their real
+    # checkpoint size here so `fleet.elastic_bridge` can derive transfer
+    # bytes and snapshot/restore phase times from it.
+    state_mb: Optional[float] = None
 
 
 NAS_FT = AppProfile("NAS.FT", "gpu", 1.0, 2.0, 0.2, 5.8, cpu_proc_time_s=5.8 * 5)

@@ -71,6 +71,11 @@ class JobSpec:
     data_mb: float = 1.0           # per-request data (serving) / ckpt stream
     step_slo_s: Optional[float] = None
     budget_usd_month: Optional[float] = None
+    # Checkpointed state (params + optimizer moments) the job's migration
+    # must copy, in MB.  None keeps the legacy flat executor default; the
+    # fleet scenarios size it per chip (`fleet.scenarios.hetero_expansion`)
+    # so the elastic bridge derives real snapshot/transfer/restore phases.
+    state_mb: Optional[float] = None
 
     def profile(self) -> AppProfile:
         return AppProfile(
@@ -80,6 +85,7 @@ class JobSpec:
             bandwidth_mbps=self.bandwidth_mbps,
             data_mb=self.data_mb,
             proc_time_s=self.step_time_s,
+            state_mb=self.state_mb,
         )
 
     def request(self, input_site: str = "fabric") -> PlacementRequest:

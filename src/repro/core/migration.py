@@ -15,7 +15,7 @@ checkpoint transfer time over the inter-pod link.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from .apps import Candidate
 from .placement import CapacityError, PlacementEngine
@@ -23,6 +23,18 @@ from .placement import CapacityError, PlacementEngine
 
 @dataclasses.dataclass(frozen=True)
 class Move:
+    """One app's planned relocation: ``old`` → ``new`` candidate.
+
+    Lifecycle under the fleet runtime (`fleet.executor.MigrationExecutor`):
+    an accepted move enters the ledger **waiting**; once its destination
+    fits it becomes a pre-copy `Transfer` (or stop-and-copy if the app was
+    suspended to break a capacity cycle) running the elastic snapshot →
+    transfer → restore pipeline; it ends **committed** at the destination,
+    **aborted** with source rollback (destination/link failure), or
+    **dropped** (app departed / went stale while waiting).  Under the
+    synchronous `FleetScheduler` path the same move is applied instantly
+    by `plan_and_apply` below."""
+
     req_id: int
     old: Candidate
     new: Candidate
@@ -50,6 +62,7 @@ def plan_and_apply(
     engine: PlacementEngine,
     moves: Sequence[Move],
     state_mb: float = 64.0,
+    state_mb_by_req: Optional[Dict[int, float]] = None,
 ) -> List[MigrationStep]:
     """Order and execute ``moves`` on ``engine``; returns the executed plan.
 
@@ -59,7 +72,17 @@ def plan_and_apply(
     its resources, incurring downtime) and re-placing it once the cycle has
     unwound.  Raises if the solver's plan is genuinely unschedulable, which
     would indicate a capacity-accounting bug.
+
+    ``state_mb_by_req`` overrides the flat ``state_mb`` per app for the
+    downtime estimates — `fleet.executor.InstantExecutor` passes the
+    elastic backend's per-app checkpoint sizes through here so downtime
+    and duration are priced from the same size model.
     """
+    def _mb(mv: Move) -> float:
+        if state_mb_by_req is not None:
+            return state_mb_by_req.get(mv.req_id, state_mb)
+        return state_mb
+
     pending = sorted(moves, key=lambda m: m.ratio)  # best improvement first
     suspended: List[Move] = []                      # released, awaiting re-place
     steps: List[MigrationStep] = []
@@ -75,7 +98,8 @@ def plan_and_apply(
                 app.price = mv.new.price
                 suspended.remove(mv)
                 steps.append(MigrationStep(
-                    mv, "stop_and_copy", estimate_downtime(mv, state_mb, "stop_and_copy")))
+                    mv, "stop_and_copy",
+                    estimate_downtime(mv, _mb(mv), "stop_and_copy")))
                 progressed = True
         # Live-migrate whatever fits directly.
         for mv in list(pending):
@@ -84,7 +108,8 @@ def plan_and_apply(
             except CapacityError:
                 continue
             pending.remove(mv)
-            steps.append(MigrationStep(mv, "live", estimate_downtime(mv, state_mb, "live")))
+            steps.append(MigrationStep(mv, "live",
+                                       estimate_downtime(mv, _mb(mv), "live")))
             progressed = True
         if progressed:
             continue

@@ -6,11 +6,16 @@ service over a changing fleet, with load-bearing simulated time).
   runtime   — discrete-event loop over a `PlacementEngine`; apps gain a
               MIGRATING state while their transfer is in flight
   policies  — one `ReconfigPolicy` interface over MILP / greedy /
-              hillclimb / GA / adaptive (online MILP↔greedy switching),
-              all traffic-weight aware
+              hillclimb / GA, the planner policies (decomposed /
+              incremental / horizon) and the `adaptive`
+              milp→incremental→greedy ladder, all traffic-weight aware
   executor  — link-capacity reservation ledger: transfers occupy fair-share
               link bandwidth over sim time, double-book source+destination,
               and roll back on destination failure
+  elastic_bridge — backend seam mapping every transfer onto the elastic
+              checkpoint → reshard → resume pipeline (`runtime.elastic`):
+              simulated backend sizes copies from checkpoint byte counts,
+              live backend executes them for real
   scenarios — paper-steady-state, diurnal-streams, flash-crowd(+during-
               reconfig), node-outage, site-outage, backbone-cut,
               flapping-node, hetero-expansion — all scalable ×2/×4/×8
@@ -36,6 +41,16 @@ from .events import (  # noqa: F401
     RateCurve,
     ReconfigTick,
     RequestRateUpdate,
+)
+from .elastic_bridge import (  # noqa: F401
+    ElasticBackend,
+    FlatStateBackend,
+    LiveElasticBackend,
+    MigrationPhases,
+    SimulatedElasticBackend,
+    SnapshotInfo,
+    auto_backend,
+    execute_move,
 )
 from .executor import (  # noqa: F401
     InstantExecutor,

@@ -118,9 +118,11 @@ class ReconfigTick(Event):
 
 @dataclasses.dataclass(frozen=True)
 class MigrationStart(Event):
-    """Marker emitted by the executor when a transfer actually begins
-    occupying link bandwidth (may be later than the tick that planned it,
-    if the move had to wait for capacity)."""
+    """Marker emitted by the executor when a migration's pipeline actually
+    begins (may be later than the tick that planned it, if the move had to
+    wait for capacity).  Start means the elastic backend has taken its
+    snapshot and the transfer begins occupying link bandwidth
+    (`fleet.elastic_bridge`)."""
 
     req_id: int
     mode: str        # "precopy" | "stop_and_copy"
@@ -128,10 +130,12 @@ class MigrationStart(Event):
 
 @dataclasses.dataclass(frozen=True)
 class MigrationComplete(Event):
-    """Self-scheduled by the executor at the transfer's projected finish.
-    ``gen`` guards against staleness: whenever link contention changes, the
-    executor re-projects every active transfer under a fresh generation and
-    completions carrying an old ``gen`` are ignored."""
+    """Self-scheduled by the executor at the pipeline's projected finish —
+    remaining snapshot phase + checkpoint copy at the fair-share link rate
+    + restore phase.  ``gen`` guards against staleness: whenever link
+    contention changes, the executor re-projects every active transfer
+    under a fresh generation and completions carrying an old ``gen`` are
+    ignored."""
 
     req_id: int
     gen: int

@@ -1,10 +1,16 @@
-"""Link-capacity reservation ledger for in-flight migrations.
+"""Link-capacity reservation ledger driving every scheduled migration
+through the elastic checkpoint → reshard → resume pipeline.
 
 An accepted reconfiguration plan is a *set* of moves; executing it costs
-real network time, and since this refactor that time is simulated rather
-than merely reported.  The `MigrationExecutor` is a ledger of active
-transfers over the topology's links:
+real network time, and since the time-model refactor that time is simulated
+rather than merely reported.  The `MigrationExecutor` is a ledger of active
+transfers over the topology's links, and since the elastic-bridge refactor
+each transfer is one trip through the `fleet.elastic_bridge` backend seam:
 
+* when a transfer **starts**, the backend takes a **snapshot** of the job's
+  state (`ElasticBackend.snapshot`) — the checkpoint's byte count sizes the
+  copy (no more flat ``state_mb`` blob for jobs that declare state) and the
+  host-side serialize time opens the transfer's phase timeline;
 * an accepted move starts as a **pre-copy** transfer when its destination
   currently fits — the source stays occupied until the transfer finishes,
   so the app is *double-booked* over the transfer window;
@@ -12,26 +18,36 @@ transfers over the topology's links:
   freed capacity is offered to the waiting queue.  A stalled cycle (e.g.
   two apps swapping full nodes) is broken by **suspending** the best
   waiting app (stop-and-copy: its source occupancy is released and the app
-  takes downtime for the full transfer);
+  takes downtime for the full snapshot→copy→restore pipeline);
 * concurrent transfers sharing a link get a **fair share** of its
   bandwidth — each transfer's rate is ``min over its links of
   bandwidth / n_active_on_link`` — so contention slows transfers down
   instead of pre-serializing them.  Whenever the active set changes, every
-  transfer's remaining bytes are re-projected and a fresh
+  transfer's remaining phases are re-projected and a fresh
   `MigrationComplete` generation is scheduled; stale completions are
   ignored;
 * each active transfer **reserves** ``reserve_mbps`` of bandwidth on every
   link it crosses (clamped to the residual) against the engine's admission
   control — a saturating migration can reject an arrival it would
   previously have admitted, coupling migration cost to admission;
-* a **destination node failure** aborts the transfers headed there: a
-  pre-copy move rolls back to its source, a suspended app must be
-  re-placed by the runtime (or is lost).  A **link cut**
+* when a transfer **completes**, the backend **restores** at the
+  destination (`ElasticBackend.restore`: mesh rebuild + reshard-restore,
+  with its own host-side phase time) and the engine commits the move;
+* a **destination node failure** aborts the transfers headed there: the
+  backend **rolls back** (`ElasticBackend.rollback` re-installs the source
+  checkpoint), a pre-copy move resumes on its source, a suspended app must
+  be re-placed by the runtime (or is lost).  A **link cut**
   (`on_link_failure`) aborts every transfer crossing the dead link the
   same way, with source rollback for pre-copy moves.
 
+Per-phase timings (snapshot_s / transfer_s / restore_s / downtime_s) land
+on every `MigrationRecord` and flow into BENCH_fleet.json — see
+docs/elastic.md for the pipeline and docs/fleet.md for the ledger.
+
 The old executor's instantaneous semantics survive as `InstantExecutor`
-for the synchronous `FleetScheduler` path (`core.cluster`).
+for the synchronous `FleetScheduler` path (`core.cluster`); it prices its
+schedules through the SAME backend size model, so the two executors cannot
+drift apart on transfer sizes.
 """
 
 from __future__ import annotations
@@ -47,22 +63,38 @@ from repro.core.placement import (
 )
 from repro.core.reconfig import ReconfigResult
 
+from .elastic_bridge import (
+    MODE_PRECOPY,
+    MODE_STOP_AND_COPY,
+    ElasticBackend,
+    SimulatedElasticBackend,
+    SnapshotInfo,
+    pipeline_downtime,
+)
 from .events import EventQueue, MigrationComplete, MigrationStart
 from .telemetry import MigrationRecord
-
-MODE_PRECOPY = "precopy"
-MODE_STOP_AND_COPY = "stop_and_copy"
 
 
 # --------------------------------------------------------------- transfers
 @dataclasses.dataclass
 class Transfer:
-    """One in-flight state copy occupying link bandwidth over sim time."""
+    """One in-flight checkpoint copy walking the snapshot → transfer →
+    restore phase timeline over sim time.
+
+    Lifecycle: created by `MigrationExecutor._start` (after the backend's
+    snapshot), progressed by `_advance` (snapshot phase first, then link
+    copy at the fair-share rate, then restore phase), finished by
+    `on_complete` (backend restore + engine commit) or killed by
+    `on_node_failure` / `on_link_failure` / `cancel` (backend rollback /
+    release + engine abort)."""
 
     move: Move
     mode: str                       # MODE_PRECOPY | MODE_STOP_AND_COPY
     links: Tuple[str, ...]          # link ids the copy traverses
-    mbits_remaining: float
+    snapshot: SnapshotInfo          # what the backend checkpointed
+    snap_remaining_s: float         # host serialize phase still to run
+    mbits_remaining: float          # link copy still to run
+    restore_remaining_s: float      # host restore phase still to run
     started_s: float
     last_update_s: float
     rate_mbps: float = 0.0
@@ -74,6 +106,13 @@ class Transfer:
     @property
     def req_id(self) -> int:
         return self.move.req_id
+
+    def phases_spent(self, duration_s: float) -> Tuple[float, float, float]:
+        """(snapshot_s, transfer_s, restore_s) actually elapsed so far —
+        exact for finished transfers, partial for aborted ones."""
+        snap = self.snapshot.snapshot_s - self.snap_remaining_s
+        restore = self.snapshot.restore_s - self.restore_remaining_s
+        return snap, max(duration_s - snap - restore, 0.0), restore
 
 
 def _transfer_links(move: Move) -> Tuple[str, ...]:
@@ -88,11 +127,18 @@ class MigrationExecutor:
 
     The runtime owns the event loop; the executor mutates the engine's
     migration state (`begin_move` / `commit_move` / `abort_move` /
-    `suspend`) and schedules its own `MigrationComplete` events.
+    `suspend`), delegates the snapshot / restore / rollback phases to its
+    `ElasticBackend`, and schedules its own `MigrationComplete` events.
     """
 
-    def __init__(self, state_mb: float = 64.0, reserve_mbps: float = 2.0):
+    def __init__(self, state_mb: float = 64.0, reserve_mbps: float = 2.0,
+                 backend: Optional[ElasticBackend] = None):
         self.state_mb = state_mb
+        # The elastic bridge: sizes every transfer and runs its snapshot /
+        # restore / rollback phases.  Default: simulated backend whose
+        # no-declared-state fallback reproduces the old flat model.
+        self.backend = backend if backend is not None else (
+            SimulatedElasticBackend(default_state_mb=state_mb))
         # Bandwidth each active transfer debits against admission control
         # on every link it crosses (clamped to the residual).  0 restores
         # the old unreserved semantics.
@@ -150,7 +196,11 @@ class MigrationExecutor:
         events: EventQueue,
     ) -> Optional[MigrationRecord]:
         """Handle a `MigrationComplete`; returns the record, or None when
-        the event is stale (superseded by a contention re-projection)."""
+        the event is stale (superseded by a contention re-projection).
+
+        This is the pipeline's final phase: the engine commits the move and
+        the backend restores at the destination (mesh rebuild +
+        reshard-restore from the snapshot taken at start)."""
         tr = self.active.get(req_id)
         if tr is None or tr.gen != gen:
             return None
@@ -158,16 +208,37 @@ class MigrationExecutor:
         del self.active[req_id]
         engine.release_link_bandwidth(tr.reserved)
         engine.commit_move(req_id)
+        request = engine.placed[req_id].request
+        self.backend.restore(request, tr.move, tr.snapshot, now)
         duration = now - tr.started_s
-        # Pre-copy pauses for one dirty-page round (~5 % of the copy);
-        # stop-and-copy pauses for the whole transfer.
-        downtime = 0.05 * duration if tr.mode == MODE_PRECOPY else duration
+        snap_s, transfer_s, restore_s = tr.phases_spent(duration)
+        downtime = pipeline_downtime(tr.mode, snap_s, transfer_s, restore_s)
         rec = MigrationRecord(req_id, tr.mode, "completed",
-                              tr.started_s, now, downtime)
+                              tr.started_s, now, downtime,
+                              snapshot_s=snap_s, transfer_s=transfer_s,
+                              restore_s=restore_s)
         self.records.append(rec)
         self._reschedule(engine, now, events)
         self._pump(engine, now, events)
         return rec
+
+    def _abort_active(self, engine: PlacementEngine, tr: Transfer,
+                      now: float) -> None:
+        """Shared abort path: release reservations, roll the engine and the
+        elastic backend back (source checkpoint re-install), record."""
+        engine.release_link_bandwidth(tr.reserved)
+        engine.abort_move(tr.req_id)
+        if tr.req_id in engine.placed:
+            self.backend.rollback(engine.placed[tr.req_id].request,
+                                  tr.move, tr.snapshot, now)
+        # A suspended (stop-and-copy) app served nothing for the whole
+        # transfer; a pre-copy app kept running on its source.
+        duration = now - tr.started_s
+        down = duration if tr.mode == MODE_STOP_AND_COPY else 0.0
+        snap_s, transfer_s, restore_s = tr.phases_spent(duration)
+        self.records.append(MigrationRecord(
+            tr.req_id, tr.mode, "aborted", tr.started_s, now, down,
+            snapshot_s=snap_s, transfer_s=transfer_s, restore_s=restore_s))
 
     def on_node_failure(
         self,
@@ -179,9 +250,10 @@ class MigrationExecutor:
         """Abort migrations touching a failed node.
 
         Returns ``(rolled_back, homeless)``: apps whose pre-copy transfer
-        to/through the node was aborted (they keep running on their
-        source), and suspended apps whose destination died mid-copy (the
-        runtime must re-place or drop them)."""
+        to/through the node was aborted (the backend re-installs their
+        source checkpoint and they keep running on their source), and
+        suspended apps whose destination died mid-copy (the runtime must
+        re-place or drop them — their snapshot is the only live copy)."""
         self._advance(now)
         rolled_back: List[int] = []
         homeless: List[int] = []
@@ -192,13 +264,7 @@ class MigrationExecutor:
             if dest != node_id and src != node_id:
                 continue
             del self.active[req_id]
-            engine.release_link_bandwidth(tr.reserved)
-            engine.abort_move(req_id)
-            # A suspended (stop-and-copy) app served nothing for the whole
-            # transfer; a pre-copy app kept running on its source.
-            down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
-            self.records.append(MigrationRecord(
-                req_id, tr.mode, "aborted", tr.started_s, now, down))
+            self._abort_active(engine, tr, now)
             if req_id in engine.suspended:
                 homeless.append(req_id)
             elif src != node_id:
@@ -235,11 +301,7 @@ class MigrationExecutor:
             if link_id not in tr.links:
                 continue
             del self.active[req_id]
-            engine.release_link_bandwidth(tr.reserved)
-            engine.abort_move(req_id)
-            down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
-            self.records.append(MigrationRecord(
-                req_id, tr.mode, "aborted", tr.started_s, now, down))
+            self._abort_active(engine, tr, now)
             if req_id in engine.suspended:
                 homeless.append(req_id)
             else:
@@ -255,20 +317,28 @@ class MigrationExecutor:
     def cancel(self, engine: PlacementEngine, req_id: int, now: float,
                events: EventQueue) -> bool:
         """Withdraw ``req_id`` from the ledger (departure mid-migration).
-        The caller releases the engine side."""
-        tr = self.active.pop(req_id, None)
+        The caller releases the engine side; the backend drops whatever
+        snapshot it retained for the app."""
+        tr = self.active.get(req_id)
         touched = tr is not None
         if tr is not None:
-            self._advance(now)
+            self._advance(now)   # bank phases BEFORE removing the transfer
+            del self.active[req_id]
             engine.release_link_bandwidth(tr.reserved)
-            down = (now - tr.started_s) if tr.mode == MODE_STOP_AND_COPY else 0.0
+            duration = now - tr.started_s
+            down = duration if tr.mode == MODE_STOP_AND_COPY else 0.0
+            snap_s, transfer_s, restore_s = tr.phases_spent(duration)
             self.records.append(MigrationRecord(
-                req_id, tr.mode, "cancelled", tr.started_s, now, down))
+                req_id, tr.mode, "cancelled", tr.started_s, now, down,
+                snapshot_s=snap_s, transfer_s=transfer_s,
+                restore_s=restore_s))
         for mv in list(self.waiting):
             if mv.req_id == req_id:
                 self.waiting.remove(mv)
                 self.moves_dropped += 1   # accepted but never transferred
                 touched = True
+        if touched:
+            self.backend.release(req_id)
         if tr is not None:
             self._reschedule(engine, now, events)
             self._pump(engine, now, events)
@@ -295,17 +365,32 @@ class MigrationExecutor:
             engine.placed[mv.req_id].state = STATE_PLACED
 
     def _advance(self, now: float) -> None:
-        """Progress every active transfer to ``now`` at its current rate."""
+        """Progress every active transfer to ``now`` along its phase
+        timeline: finish the snapshot phase, then drain megabits at the
+        current fair-share rate, then burn down the restore phase."""
         for tr in self.active.values():
             dt = now - tr.last_update_s
             if dt > 0.0:
-                tr.mbits_remaining = max(tr.mbits_remaining - tr.rate_mbps * dt, 0.0)
+                take = min(dt, tr.snap_remaining_s)
+                tr.snap_remaining_s -= take
+                dt -= take
+                if dt > 0.0 and tr.mbits_remaining > 0.0 and tr.rate_mbps > 0.0:
+                    drain = tr.mbits_remaining / tr.rate_mbps
+                    if dt >= drain:   # drained: compare times, not the
+                        tr.mbits_remaining = 0.0   # float-residual subtraction
+                        dt -= drain
+                    else:
+                        tr.mbits_remaining -= tr.rate_mbps * dt
+                        dt = 0.0
+                if dt > 0.0 and tr.mbits_remaining <= 0.0:
+                    tr.restore_remaining_s = max(tr.restore_remaining_s - dt, 0.0)
             tr.last_update_s = now
 
     def _reschedule(self, engine: PlacementEngine, now: float,
                     events: EventQueue) -> None:
         """Recompute fair-share rates and re-project completions under a
-        fresh generation (stale `MigrationComplete`s become no-ops)."""
+        fresh generation (stale `MigrationComplete`s become no-ops).  A
+        completion lands after the remaining snapshot + copy + restore."""
         counts = self.link_shares()
         links = engine.topo.links
         for req_id in sorted(self.active):
@@ -316,16 +401,23 @@ class MigrationExecutor:
             )
             self._gen += 1
             tr.gen = self._gen
-            eta = now + tr.mbits_remaining / max(tr.rate_mbps, 1e-9)
+            eta = (now + tr.snap_remaining_s
+                   + tr.mbits_remaining / max(tr.rate_mbps, 1e-9)
+                   + tr.restore_remaining_s)
             events.push(eta, MigrationComplete(req_id, tr.gen))
 
     def _start(self, engine: PlacementEngine, mv: Move, mode: str, now: float,
                events: EventQueue) -> None:
+        request = engine.placed[mv.req_id].request
+        snap = self.backend.snapshot(request, mv, now)
         tr = Transfer(
             move=mv,
             mode=mode,
             links=_transfer_links(mv),
-            mbits_remaining=self.state_mb * 8.0,
+            snapshot=snap,
+            snap_remaining_s=snap.snapshot_s,
+            mbits_remaining=snap.mbits,
+            restore_remaining_s=snap.restore_s,
             started_s=now,
             last_update_s=now,
         )
@@ -392,6 +484,10 @@ class MigrationExecutor:
 # ----------------------------------------------------- legacy instant path
 @dataclasses.dataclass(frozen=True)
 class ScheduledMigration:
+    """One step of an `InstantExecutor` schedule: the (already applied)
+    migration step plus its priced slot on the per-link serialization
+    timeline."""
+
     step: MigrationStep
     start_s: float
     duration_s: float
@@ -403,6 +499,10 @@ class ScheduledMigration:
 
 @dataclasses.dataclass
 class MigrationSchedule:
+    """Priced schedule of an instantly-applied plan (`InstantExecutor`):
+    transfers serialized per link, with makespan / overlap / downtime
+    aggregates.  Purely descriptive — the engine was already mutated."""
+
     items: List[ScheduledMigration]
     state_mb: float
 
@@ -426,11 +526,13 @@ class MigrationSchedule:
         return sum(it.step.est_downtime_s for it in self.items)
 
 
-def _transfer_time(step: MigrationStep, state_mb: float) -> float:
-    """Full state copy over the slowest link on the move's path (Mb / Mbps)."""
-    links = step.move.new.links or step.move.old.links
+def _transfer_time(mbits: float, move: Move) -> float:
+    """``mbits`` over the slowest link on the move's path (Mb / Mbps).
+    The size comes from the elastic backend — the one size model both
+    executors share."""
+    links = move.new.links or move.old.links
     bw = min((l.bandwidth_mbps for l in links), default=100.0)
-    return state_mb * 8.0 / bw
+    return mbits / bw
 
 
 class InstantExecutor:
@@ -439,22 +541,36 @@ class InstantExecutor:
     live-migration planner and are *priced* on per-link serialization
     timelines without occupying simulated time.  Used by the synchronous
     `FleetScheduler` (`core.cluster`); the fleet runtime uses the
-    time-extended `MigrationExecutor`."""
+    time-extended `MigrationExecutor`.
 
-    def __init__(self, state_mb: float = 64.0):
+    Transfer sizes come from the same `ElasticBackend.transfer_mbits`
+    model the time-extended executor snapshots with, so the two executors
+    price identical copies identically."""
+
+    def __init__(self, state_mb: float = 64.0,
+                 backend: Optional[ElasticBackend] = None):
         self.state_mb = state_mb
+        self.backend = backend if backend is not None else (
+            SimulatedElasticBackend(default_state_mb=state_mb))
 
     def execute(self, engine: PlacementEngine, result: ReconfigResult) -> MigrationSchedule:
         if not result.accepted or not result.moves:
             return MigrationSchedule([], self.state_mb)
-        steps = plan_and_apply(engine, result.moves, state_mb=self.state_mb)
+        requests = {mv.req_id: engine.placed[mv.req_id].request
+                    for mv in result.moves}
+        mbits_by_req = {mv.req_id: self.backend.transfer_mbits(
+                            requests[mv.req_id], mv)
+                        for mv in result.moves}
+        steps = plan_and_apply(
+            engine, result.moves, state_mb=self.state_mb,
+            state_mb_by_req={r: m / 8.0 for r, m in mbits_by_req.items()})
         result.migration_steps.extend(steps)
         link_free: Dict[str, float] = {}   # link_id → earliest idle time
         items: List[ScheduledMigration] = []
         for step in steps:
             links = _transfer_links(step.move)
             start = max((link_free.get(l, 0.0) for l in links), default=0.0)
-            dur = _transfer_time(step, self.state_mb)
+            dur = _transfer_time(mbits_by_req[step.move.req_id], step.move)
             for l in links:
                 link_free[l] = start + dur
             items.append(ScheduledMigration(step, start, dur))

@@ -9,7 +9,11 @@ rate.  Accepted plans do NOT complete inside the tick: the
 `MigrationExecutor` ledger starts transfers that occupy fractional link
 bandwidth over ``[t, t+dur)``, emits `MigrationStart` / `MigrationComplete`
 events back into the queue, and holds source-side occupancy until the copy
-finishes (the double-booking window).  Arrivals, departures, rate swings
+finishes (the double-booking window).  Every transfer runs the elastic
+checkpoint → reshard → resume pipeline through the `fleet.elastic_bridge`
+backend seam (`RuntimeConfig.elastic_backend`), so transfer bytes and
+snapshot/restore phase times come from checkpoint state, not a flat
+constant.  Arrivals, departures, rate swings
 and node failures therefore *interleave* with in-flight moves — a flash
 crowd can land mid-reconfiguration, and a destination failure aborts and
 rolls back the transfers headed there.
@@ -62,6 +66,11 @@ class RuntimeConfig:
     # Bandwidth each active migration debits against admission control on
     # every link it crosses (0 = legacy unreserved transfers).
     migration_reserve_mbps: float = 2.0
+    # Elastic bridge backend executing every migration's checkpoint →
+    # reshard → resume pipeline (`fleet.elastic_bridge`).  None → a
+    # `SimulatedElasticBackend` whose no-declared-state fallback is the
+    # legacy flat `state_mb` model.
+    elastic_backend: Optional[object] = None
 
 
 class FleetRuntime:
@@ -80,6 +89,7 @@ class FleetRuntime:
         self.executor = MigrationExecutor(
             state_mb=self.config.state_mb,
             reserve_mbps=self.config.migration_reserve_mbps,
+            backend=self.config.elastic_backend,
         )
         self.now = 0.0
         self._since_reconfig = 0

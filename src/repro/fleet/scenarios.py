@@ -315,9 +315,17 @@ def flapping_node(seed: int = 0, n_arrivals: Optional[int] = None,
 
 
 def hetero_expansion(seed: int = 0, n_jobs: Optional[int] = None,
-                     scale: int = 1) -> ScenarioSpec:
+                     scale: int = 1,
+                     state_mb_per_chip: float = 48.0) -> ScenarioSpec:
     """TPU fleet: expensive pods serve first; cheap pods come online later.
-    ``scale`` replicates the 5-pod group (suffix ``-gN``) and the job mix."""
+    ``scale`` replicates the 5-pod group (suffix ``-gN``) and the job mix.
+
+    Jobs declare real migratable state — ``state_mb_per_chip`` MB of
+    checkpoint per chip (≈ a 2-byte/param model plus fp32 Adam moments
+    sharded across the slice) — so the elastic bridge derives each
+    migration's transfer bytes and snapshot/restore phase times from the
+    checkpoint instead of the flat executor default
+    (`fleet.elastic_bridge.SimulatedElasticBackend`)."""
     rng = np.random.default_rng(seed)
     n_jobs = 140 * scale if n_jobs is None else n_jobs
     pods: List[PodSpec] = []
@@ -342,7 +350,8 @@ def hetero_expansion(seed: int = 0, n_jobs: Optional[int] = None,
         job = JobSpec(i, f"arch{i % 5}", "train_4k", chips=32,
                       step_time_s=step,
                       step_slo_s=None if i % 2 else step * 3.0,
-                      budget_usd_month=float(rng.uniform(5e4, 3e5)) if i % 2 else None)
+                      budget_usd_month=float(rng.uniform(5e4, 3e5)) if i % 2 else None,
+                      state_mb=32 * state_mb_per_chip)
         events.append((t, AppArrival(job.request(), float(rng.exponential(900.0)))))
     horizon = t
     for k, pod in enumerate(spot_pods):              # expansion lands mid-run

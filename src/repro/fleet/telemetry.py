@@ -50,7 +50,16 @@ class PlanStats:
 
 @dataclasses.dataclass(frozen=True)
 class MigrationRecord:
-    """One finished/aborted/cancelled migration (executor ledger row)."""
+    """One finished/aborted/cancelled migration (executor ledger row).
+
+    Since the elastic bridge, every migration is a checkpoint → reshard →
+    resume pipeline and its phases are recorded: ``snapshot_s`` (host-side
+    state serialize), ``transfer_s`` (checkpoint bytes on the wire at the
+    fair-share link rate), ``restore_s`` (mesh rebuild + reshard-restore
+    at the destination).  ``downtime_s`` is the user-visible subset:
+    pre-copy pauses for one dirty-page round + the restore cutover;
+    stop-and-copy pauses for the whole pipeline.  Apps with no declared
+    state run the legacy flat model (zero host phases)."""
 
     req_id: int
     mode: str                      # "precopy" | "stop_and_copy"
@@ -58,6 +67,9 @@ class MigrationRecord:
     t_start: float
     t_end: float
     downtime_s: float
+    snapshot_s: float = 0.0        # elastic-bridge phase timings
+    transfer_s: float = 0.0
+    restore_s: float = 0.0
 
     @property
     def duration_s(self) -> float:
@@ -166,6 +178,20 @@ class Telemetry:
     def total_downtime_s(self) -> float:
         return sum(m.downtime_s for m in self.migrations)
 
+    # Elastic-bridge phase aggregates (zero when every app runs the flat
+    # no-declared-state fallback).
+    @property
+    def total_snapshot_s(self) -> float:
+        return sum(m.snapshot_s for m in self.migrations)
+
+    @property
+    def total_transfer_s(self) -> float:
+        return sum(m.transfer_s for m in self.migrations)
+
+    @property
+    def total_restore_s(self) -> float:
+        return sum(m.restore_s for m in self.migrations)
+
     def to_dict(self) -> Dict:
         rnd = lambda v: round(v, 9) if isinstance(v, float) else v
         return {
@@ -182,6 +208,9 @@ class Telemetry:
                 "total_moves": self.counters["moves"],
                 "mean_migration_duration_s": rnd(self.mean_migration_duration_s),
                 "total_downtime_s": rnd(self.total_downtime_s),
+                "total_snapshot_s": rnd(self.total_snapshot_s),
+                "total_transfer_s": rnd(self.total_transfer_s),
+                "total_restore_s": rnd(self.total_restore_s),
             },
             "ticks": [
                 {k: rnd(v) for k, v in dataclasses.asdict(t).items()}

@@ -28,10 +28,25 @@ from repro.train import Optimizer, state_shapes
 
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
-    shape: Tuple[int, ...]
-    axis_names: Tuple[str, ...]
+    """Device-mesh blueprint: an axis shape + axis names, *without* bound
+    devices.  A job's plan survives across migrations/rescales — `build`
+    binds it to whatever devices the new home offers, and
+    `resize_mesh_plan` re-derives the shape when the device count changes
+    (the `fleet.elastic_bridge` rebuilds per-job plans from moves this
+    way)."""
+
+    shape: Tuple[int, ...]          # e.g. (4, 2) = 4-way data × 2-way model
+    axis_names: Tuple[str, ...]     # e.g. ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        """Devices the plan occupies (product of the axis sizes)."""
+        return int(np.prod(self.shape))
 
     def build(self, devices=None) -> Mesh:
+        """Bind the plan to concrete devices (default: `jax.devices()`).
+        Raises when fewer than ``n_devices`` are available; extra devices
+        are left unused."""
         devices = devices if devices is not None else jax.devices()
         n = int(np.prod(self.shape))
         if len(devices) < n:
@@ -40,18 +55,28 @@ class MeshPlan:
         return Mesh(arr, self.axis_names)
 
 
-def degrade_mesh_plan(plan: MeshPlan, n_lost: int) -> MeshPlan:
-    """Largest same-axis-structure mesh after losing ``n_lost`` devices:
-    shrink the leading (data-parallel) axis; model-parallel axes keep their
-    size so parameter shardings stay valid."""
-    total = int(np.prod(plan.shape))
-    remaining = total - n_lost
-    lead = plan.shape[0]
-    inner = total // lead
-    new_lead = remaining // inner
+def resize_mesh_plan(plan: MeshPlan, n_devices: int) -> MeshPlan:
+    """Largest same-axis-structure mesh using at most ``n_devices``:
+    only the leading (data-parallel) axis is resized — model-parallel axes
+    keep their sizes so every parameter sharding built from the plan's rule
+    table stays valid, and the restore is a pure `jax.device_put` reshard.
+
+    Works both ways: shrink when a migration lands on a smaller slice
+    (hetero fleets, failures), grow when cheap capacity comes online
+    (the `hetero-expansion` scenario's spot pods)."""
+    inner = plan.n_devices // plan.shape[0]       # model-parallel block size
+    new_lead = int(n_devices) // inner
     if new_lead < 1:
-        raise ValueError("not enough devices for even one model replica")
+        raise ValueError(
+            f"not enough devices for even one model replica: have "
+            f"{n_devices}, need {inner} per replica")
     return MeshPlan((new_lead,) + plan.shape[1:], plan.axis_names)
+
+
+def degrade_mesh_plan(plan: MeshPlan, n_lost: int) -> MeshPlan:
+    """`resize_mesh_plan` phrased as a failure: the largest mesh after
+    losing ``n_lost`` of the plan's devices."""
+    return resize_mesh_plan(plan, plan.n_devices - n_lost)
 
 
 def reshard_restore(
@@ -61,8 +86,18 @@ def reshard_restore(
     new_mesh: Mesh,
     strategy: Optional[ShardingStrategy] = None,
 ) -> Tuple[Dict, int, ShardingStrategy]:
-    """Restore the latest checkpoint onto ``new_mesh`` (cross-mesh reshard).
-    Returns (state, next_step, strategy)."""
+    """Restore the latest committed checkpoint under ``ckpt_dir`` onto
+    ``new_mesh`` — the cross-mesh reshard at the heart of every live
+    migration and elastic rescale.
+
+    The target layout is derived, not stored: `state_shapes(cfg, optimizer)`
+    gives the abstract state tree, `state_specs` applies the SAME sharding
+    rule table to the *new* mesh, and `ckpt.restore` `jax.device_put`s each
+    leaf straight into that layout.  Returns ``(state, step, strategy)``
+    where ``step`` is the step recorded at save time — the caller resumes
+    its (re-jitted) train loop from there with the step-indexed data
+    pipeline, losing no progress.  Raises `FileNotFoundError` when no
+    committed checkpoint exists."""
     path = latest_checkpoint(ckpt_dir)
     if path is None:
         raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
@@ -93,6 +128,10 @@ class ElasticSupervisor:
         self.rescales: List[Tuple[int, Tuple[int, ...]]] = []
 
     def rescale(self, n_lost_devices: int):
+        """Shrink the job onto the surviving devices: degrade the mesh
+        plan, reshard-restore the latest checkpoint onto the new mesh, and
+        return ``(state, step, mesh, strategy)`` for the caller to rebuild
+        its jitted step function around."""
         new_plan = degrade_mesh_plan(self.mesh_plan, n_lost_devices)
         survivors = self.devices[: int(np.prod(new_plan.shape))]
         mesh = new_plan.build(survivors)
