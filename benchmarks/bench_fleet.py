@@ -42,17 +42,21 @@ SCALE_SWEEP_POLICIES = ("milp", "decomposed", "incremental", "horizon",
 
 def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
           scenario_kwargs: Optional[Dict] = None,
-          backend=None) -> Dict:
+          backend=None, slo=None, policy_kwargs: Optional[Dict] = None) -> Dict:
     """``backend`` overrides the scenario's elastic-bridge backend
     (`RuntimeConfig.elastic_backend`); None keeps the default simulated
-    backend.  The row records which backend executed the migrations."""
+    backend.  The row records which backend executed the migrations.
+    ``slo`` overrides the runtime's `SloConfig` (for cells that provoke
+    burn-rate breaches); ``policy_kwargs`` are forwarded to `get_policy`."""
     from repro.fleet import build_scenario, get_policy
 
     kwargs = dict(scenario_kwargs or {})
     spec = build_scenario(sc, seed=seed, **kwargs)
     if backend is not None:
         spec.config.elastic_backend = backend
-    runtime = spec.make_runtime(get_policy(pol))
+    if slo is not None:
+        spec.config.slo = slo
+    runtime = spec.make_runtime(get_policy(pol, **(policy_kwargs or {})))
     t0 = time.perf_counter()
     tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
     wall = time.perf_counter() - t0
@@ -79,6 +83,16 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
         **d["counters"],
         **d["summary"],
     }
+    # Deterministic percentile columns from the fixed-bucket metrics
+    # registry (repro.fleet.obs): satisfaction quantiles are simulated
+    # quantities, solver-latency quantiles are wall-clock profiling.
+    met = d["metrics"]
+    for col, metric in (("satisfaction", "tick/satisfaction"),
+                        ("solver_time_s", "solver/latency_s"),
+                        ("mig_downtime_s", "migration/downtime_s")):
+        snap = met.get(metric) or {}
+        for q in ("p50", "p90", "p99"):
+            row[f"{q}_{col}"] = snap.get(q)
     if with_ticks:
         row["ticks_series"] = d["ticks"]
         row["migrations_series"] = d["migrations"]
@@ -187,8 +201,12 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     on fingerprints between the simulated and flat backends (the
     no-declared-state fallback is the flat model), and the
     hetero-expansion cell must show nonzero byte-derived snapshot/restore
-    phase times."""
-    from repro.fleet import FlatStateBackend
+    phase times.  The SLO cell runs the adaptive ladder with a zero
+    latency budget (so it falls off the exact tier immediately) under an
+    unreachable satisfaction objective: CI asserts burn-rate breaches
+    fire AND pull the ladder back toward MILP (slo_escalations > 0) —
+    the observe → act loop end to end."""
+    from repro.fleet import FlatStateBackend, SloConfig
 
     return [
         _cell("paper-steady-state", "greedy", seed, with_ticks=False,
@@ -209,11 +227,19 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
               backend=FlatStateBackend(64.0)),
         # … and byte-derived phase timings on declared-state jobs.
         _cell("hetero-expansion", "greedy", seed, with_ticks=False),
+        # SLO observe→act: breaches must escalate the adaptive ladder.
+        _cell("site-outage", "adaptive", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 150},
+              policy_kwargs={"budget_s": 0.0},
+              slo=SloConfig(satisfaction_objective=1.0,
+                            satisfaction_budget_per_tick=0.01,
+                            cooldown_s=100.0)),
     ]
 
 
 def _fmt_ratio(v) -> str:
-    return f"{v:.4f}" if v is not None else "nan"
+    from repro.fleet.obs.metrics import fmt_ratio  # late: needs PYTHONPATH=src
+    return fmt_ratio(v)
 
 
 def run(seed: int = 0) -> List[str]:

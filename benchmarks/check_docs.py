@@ -27,6 +27,11 @@ from typing import Dict, Iterable, List, Set, Tuple
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CODE_DIRS = ("src", "tests", "benchmarks", "examples")
 
+#: Pages that must exist — auto-discovery alone would silently pass if a
+#: subsystem page were deleted along with its stale references.
+REQUIRED_DOCS = ("architecture.md", "elastic.md", "fleet.md",
+                 "observability.md", "planner.md")
+
 _IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
 _CAMEL = re.compile(r"^[A-Z][a-z0-9]+[A-Z]")         # e.g. MeshPlan
 _SPAN = re.compile(r"`([^`\n]+)`")
@@ -94,6 +99,12 @@ def main(argv: List[str]) -> int:
     docs = argv or sorted(
         os.path.join(ROOT, "docs", n)
         for n in os.listdir(os.path.join(ROOT, "docs")) if n.endswith(".md"))
+    if not argv:
+        missing = [n for n in REQUIRED_DOCS
+                   if not os.path.exists(os.path.join(ROOT, "docs", n))]
+        if missing:
+            print(f"required docs missing: {', '.join(missing)}")
+            return 1
     stale = check(docs)
     for doc, lineno, span, tok in stale:
         print(f"{doc}:{lineno}: `{span}` references unknown symbol '{tok}'")

@@ -10,9 +10,13 @@ Default mode prints ``name,key=value,...`` CSV rows for every section.
 ×2/×4/×8 solver-scaling sweep with 400×scale windows) and writes
 machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a CI
 sanity slice (request streams + adaptive policy, a backbone cut, the
-decomposed/incremental planners at ``--scale``, and the elastic-bridge
+decomposed/incremental planners at ``--scale``, the elastic-bridge
 cells: simulated-vs-flat fingerprint parity plus byte-derived phase
-timings on hetero-expansion) and exits non-zero on any failure.
+timings on hetero-expansion, an SLO burn-rate → policy-escalation cell,
+and a traced run validated against the Chrome trace_event schema) and
+exits non-zero on any failure.  ``--trace out.json`` runs one scenario
+with the dual-clock span tracer attached and writes a Perfetto-loadable
+trace (open in ui.perfetto.dev or chrome://tracing).
 """
 
 import argparse
@@ -22,7 +26,35 @@ import traceback
 
 
 def _ratio(v):
-    return f"{v:.4f}" if v is not None else "nan"
+    from repro.fleet.obs.metrics import fmt_ratio  # late: needs PYTHONPATH=src
+    return fmt_ratio(v)
+
+
+def _traced_run(scenario: str, policy: str, seed: int, **scenario_kwargs):
+    """One scenario run with the span tracer attached → (tracer, telemetry)."""
+    from repro.fleet import SpanTracer, build_scenario, get_policy
+
+    spec = build_scenario(scenario, seed=seed, **scenario_kwargs)
+    tracer = SpanTracer()
+    runtime = spec.make_runtime(get_policy(policy), tracer=tracer)
+    tel = runtime.run(spec.event_queue(), scenario=scenario, seed=seed)
+    return tracer, tel
+
+
+def run_trace(out_path: str, scenario: str, policy: str, seed: int) -> int:
+    from repro.fleet import validate_trace
+
+    tracer, tel = _traced_run(scenario, policy, seed)
+    n = tracer.write(out_path)
+    problems = validate_trace(tracer.to_dict())
+    print(f"wrote {out_path}: {n} trace events "
+          f"({scenario}/{policy}, {len(tel.ticks)} ticks, "
+          f"{tel.counters['migrations_completed']} migrations completed)")
+    for p in problems:
+        print(f"  INVALID: {p}")
+    if not problems:
+        print("  trace schema: OK — load in ui.perfetto.dev / chrome://tracing")
+    return 1 if problems else 0
 
 
 def run_json(out_path: str, seed: int) -> int:
@@ -114,6 +146,10 @@ def run_smoke(seed: int, scale: int) -> int:
             # phase times.
             ok = (ok and r["migrations_completed"] > 0
                   and r["total_snapshot_s"] > 0 and r["total_restore_s"] > 0)
+        if r["policy"] == "adaptive" and r["scenario"] == "site-outage":
+            # SLO observe→act gate: burn-rate breaches must fire AND pull
+            # the adaptive ladder back toward the exact tier.
+            ok = ok and r["slo_breaches"] > 0 and r["slo_escalations"] > 0
         bad |= 0 if ok else 1
         print(f"  {r['scenario']:28s} {r['policy']:11s} x{r['scale']:<2d} "
               f"backend={r['backend']:9s} "
@@ -124,11 +160,12 @@ def run_smoke(seed: int, scale: int) -> int:
               f"reused={r['regions_reused']} "
               f"phases={r['total_snapshot_s']:.2f}/"
               f"{r['total_transfer_s']:.2f}/{r['total_restore_s']:.2f}s "
+              f"slo={r['slo_breaches']}b/{r['slo_escalations']}e "
               f"[{'OK' if ok else 'FAIL'}]")
     # Elastic-bridge parity gate: the simulated backend's no-declared-state
     # fallback must be behavior-identical to the flat executor model.
     pair = {r["backend"]: r["fingerprint"] for r in rows
-            if r["scenario"] == "site-outage"}
+            if r["scenario"] == "site-outage" and r["policy"] == "greedy"}
     if len(pair) == 2:
         same = pair["simulated"] == pair["flat"]
         print(f"  bridge parity (site-outage simulated vs flat): "
@@ -137,6 +174,33 @@ def run_smoke(seed: int, scale: int) -> int:
     else:
         print("  bridge parity pair missing from smoke rows [FAIL]")
         bad |= 1
+    # Trace smoke: a traced run must export a schema-valid Chrome
+    # trace_event document with ≥1 tick-phase span and ≥1 migration whose
+    # snapshot/copy/restore phases nest inside it (validate_trace checks
+    # all of this), bit-identical in fingerprint to the untraced run.
+    from repro.fleet import validate_trace
+
+    from repro.fleet import build_scenario, get_policy
+
+    tracer, tel = _traced_run("site-outage", "incremental", seed,
+                              n_arrivals=150)
+    doc = tracer.to_dict()
+    problems = validate_trace(doc)
+    spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    n_tick = sum(1 for e in spans if e["name"] == "tick")
+    n_mig = sum(1 for e in spans if e["name"].startswith("migrate"))
+    spec = build_scenario("site-outage", seed=seed, n_arrivals=150)
+    plain = spec.make_runtime(get_policy("incremental")).run(
+        spec.event_queue(), scenario="site-outage", seed=seed)
+    neutral = tel.fingerprint() == plain.fingerprint()
+    ok = not problems and n_tick > 0 and n_mig > 0 and neutral
+    print(f"  trace smoke (site-outage/incremental): {len(spans)} spans, "
+          f"{n_tick} ticks, {n_mig} migrations, "
+          f"traced fp == untraced: {'OK' if neutral else 'FAIL'} "
+          f"[{'OK' if ok else 'FAIL'}]")
+    for p in problems:
+        print(f"    INVALID: {p}")
+    bad |= 0 if ok else 1
     return bad
 
 
@@ -173,7 +237,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=2,
                     help="topology scale for the --smoke decomposed cell")
+    ap.add_argument("--trace", metavar="OUT",
+                    help="run one traced scenario and write Chrome/Perfetto "
+                         "trace_event JSON to OUT")
+    ap.add_argument("--trace-scenario", default="site-outage",
+                    help="scenario for --trace (default: site-outage)")
+    ap.add_argument("--trace-policy", default="incremental",
+                    help="policy for --trace (default: incremental)")
     args = ap.parse_args()
+    if args.trace:
+        sys.exit(run_trace(args.trace, args.trace_scenario,
+                           args.trace_policy, args.seed))
     if args.smoke:
         sys.exit(run_smoke(args.seed, args.scale))
     sys.exit(run_json(args.out, args.seed) if args.json else run_csv(args.seed))

@@ -39,6 +39,7 @@ class LpResult:
     status: str            # "optimal" | "infeasible" | "unbounded" | "iteration_limit"
     x: Optional[np.ndarray]
     objective: float
+    iterations: int = 0    # simplex pivots + bound flips across both phases
 
     @property
     def ok(self) -> bool:
@@ -51,19 +52,20 @@ def _tableau_simplex(
     ub_all: np.ndarray,
     flipped: np.ndarray,
     max_iter: int,
-) -> str:
+) -> tuple:
     """In-place bounded-variable primal simplex on tableau ``T`` (last row =
     objective, last column = RHS).  ``ub_all`` holds every column's upper
     bound (inf when unbounded); ``flipped`` tracks the x ← u − x
     substitutions applied so far (updated in place).  All nonbasic columns
-    are at value 0 *in the flipped coordinates*.  Returns a status string."""
+    are at value 0 *in the flipped coordinates*.  Returns
+    ``(status, iterations)``."""
     m = T.shape[0] - 1
-    for _ in range(max_iter):
+    for it in range(max_iter):
         obj = T[-1, :-1]
         # Bland: entering = smallest index with negative reduced cost.
         neg = np.nonzero(obj < -_EPS)[0]
         if neg.size == 0:
-            return "optimal"
+            return "optimal", it
         col = int(neg[0])
         colv = T[:m, col]
         rhs = T[:m, -1]
@@ -81,7 +83,7 @@ def _tableau_simplex(
         t_row = np.minimum(t_low, t_up)
         row_min = float(t_row.min()) if m else np.inf
         if not np.isfinite(min(row_min, t_own)):
-            return "unbounded"
+            return "unbounded", it
         t_min = min(row_min, t_own)
         # Bland tie-break: smallest variable index among minimal ratios;
         # the entering variable's own bound counts with index ``col``.
@@ -116,7 +118,7 @@ def _tableau_simplex(
             T[:, -1] -= T[:, leave_col] * u
             T[:, leave_col] *= -1.0
             flipped[leave_col] = ~flipped[leave_col]
-    return "iteration_limit"
+    return "iteration_limit", max_iter
 
 
 def solve_lp(
@@ -189,17 +191,18 @@ def solve_lp(
             basis[i] = n + n_slack + j
         else:
             basis[i] = n + i  # its own slack
+    iters = 0
     if n_art:
         # Phase 1 objective: min sum of artificials.
         T[-1, n + n_slack:total] = 1.0
         for i in range(m):
             if need_art[i]:
                 T[-1] -= T[i]
-        status = _tableau_simplex(T, basis, ub_all, flipped, max_iter)
+        status, iters = _tableau_simplex(T, basis, ub_all, flipped, max_iter)
         if status != "optimal":
-            return LpResult(status, None, np.nan)
+            return LpResult(status, None, np.nan, iters)
         if T[-1, -1] < -1e-7:
-            return LpResult("infeasible", None, np.nan)
+            return LpResult("infeasible", None, np.nan, iters)
         # Drive artificials out of basis where possible.
         for i in range(m):
             if basis[i] >= n + n_slack:
@@ -230,9 +233,10 @@ def solve_lp(
     for i in range(m):
         if basis[i] < n + n_slack and abs(T[-1, basis[i]]) > _EPS:
             T[-1] -= T[-1, basis[i]] * T[i]
-    status = _tableau_simplex(T, basis, ub_all, flipped, max_iter)
+    status, it2 = _tableau_simplex(T, basis, ub_all, flipped, max_iter)
+    iters += it2
     if status != "optimal":
-        return LpResult(status, None, np.nan)
+        return LpResult(status, None, np.nan, iters)
     x = np.zeros(n + n_slack)
     for i in range(m):
         if basis[i] < n + n_slack:
@@ -240,4 +244,4 @@ def solve_lp(
     fl = flipped[:n + n_slack]
     x[fl] = ub_all[:n + n_slack][fl] - x[fl]
     xs = x[:n]
-    return LpResult("optimal", xs, float(c @ xs))
+    return LpResult("optimal", xs, float(c @ xs), iters)

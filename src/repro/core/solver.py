@@ -85,7 +85,8 @@ class MilpResult:
     x: Optional[np.ndarray]
     objective: float
     solve_time_s: float = 0.0
-    nodes_explored: int = 0
+    nodes_explored: int = 0     # B&B nodes (HiGHS: reported MIP node count)
+    lp_iterations: int = 0      # simplex pivots summed over B&B relaxations
     warm_start: Optional[str] = None   # "hit" | "miss" | None (no x0 given)
 
     @property
@@ -186,17 +187,18 @@ def _solve_highs(p: MilpProblem, time_limit_s: float,
         options={"time_limit": time_limit_s},
     )
     dt = time.perf_counter() - t0
+    nodes = int(getattr(res, "mip_node_count", 0) or 0)
     if res.status == 0:
-        return MilpResult("optimal", np.asarray(res.x), float(res.fun), dt)
+        return MilpResult("optimal", np.asarray(res.x), float(res.fun), dt, nodes)
     if res.status == 2:
-        return MilpResult("infeasible", None, np.nan, dt)
+        return MilpResult("infeasible", None, np.nan, dt, nodes)
     if res.status == 1:   # time limit — surface the best incumbent, if any
         if res.x is not None:
-            return MilpResult("feasible", np.asarray(res.x), float(res.fun), dt)
+            return MilpResult("feasible", np.asarray(res.x), float(res.fun), dt, nodes)
         if inc is not None:
-            return MilpResult("feasible", inc, float(c @ inc), dt)
-        return MilpResult("timeout", None, np.nan, dt)
-    return MilpResult(f"highs_status_{res.status}", None, np.nan, dt)
+            return MilpResult("feasible", inc, float(c @ inc), dt, nodes)
+        return MilpResult("timeout", None, np.nan, dt, nodes)
+    return MilpResult(f"highs_status_{res.status}", None, np.nan, dt, nodes)
 
 
 # ------------------------------------------------------- branch & bound ---
@@ -220,6 +222,7 @@ def _solve_bnb(p: MilpProblem, time_limit_s: float,
     best_x: Optional[np.ndarray] = inc.copy() if inc is not None else None
     best_obj = float(c @ inc) if inc is not None else np.inf
     nodes = 0
+    lp_iters = 0
     # Stack of (lb, ub) variable-bound overrides; lower bounds realized by
     # shifting is overkill here — we instead add bound rows per node.
     stack = [(np.zeros(n), base_ub.copy())]
@@ -239,6 +242,7 @@ def _solve_bnb(p: MilpProblem, time_limit_s: float,
             b_ub = np.concatenate([b_ub, -lb[nz]])
         res = solve_lp(c, A_ub, b_ub, A_eq, b_eq, ub=ub)
         nodes += 1
+        lp_iters += res.iterations
         if not res.ok or res.objective >= best_obj - 1e-9:
             continue
         x = res.x
@@ -270,7 +274,7 @@ def _solve_bnb(p: MilpProblem, time_limit_s: float,
     dt = time.perf_counter() - t0
     if best_x is None:
         return MilpResult("timeout" if timed_out else "infeasible",
-                          None, np.nan, dt, nodes)
+                          None, np.nan, dt, nodes, lp_iters)
     # Optimality is only proven when the search space was exhausted.
     return MilpResult("feasible" if timed_out else "optimal",
-                      best_x, best_obj, dt, nodes)
+                      best_x, best_obj, dt, nodes, lp_iters)

@@ -23,7 +23,12 @@ service over a changing fleet, with load-bearing simulated time).
               decomposed per-region MILPs + boundary arbitration,
               rolling-horizon forecasting, migration-aware move pricing
   telemetry — per-tick + per-migration time series, deterministic
-              fingerprints, NaN-safe satisfaction aggregation
+              fingerprints (one declared exclusion list), NaN-safe
+              satisfaction aggregation
+  obs       — observability subsystem: dual-clock span tracer (Perfetto
+              export), deterministic metrics registry (fingerprint-safe
+              percentiles), SLO burn-rate monitor feeding the policy
+              ladder — all behavior-neutral
 """
 
 from .events import (  # noqa: F401
@@ -58,6 +63,16 @@ from .executor import (  # noqa: F401
     MigrationSchedule,
     ScheduledMigration,
     Transfer,
+)
+from .obs import (  # noqa: F401
+    BurnRateDetector,
+    MetricsRegistry,
+    NullTracer,
+    SloBreach,
+    SloConfig,
+    SloMonitor,
+    SpanTracer,
+    validate_trace,
 )
 from .policies import (  # noqa: F401
     POLICIES,

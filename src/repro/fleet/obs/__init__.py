@@ -1,0 +1,49 @@
+"""Fleet observability subsystem: tracing, metrics, SLO monitoring.
+
+The paper's premise is reconfiguration *during operation*, and the
+foundational environment-adaptation loop includes an explicit
+operation-monitoring stage — this package is that stage for the fleet
+stack.  Three parts, all behavior-neutral (a run with observability
+attached is fingerprint-identical to one without):
+
+  trace   — dual-clock span tracer: simulated-time spans for fleet
+            semantics (migration snapshot → copy → restore phases, fleet
+            events), wall-clock spans for solver work (tick phases:
+            journal scan → region solves → boundary arbitration →
+            commit).  Exports Chrome/Perfetto ``trace_event`` JSON via
+            ``benchmarks/run.py --trace out.json``.
+  metrics — deterministic registry of counters / gauges / fixed-bucket
+            histograms, so p50/p90/p99 are reproducible run-to-run and
+            safe to fingerprint when their inputs are simulated (wall-
+            clock metric names are excluded by the telemetry layer).
+  slo     — rolling-window burn-rate detectors over the satisfaction and
+            migration-downtime SLOs; breaches land in telemetry as
+            `SloBreach` records and feed back into `AdaptivePolicy`'s
+            milp → incremental → greedy ladder (observe → act).
+"""
+
+from .metrics import (  # noqa: F401
+    DEFAULT_FRACTION_BUCKETS,
+    DEFAULT_LATENCY_BUCKETS_S,
+    DEFAULT_RATIO_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    fmt_ratio,
+    mean_or_none,
+    weighted_mean_or_none,
+)
+from .slo import (  # noqa: F401
+    BurnRateDetector,
+    SloBreach,
+    SloConfig,
+    SloMonitor,
+)
+from .trace import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    SpanTracer,
+    validate_trace,
+)

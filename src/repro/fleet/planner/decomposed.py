@@ -134,6 +134,8 @@ class DecomposedPolicy(ReconfigPolicy):
         # Whole-tick replay cache: (window, norm weights, result pieces,
         # plan stats).  Valid only while the journal stays empty.
         self._tick_cache: Optional[Tuple] = None
+        # Wall-clock spent assembling MILPs (CSR) in the current plan call.
+        self._build_s = 0.0
 
     # -------------------------------------------------------------- partition
     def partition_for(self, topo: Topology) -> Partition:
@@ -191,6 +193,7 @@ class DecomposedPolicy(ReconfigPolicy):
                 self.last_plan_stats = dataclasses.replace(
                     c_stats, n_regions=0, region_solve_s=[],
                     warm_start_hits=0, warm_start_misses=0, n_feasible=0,
+                    build_s=0.0, lp_iterations=0, bnb_nodes=0,
                     regions_reused=c_stats.regions_reused + c_stats.n_regions)
                 return ReconfigResult(
                     list(window), list(c_moves), list(c_sat),
@@ -199,8 +202,14 @@ class DecomposedPolicy(ReconfigPolicy):
         batch_ctx = self._window_costs(engine, window, norm)
         ctx, costv, movers = batch_ctx.ctx, batch_ctx.costv, batch_ctx.movers
         part = self.partition_for(engine.topo)
-        dirty = self._dirty_since(engine, part) if self.incremental else None
+        if self.incremental:
+            with self.tracer.span("journal_scan", cat="tick"):
+                dirty = self._dirty_since(engine, part)
+        else:
+            dirty = None
         self.last_dirty_regions = dirty
+        self._build_s = 0.0   # accumulated by _solve_region/_solve_batch
+        lp_iters = bnb_nodes = 0
 
         # One shared shadow ledger = live residual capacity (window apps
         # charged at their current homes — i.e. the engine's remaining
@@ -255,9 +264,14 @@ class DecomposedPolicy(ReconfigPolicy):
                     and self._replay(cached, ctx, idxs, assignment)):
                 reused += 1
             elif sequential:
-                res = self._solve_region(ctx, idxs, inputs, cached, assignment)
+                with self.tracer.span("region_solve", cat="tick",
+                                      args={"region": rid, "apps": len(idxs)}):
+                    res = self._solve_region(ctx, idxs, inputs, cached,
+                                             assignment)
                 region_solve_s.append(time.perf_counter() - rt0)
                 n_solved += 1
+                lp_iters += res.lp_iterations
+                bnb_nodes += res.nodes_explored
                 if res.warm_start == "hit":
                     hits += 1
                 elif res.warm_start == "miss":
@@ -274,9 +288,13 @@ class DecomposedPolicy(ReconfigPolicy):
 
         if batch:
             bt0 = time.perf_counter()
-            res = self._solve_batch(ctx, batch, assignment, shadow)
+            with self.tracer.span("region_solve", cat="tick",
+                                  args={"regions": len(batch)}):
+                res = self._solve_batch(ctx, batch, assignment, shadow)
             region_solve_s.append(time.perf_counter() - bt0)
             n_solved += len(batch)
+            lp_iters += res.lp_iterations
+            bnb_nodes += res.nodes_explored
             if res.warm_start == "hit":
                 hits += len(batch)
             elif res.warm_start == "miss":
@@ -293,7 +311,9 @@ class DecomposedPolicy(ReconfigPolicy):
         # optima — skip it.
         crossings = 0
         if self.coordinate and part.boundary_links:
-            crossings = self._coordinate(ctx, part, shadow, assignment, costv)
+            with self.tracer.span("arbitration", cat="tick"):
+                crossings = self._coordinate(ctx, part, shadow, assignment,
+                                             costv)
 
         self.last_plan_stats = PlanStats(
             n_regions=n_solved,
@@ -303,6 +323,9 @@ class DecomposedPolicy(ReconfigPolicy):
             warm_start_hits=hits,
             warm_start_misses=misses,
             n_feasible=n_feasible,
+            build_s=self._build_s,
+            lp_iterations=lp_iters,
+            bnb_nodes=bnb_nodes,
         )
         result = _result_from_batch(window, batch_ctx, assignment,
                                     self.accept_threshold, t0, norm)
@@ -484,7 +507,9 @@ class DecomposedPolicy(ReconfigPolicy):
             flat_idxs.extend(idxs)
             node_cap.update(inputs.node_cap)
             link_cap.update(inputs.link_cap)
+        bt = time.perf_counter()
         problem, index = build_joint_milp(app_vars, node_cap, link_cap)
+        self._build_s += time.perf_counter() - bt
         x0 = None
         if self.incremental:
             x0 = np.zeros(problem.n())
@@ -513,8 +538,10 @@ class DecomposedPolicy(ReconfigPolicy):
         """Solve one regional MILP (warm-started in incremental mode) and
         write the decoded choices into ``assignment``.  On solver failure
         the current assignment stands."""
+        bt = time.perf_counter()
         problem, index = build_joint_milp(inputs.app_vars, inputs.node_cap,
                                           inputs.link_cap)
+        self._build_s += time.perf_counter() - bt
         x0 = None
         if self.incremental:
             x0 = self._warm_start(problem.n(), ctx, idxs, inputs, cached,

@@ -54,6 +54,10 @@ class HorizonPolicy(ReconfigPolicy):
         self._curves = dict(curves) if curves else {}
         self.inner.observe(now=now, curves=curves, executor=executor)
 
+    def bind_tracer(self, tracer) -> None:
+        super().bind_tracer(tracer)
+        self.inner.bind_tracer(tracer)
+
     def plan(self, engine: PlacementEngine, window: Sequence[int],
              weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:
         realized = (dict(weights) if weights is not None

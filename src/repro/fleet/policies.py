@@ -50,6 +50,8 @@ from repro.core.placement import PlacedApp, PlacementEngine
 from repro.core.reconfig import ReconfigResult, Reconfigurator
 from repro.core.satisfaction import AppSatisfaction, normalize_weights
 
+from .obs.trace import NULL_TRACER
+
 
 # ------------------------------------------------------------------ helpers
 @dataclasses.dataclass(slots=True)
@@ -223,6 +225,14 @@ class ReconfigPolicy:
         # Planner-side tick detail (`telemetry.PlanStats`), set by the
         # decomposed / horizon planners; the runtime copies it onto the tick.
         self.last_plan_stats = None
+        # Span tracer (`obs.trace`); the runtime binds its own via
+        # `bind_tracer`.  Strictly observational — never gates a branch.
+        self.tracer = NULL_TRACER
+
+    def bind_tracer(self, tracer) -> None:
+        """Attach a span tracer.  Wrapper policies forward to their inner
+        policies so planner-internal phases land on the same timeline."""
+        self.tracer = tracer
 
     def observe(self, now: float = 0.0, curves: Optional[Mapping] = None,
                 executor=None) -> None:
@@ -378,12 +388,15 @@ class MilpPolicy(ReconfigPolicy):
             cost_model=self.cost_model,
         )
         res = recon.plan(window, weights=weights)
-        # Surface proven-vs-incumbent solver quality: a "feasible" status
-        # means the deadline expired before optimality was proven.
-        from .telemetry import PlanStats  # late: telemetry imports nothing here
+        # Surface proven-vs-incumbent solver quality (a "feasible" status
+        # means the deadline expired before optimality was proven) plus the
+        # solver's work counters.
+        from .telemetry import PlanStats  # late: avoids an import cycle
+        sol = res.solver
         self.last_plan_stats = PlanStats(
-            n_feasible=int(res.solver is not None
-                           and res.solver.status == "feasible"))
+            n_feasible=int(sol is not None and sol.status == "feasible"),
+            lp_iterations=sol.lp_iterations if sol is not None else 0,
+            bnb_nodes=sol.nodes_explored if sol is not None else 0)
         return res
 
 
@@ -583,6 +596,24 @@ class AdaptivePolicy(ReconfigPolicy):
                 executor=None) -> None:
         for tier in self.tiers:
             tier.observe(now=now, curves=curves, executor=executor)
+
+    def bind_tracer(self, tracer) -> None:
+        super().bind_tracer(tracer)
+        for tier in self.tiers:
+            tier.bind_tracer(tracer)
+
+    def on_slo_breach(self, breach) -> bool:
+        """Observe → act: an SLO burn-rate breach (`obs.slo.SloBreach`)
+        pulls the governor one tier back toward the exact solver — the
+        fleet is hurting, so plan *better*, even if slower.  The rolling
+        latency window is cleared so stale cheap-tier timings don't
+        immediately re-escalate.  Returns True when a switch happened."""
+        if self.level == 0:
+            return False
+        self.level -= 1
+        self.switches += 1
+        self._times.clear()
+        return True
 
     def plan(self, engine: PlacementEngine, window: Sequence[int],
              weights: Optional[Mapping[int, float]] = None) -> ReconfigResult:

@@ -51,6 +51,14 @@ from .events import (
     RequestRateUpdate,
 )
 from .executor import MigrationExecutor
+from .obs.metrics import (
+    DEFAULT_FRACTION_BUCKETS,
+    DEFAULT_LATENCY_BUCKETS_S,
+    DEFAULT_RATIO_BUCKETS,
+    MetricsRegistry,
+)
+from .obs.slo import SloConfig, SloMonitor
+from .obs.trace import NULL_TRACER
 from .policies import ReconfigPolicy
 from .telemetry import Telemetry, TickRecord
 
@@ -71,6 +79,10 @@ class RuntimeConfig:
     # `SimulatedElasticBackend` whose no-declared-state fallback is the
     # legacy flat `state_mb` model.
     elastic_backend: Optional[object] = None
+    # SLO objectives/budgets for the burn-rate monitor (`fleet.obs.slo`).
+    # None → the default `SloConfig` (calibrated to stay quiet on healthy
+    # runs and burn on sustained degradation).
+    slo: Optional[SloConfig] = None
 
 
 class FleetRuntime:
@@ -82,6 +94,7 @@ class FleetRuntime:
         policy: ReconfigPolicy,
         config: Optional[RuntimeConfig] = None,
         all_sites: bool = False,
+        tracer=None,
     ) -> None:
         self.engine = PlacementEngine(topo, all_sites=all_sites)
         self.policy = policy
@@ -98,6 +111,19 @@ class FleetRuntime:
         # currently admitted at (1.0 for apps without a curve).
         self._curves: Dict[int, RateCurve] = {}
         self._rates: Dict[int, float] = {}
+        # Observability (`fleet.obs`): the span tracer is strictly additive
+        # (behavior-neutral — fingerprints are bit-identical with it on or
+        # off); metrics and the SLO monitor are always on and deterministic.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        bind = getattr(policy, "bind_tracer", None)
+        if bind is not None:
+            bind(self.tracer)
+        self.metrics = MetricsRegistry()
+        self.slo = SloMonitor(self.config.slo)
+        # Cursor into the executor's append-only migration ledger: records
+        # past it are new since the last drain (tracing the executor from
+        # outside keeps the reservation ledger observability-free).
+        self._rec_cursor = 0
 
     # ------------------------------------------------------------------ run
     def run(self, events: EventQueue, scenario: str = "", seed: int = 0) -> Telemetry:
@@ -105,9 +131,14 @@ class FleetRuntime:
         self._events = events
         while events:
             self.now, ev = events.pop()
+            if self.tracer.enabled:
+                self.tracer.instant(_event_label(ev), self.now, cat="event")
             self._dispatch(ev, events, tel)
+            self._drain_records(tel)
+        self._drain_records(tel)
         tel.counters["migrations_dropped"] = self.executor.moves_dropped
         tel.migrations = list(self.executor.records)
+        tel.metrics = self.metrics.snapshot()
         return tel
 
     def _dispatch(self, ev: Event, events: EventQueue, tel: Telemetry) -> None:
@@ -310,6 +341,13 @@ class FleetRuntime:
         window = self.engine.recent_stable(self.config.window)
         if not window:
             return
+        with self.tracer.span("tick", cat="tick",
+                              args={"trigger": trigger, "t_sim": self.now,
+                                    "window": len(window)}):
+            self._tick_body(trigger, tel, events, window)
+
+    def _tick_body(self, trigger: str, tel: Telemetry, events: EventQueue,
+                   window) -> None:
         weights = {r: self._rates.get(r, 1.0) for r in window}
         observe = getattr(self.policy, "observe", None)
         if observe is not None:
@@ -317,14 +355,25 @@ class FleetRuntime:
             # and rate curves (rolling-horizon forecasts) and the executor
             # ledger (migration-aware move pricing).
             observe(now=self.now, curves=self._curves, executor=self.executor)
-        res = self.policy.plan(self.engine, window, weights=weights)
+        # The "plan" span wraps the whole policy call; the planner emits its
+        # own child spans (journal_scan / region_solve / arbitration).
+        with self.tracer.span("plan", cat="tick"):
+            res = self.policy.plan(self.engine, window, weights=weights)
         stats = getattr(self.policy, "last_plan_stats", None)
         n_started = 0
-        if res.accepted and res.moves:
-            n_started = self.executor.begin(self.engine, res, self.now, events)
-            tel.counters["moves"] += res.n_moved
+        with self.tracer.span("commit", cat="tick",
+                              args={"accepted": res.accepted,
+                                    "moves": len(res.moves)}):
+            if res.accepted and res.moves:
+                n_started = self.executor.begin(self.engine, res, self.now,
+                                                events)
+                tel.counters["moves"] += res.n_moved
         util, util_max = self._utilization()
-        tel.ticks.append(TickRecord(
+        # Post-tick fleet satisfaction (weighted mean X+Y over the window):
+        # the planned value when the plan was accepted, else the do-nothing
+        # baseline 2.0 — simulated, deterministic, and the SLO input.
+        mean_sat = res.s_after / len(window) if res.accepted else 2.0
+        rec = TickRecord(
             t=self.now,
             trigger=trigger,
             n_alive=len(self.engine.placed),
@@ -348,9 +397,119 @@ class FleetRuntime:
             regions_reused=stats.regions_reused if stats else 0,
             warm_start_hits=stats.warm_start_hits if stats else 0,
             n_feasible=stats.n_feasible if stats else 0,
-        ))
+            mean_satisfaction=mean_sat,
+            build_s=stats.build_s if stats else 0.0,
+            lp_iterations=stats.lp_iterations if stats else 0,
+            bnb_nodes=stats.bnb_nodes if stats else 0,
+        )
+        tel.ticks.append(rec)
+        self._observe_tick_metrics(rec, stats)
+        for breach in self.slo.observe_tick(self.now, mean_sat):
+            self._on_breach(breach, tel)
         if self.config.check_invariants and not self.engine.occupancy_invariants_ok():
             raise AssertionError("occupancy invariants violated after tick")
+
+    # -------------------------------------------------------- observability
+    def _observe_tick_metrics(self, rec: TickRecord, stats) -> None:
+        m = self.metrics
+        m.counter("tick/count").inc()
+        m.counter("tick/accepted").inc(int(rec.accepted))
+        m.histogram("tick/satisfaction",
+                    DEFAULT_RATIO_BUCKETS).observe(rec.mean_satisfaction)
+        m.histogram("tick/moved_ratio",
+                    DEFAULT_FRACTION_BUCKETS).observe(rec.moved_ratio)
+        m.histogram("node/utilization",
+                    DEFAULT_FRACTION_BUCKETS).observe(rec.utilization)
+        m.histogram("solver/latency_s",
+                    DEFAULT_LATENCY_BUCKETS_S).observe(rec.solver_time_s)
+        # Per-link utilization (reservations included) + contention: links
+        # running above 90% of their bandwidth this tick.
+        link_hist = m.histogram("link/utilization", DEFAULT_FRACTION_BUCKETS)
+        contended = 0
+        for lid, link in self.engine.topo.links.items():
+            cap = link.bandwidth_mbps
+            if cap <= 0.0:
+                continue
+            u = 1.0 - self.engine.link_remaining(lid) / cap
+            link_hist.observe(u)
+            if u > 0.9:
+                contended += 1
+        m.counter("link/contended").inc(contended)
+        if stats is not None:
+            m.counter("planner/regions_solved").inc(stats.n_regions)
+            m.counter("planner/regions_reused").inc(stats.regions_reused)
+            m.counter("planner/warm_start_hits").inc(stats.warm_start_hits)
+            m.counter("planner/warm_start_misses").inc(stats.warm_start_misses)
+            m.counter("solver/lp_iterations").inc(stats.lp_iterations)
+            m.counter("solver/bnb_nodes").inc(stats.bnb_nodes)
+            m.histogram("planner/build_s",
+                        DEFAULT_LATENCY_BUCKETS_S).observe(stats.build_s)
+
+    def _drain_records(self, tel: Telemetry) -> None:
+        """Consume executor ledger rows appended since the last drain:
+        migration metrics + sim-time trace spans + the downtime SLO.  The
+        phases of one transfer are sequential (snapshot → copy → restore),
+        so their sim-time intervals reconstruct exactly from the record."""
+        records = self.executor.records
+        while self._rec_cursor < len(records):
+            i = self._rec_cursor
+            rec = records[i]
+            self._rec_cursor += 1
+            m = self.metrics
+            m.counter(f"migration/{rec.outcome}").inc()
+            m.histogram("migration/downtime_s",
+                        DEFAULT_LATENCY_BUCKETS_S).observe(rec.downtime_s)
+            if rec.outcome == "completed":
+                m.histogram("migration/duration_s",
+                            DEFAULT_LATENCY_BUCKETS_S).observe(rec.duration_s)
+            if self.tracer.enabled:
+                track = f"mig {i}: app {rec.req_id}"
+                snap_end = min(rec.t_start + rec.snapshot_s, rec.t_end)
+                restore_start = max(rec.t_end - rec.restore_s, snap_end)
+                self.tracer.add_span(
+                    f"migrate #{rec.req_id}", "migration", track,
+                    rec.t_start, rec.t_end,
+                    args={"mode": rec.mode, "outcome": rec.outcome,
+                          "downtime_s": rec.downtime_s})
+                self.tracer.add_span("snapshot", "migration", track,
+                                     rec.t_start, snap_end)
+                self.tracer.add_span("copy", "migration", track,
+                                     snap_end, restore_start)
+                self.tracer.add_span("restore", "migration", track,
+                                     restore_start, rec.t_end)
+            for breach in self.slo.observe_migration(rec.t_end,
+                                                     rec.downtime_s):
+                self._on_breach(breach, tel)
+
+    def _on_breach(self, breach, tel: Telemetry) -> None:
+        """Record an SLO breach and forward it to the policy's
+        ``on_slo_breach`` hook (observe → act: `AdaptivePolicy` escalates
+        one tier toward the exact solver)."""
+        tel.slo_breaches.append(breach)
+        tel.counters["slo_breaches"] += 1
+        self.metrics.counter(f"slo/{breach.slo}_breaches").inc()
+        if self.tracer.enabled:
+            self.tracer.instant(f"SloBreach:{breach.slo}", breach.t,
+                                cat="slo",
+                                args={"burn_rate": round(breach.burn_rate, 3)})
+        hook = getattr(self.policy, "on_slo_breach", None)
+        if hook is not None and hook(breach):
+            tel.counters["slo_escalations"] += 1
+            self.metrics.counter("slo/escalations").inc()
+
+
+def _event_label(ev: Event) -> str:
+    """Trace-instant label for a fleet event (req/node/link id when the
+    event carries one)."""
+    name = type(ev).__name__
+    for attr in ("req_id", "node_id", "link_id"):
+        v = getattr(ev, attr, None)
+        if v is not None:
+            return f"{name} {v}"
+    req = getattr(ev, "request", None)
+    if req is not None:
+        return f"{name} {req.req_id}"
+    return name
 
 
 def _scaled_request(req: PlacementRequest, scale: float) -> PlacementRequest:

@@ -67,9 +67,10 @@ class ScenarioSpec:
     def event_queue(self) -> EventQueue:
         return EventQueue(self.events)
 
-    def make_runtime(self, policy: ReconfigPolicy) -> FleetRuntime:
+    def make_runtime(self, policy: ReconfigPolicy,
+                     tracer=None) -> FleetRuntime:
         return FleetRuntime(self.topo, policy, config=self.config,
-                            all_sites=self.all_sites)
+                            all_sites=self.all_sites, tracer=tracer)
 
 
 def _poisson_arrivals(

@@ -11,8 +11,14 @@ On rejected ticks nothing moved, so there is no moved-app satisfaction to
 report: those fields are ``None`` (JSON null) and every aggregate skips
 them — no magic sentinel leaking into benchmark means.
 
-`Telemetry.fingerprint()` hashes the canonical JSON minus wall-clock solver
-latency — the determinism tests assert fixed seed → identical fingerprint.
+`Telemetry.fingerprint()` hashes the canonical JSON minus everything
+wall-clock or work-accounting — the exclusion list is *declared*, not
+ad-hoc: every `TickRecord` field is classified into exactly one of
+`FINGERPRINTED_TICK_FIELDS` / `WALL_CLOCK_TICK_FIELDS` /
+`WORK_ACCOUNTING_TICK_FIELDS` (a regression test asserts the partition is
+total), so a new observability field cannot silently break the
+determinism contract.  The determinism tests assert fixed seed →
+identical fingerprint.
 """
 
 from __future__ import annotations
@@ -21,6 +27,8 @@ import dataclasses
 import hashlib
 import json
 from typing import Dict, List, Optional
+
+from .obs.metrics import mean_or_none, weighted_mean_or_none
 
 
 @dataclasses.dataclass
@@ -42,6 +50,12 @@ class PlanStats:
     warm_start_hits: int = 0
     warm_start_misses: int = 0
     n_feasible: int = 0
+    # Hot-path profiling (wall clock / solver work — never fingerprinted):
+    # CSR assembly time across the tick's `build_joint_milp` calls, simplex
+    # pivots summed over every LP relaxation, and B&B nodes explored.
+    build_s: float = 0.0
+    lp_iterations: int = 0
+    bnb_nodes: int = 0
 
     @property
     def region_solve_max_s(self) -> float:
@@ -102,6 +116,14 @@ class TickRecord:
     regions_reused: int = 0
     warm_start_hits: int = 0
     n_feasible: int = 0                     # deadline incumbents; not fingerprinted
+    # Post-tick fleet satisfaction: weighted mean X+Y over the window after
+    # the tick (2.0 = do-nothing baseline; stays 2.0 on rejected ticks).
+    # Simulated quantity → fingerprinted, and the SLO monitor's input.
+    mean_satisfaction: Optional[float] = None
+    # Planner hot-path profiling (wall clock / solver work; see PlanStats).
+    build_s: float = 0.0
+    lp_iterations: int = 0
+    bnb_nodes: int = 0
 
     @property
     def moved_ratio(self) -> float:
@@ -109,8 +131,39 @@ class TickRecord:
         return self.n_moved / self.window if self.window else 0.0
 
 
-def _mean(values: List[float]) -> Optional[float]:
-    return sum(values) / len(values) if values else None
+# --------------------------------------------------------------- fingerprint
+# The fingerprint partition, declared in ONE place.  Every TickRecord field
+# is classified below (tests/test_observability.py asserts the partition is
+# total and disjoint), so adding an observability field forces an explicit
+# decision instead of silently entering — or leaking out of — the
+# determinism contract.
+
+#: Wall-clock durations: vary run-to-run on the same inputs.
+WALL_CLOCK_TICK_FIELDS = frozenset({
+    "solver_time_s", "region_solve_max_s", "build_s",
+})
+
+#: Planner work accounting: *how* the answer was obtained (regions solved
+#: vs reused, warm starts, deadline incumbents, solver effort) — excluded
+#: so incremental≡decomposed parity can hold despite different work.
+WORK_ACCOUNTING_TICK_FIELDS = frozenset({
+    "n_regions", "regions_reused", "warm_start_hits", "n_feasible",
+    "lp_iterations", "bnb_nodes",
+})
+
+UNFINGERPRINTED_TICK_FIELDS = WALL_CLOCK_TICK_FIELDS | WORK_ACCOUNTING_TICK_FIELDS
+
+#: Everything else on a TickRecord IS the behavior and is hashed.
+FINGERPRINTED_TICK_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(TickRecord)
+) - UNFINGERPRINTED_TICK_FIELDS
+
+#: Summary keys dropped from the fingerprint (derived from wall clock).
+UNFINGERPRINTED_SUMMARY_FIELDS = frozenset({"mean_solver_time_s"})
+
+#: Metric namespaces (see `obs.metrics.MetricsRegistry`) whose snapshots
+#: are wall-clock- or work-derived and therefore dropped wholesale.
+WALL_CLOCK_METRIC_PREFIXES = ("solver/", "planner/")
 
 
 @dataclasses.dataclass
@@ -120,6 +173,13 @@ class Telemetry:
     seed: int
     ticks: List[TickRecord] = dataclasses.field(default_factory=list)
     migrations: List[MigrationRecord] = dataclasses.field(default_factory=list)
+    # SLO burn-rate breaches (`obs.slo.SloBreach`) in emission order.
+    # Deterministic — they derive from simulated quantities only — so they
+    # are fingerprinted like any other behavior.
+    slo_breaches: List = dataclasses.field(default_factory=list)
+    # `obs.metrics.MetricsRegistry.snapshot()` attached by the runtime at
+    # the end of the run (empty when run outside a FleetRuntime).
+    metrics: Dict = dataclasses.field(default_factory=dict)
     counters: Dict[str, int] = dataclasses.field(default_factory=lambda: {
         "arrivals": 0, "admitted": 0, "rejected": 0, "departures": 0,
         "drifts": 0, "drift_evicted": 0, "failures": 0, "recoveries": 0,
@@ -136,6 +196,9 @@ class Telemetry:
         # link-cut failures (backbone/uplink outages)
         "link_failures": 0, "link_recoveries": 0,
         "linkfail_moved": 0, "linkfail_lost": 0,
+        # SLO monitoring (obs.slo): budget-exhaustion events and how many
+        # of them the policy acted on (AdaptivePolicy tier escalations)
+        "slo_breaches": 0, "slo_escalations": 0,
     })
 
     # ------------------------------------------------------------ summaries
@@ -143,21 +206,13 @@ class Telemetry:
     def mean_moved_ratio(self) -> Optional[float]:
         """Move-weighted mean X+Y over all ticks (the fig. 5(b) aggregate);
         None when the whole run never moved an app."""
-        pairs = [(t.n_moved, t.mean_moved_ratio) for t in self.ticks
-                 if t.n_moved and t.mean_moved_ratio is not None]
-        n = sum(p[0] for p in pairs)
-        if not n:
-            return None
-        return sum(k * r for k, r in pairs) / n
+        return weighted_mean_or_none(
+            (t.n_moved, t.mean_moved_ratio) for t in self.ticks)
 
     @property
     def mean_moved_ratio_weighted(self) -> Optional[float]:
-        pairs = [(t.n_moved, t.mean_moved_ratio_weighted) for t in self.ticks
-                 if t.n_moved and t.mean_moved_ratio_weighted is not None]
-        n = sum(p[0] for p in pairs)
-        if not n:
-            return None
-        return sum(k * r for k, r in pairs) / n
+        return weighted_mean_or_none(
+            (t.n_moved, t.mean_moved_ratio_weighted) for t in self.ticks)
 
     @property
     def mean_solver_time_s(self) -> float:
@@ -171,8 +226,8 @@ class Telemetry:
 
     @property
     def mean_migration_duration_s(self) -> Optional[float]:
-        return _mean([m.duration_s for m in self.migrations
-                      if m.outcome == "completed"])
+        return mean_or_none(m.duration_s for m in self.migrations
+                            if m.outcome == "completed")
 
     @property
     def total_downtime_s(self) -> float:
@@ -220,26 +275,29 @@ class Telemetry:
                 {k: rnd(v) for k, v in dataclasses.asdict(m).items()}
                 for m in self.migrations
             ],
+            "slo_breaches": [b.to_dict() for b in self.slo_breaches],
+            "metrics": dict(self.metrics),
         }
 
     def fingerprint(self) -> str:
         """Stable digest of the run's *behavior*: what was placed, moved,
-        and reported — excluding wall-clock solver latency, deadline
-        incumbents (timeout-dependent) and the planner's internal work
-        accounting (how many regions were solved vs reused, warm-start
-        hits).  Excluding the policy label and the work accounting is what
-        lets the incremental planner assert byte-identical behavior against
-        the full decomposed planner."""
+        and reported — excluding everything in the declared exclusion sets
+        above: wall-clock durations, deadline incumbents
+        (timeout-dependent), the planner's internal work accounting (how
+        many regions were solved vs reused, warm-start hits, solver
+        effort), and the wall-clock metric namespaces.  Excluding the
+        policy label and the work accounting is what lets the incremental
+        planner assert byte-identical behavior against the full decomposed
+        planner."""
         d = self.to_dict()
         d.pop("policy", None)
-        d["summary"].pop("mean_solver_time_s", None)
+        for key in UNFINGERPRINTED_SUMMARY_FIELDS:
+            d["summary"].pop(key, None)
         for t in d["ticks"]:
-            t.pop("solver_time_s", None)
-            t.pop("region_solve_max_s", None)
-            t.pop("n_regions", None)
-            t.pop("regions_reused", None)
-            t.pop("warm_start_hits", None)
-            t.pop("n_feasible", None)
+            for key in UNFINGERPRINTED_TICK_FIELDS:
+                t.pop(key, None)
+        d["metrics"] = {k: v for k, v in d["metrics"].items()
+                        if not k.startswith(WALL_CLOCK_METRIC_PREFIXES)}
         return hashlib.sha256(
             json.dumps(d, sort_keys=True).encode()
         ).hexdigest()
