@@ -18,6 +18,10 @@ crossings, per-region solve latency).
 400×scale (the ROADMAP window sweep) — the rows record where the
 monolithic MILP's tick latency climbs over the adaptive solver budget
 while the decomposed planner's stays flat (the solver-latency cliff).
+The driver extends it with a ×32 planetary slice (incremental /
+hierarchical / greedy only) and ``planetary_rows()`` pushes the
+steady-tick microbench to ×64/×256 fleets with a >100k-app window under
+the hierarchical planner.
 
 ``run()`` prints the CSV rows for `benchmarks.run`; ``sweep()`` returns
 machine-readable dict rows for ``benchmarks.run --json`` → BENCH_fleet.json.
@@ -29,7 +33,7 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 DEFAULT_POLICIES = ("milp", "greedy", "hillclimb", "ga", "adaptive",
-                    "decomposed", "incremental", "horizon")
+                    "decomposed", "incremental", "hierarchical", "horizon")
 
 #: The cliff sweep: cheaper policy set (no GA — its cost is orthogonal to
 #: topology scale) over the scenarios that exercise steady churn and the
@@ -139,14 +143,22 @@ def scale_sweep(
 
 
 def steady_tick_rows(scales: Sequence[int] = (2, 4),
-                     seed: int = 0, n_ticks: int = 5) -> List[Dict]:
+                     seed: int = 0, n_ticks: int = 5,
+                     policies: Sequence[str] = ("decomposed", "incremental"),
+                     apps_factor: int = 625,
+                     window_factor: int = 400) -> List[Dict]:
     """Steady-state tick cost microbench: the paper's relocation loop
     re-solves *periodically regardless of churn*, so the cost of a tick in
     a quiet period — no arrivals/departures/drifts since the last plan —
     is a first-class quantity.  The full decomposed planner pays its whole
     solve chain every time; the incremental planner's change journal sees
-    no dirty regions and replays every cached plan.  One row per
-    (scale, policy) with the first (cold) tick split out."""
+    no dirty regions and replays every cached plan; the hierarchical
+    planner does the same over its region tree (on ≥4000-node fleets).
+    One row per (scale, policy) with the first (cold) tick split out and
+    a deterministic steady-tick p50; all policies in one cell must agree
+    on the plan (the parity assertion)."""
+    import statistics
+
     import numpy as np
 
     from repro.core import PlacementEngine, build_paper_topology, sample_requests
@@ -157,12 +169,12 @@ def steady_tick_rows(scales: Sequence[int] = (2, 4),
         topo = build_paper_topology(scale=scale)
         engine = PlacementEngine(topo)
         rng = np.random.default_rng(seed)
-        for r in sample_requests(topo, 625 * scale, rng):
+        for r in sample_requests(topo, apps_factor * scale, rng):
             engine.place(r)
-        window = engine.recent(400 * scale)
+        window = engine.recent(window_factor * scale)
         weights = {r: 1.0 for r in window}
         base = None
-        for pol in ("decomposed", "incremental"):
+        for pol in policies:
             p = get_policy(pol)
             times, res = [], None
             for _ in range(n_ticks):
@@ -175,19 +187,37 @@ def steady_tick_rows(scales: Sequence[int] = (2, 4),
             if base is None:
                 base = key
             assert key == base, "steady-tick parity violated"
+            steady = times[1:] or times
             rows.append({
                 "benchmark": "steady_tick",
                 "scenario": "steady-tick",
                 "policy": pol,
                 "scale": scale,
+                "apps": len(engine.placed),
                 "window": len(window),
                 "first_tick_s": round(times[0], 6),
-                "mean_steady_tick_s": round(
-                    sum(times[1:]) / max(len(times) - 1, 1), 6),
+                "mean_steady_tick_s": round(sum(steady) / len(steady), 6),
+                "p50_steady_tick_s": round(statistics.median(steady), 6),
                 "regions_solved_last": stats.n_regions,
                 "regions_reused_last": stats.regions_reused,
                 "warm_start_hits_last": stats.warm_start_hits,
             })
+    return rows
+
+
+def planetary_rows(seed: int = 0, n_ticks: int = 5) -> List[Dict]:
+    """Planetary-scale steady-tick rows: ×64 (incremental vs hierarchical)
+    and ×256 under the hierarchical planner only, with the per-scale app
+    count tuned so the ×256 window holds >100k apps (440·256 = 112 640
+    placements, window 400·256 = 102 400).  These are the fleets the
+    region-of-regions tree exists for — the flat policies are left out of
+    the ×256 cell by design (one global coordination sweep at that size is
+    exactly the cost the hierarchy removes)."""
+    rows = steady_tick_rows((64,), seed=seed, n_ticks=n_ticks,
+                            policies=("incremental", "hierarchical"),
+                            apps_factor=440)
+    rows += steady_tick_rows((256,), seed=seed, n_ticks=n_ticks,
+                             policies=("hierarchical",), apps_factor=440)
     return rows
 
 
@@ -205,9 +235,17 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     latency budget (so it falls off the exact tier immediately) under an
     unreachable satisfaction objective: CI asserts burn-rate breaches
     fire AND pull the ladder back toward MILP (slo_escalations > 0) —
-    the observe → act loop end to end."""
+    the observe → act loop end to end.  At ``scale`` ≥ 16 (where the
+    paper topology crosses `HierarchicalPolicy`'s 4000-node activation
+    gate) a hierarchical cell rides along; the driver gates its
+    fingerprint against the incremental cell's and budgets the ×scale
+    steady tick."""
     from repro.fleet import FlatStateBackend, SloConfig
 
+    hierarchy = [] if scale < 16 else [
+        _cell("paper-steady-state", "hierarchical", seed, with_ticks=False,
+              scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
+    ]
     return [
         _cell("paper-steady-state", "greedy", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 250}),
@@ -219,6 +257,7 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
               scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
         _cell("paper-steady-state", "incremental", seed, with_ticks=False,
               scenario_kwargs={"scale": scale, "n_arrivals": 250 * scale}),
+        *hierarchy,
         # Elastic-bridge smoke: simulated-vs-flat parity on site-outage …
         _cell("site-outage", "greedy", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 150}),

@@ -6,15 +6,18 @@
   bench_kernels  — Pallas kernels (interpret) vs jnp refs
 
 Default mode prints ``name,key=value,...`` CSV rows for every section.
-``--json`` runs the fleet sweep (scale ×1 scenario × policy grid, plus the
-×2/×4/×8 solver-scaling sweep with 400×scale windows) and writes
-machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a CI
-sanity slice (request streams + adaptive policy, a backbone cut, the
-decomposed/incremental planners at ``--scale``, the elastic-bridge
-cells: simulated-vs-flat fingerprint parity plus byte-derived phase
-timings on hetero-expansion, an SLO burn-rate → policy-escalation cell,
-and a traced run validated against the Chrome trace_event schema) and
-exits non-zero on any failure.  ``--trace out.json`` runs one scenario
+``--json`` runs the fleet sweep (scale ×1 scenario × policy grid, the
+×2/×4/×8 solver-scaling sweep with 400×scale windows, a ×32 planetary
+slice under the hierarchical planner, and ×64/×256 steady-tick rows with
+a >100k-app window) and writes machine-readable rows to
+``BENCH_fleet.json``.  ``--smoke`` runs a CI sanity slice (request
+streams + adaptive policy, a backbone cut, the decomposed/incremental
+planners at ``--scale`` — plus, at ``--scale`` ≥ 16, the hierarchical
+planner with a fingerprint-parity gate and a steady-tick latency budget —
+the elastic-bridge cells: simulated-vs-flat fingerprint parity plus
+byte-derived phase timings on hetero-expansion, an SLO burn-rate →
+policy-escalation cell, and a traced run validated against the Chrome
+trace_event schema) and exits non-zero on any failure.  ``--trace out.json`` runs one scenario
 with the dual-clock span tracer attached and writes a Perfetto-loadable
 trace (open in ui.perfetto.dev or chrome://tracing).
 """
@@ -62,6 +65,7 @@ def run_json(out_path: str, seed: int) -> int:
         DEFAULT_POLICIES,
         SCALE_SWEEP_POLICIES,
         SCALE_SWEEP_SCALES,
+        planetary_rows,
         scale_sweep,
         steady_tick_rows,
         sweep,
@@ -69,12 +73,22 @@ def run_json(out_path: str, seed: int) -> int:
 
     rows = sweep(seed=seed)
     scaled = scale_sweep(seed=seed)
+    # Planetary slice: the ×32 scenario sweep (hierarchical planner vs its
+    # flat equivalent and the greedy floor) plus the ×32/×64/×256
+    # steady-tick microbench with the >100k-app window.
+    scaled += scale_sweep(scales=(32,), scenarios=("paper-steady-state",),
+                          policies=("incremental", "hierarchical", "greedy"),
+                          seed=seed, with_ticks=False)
     steady = steady_tick_rows(seed=seed)
+    steady += steady_tick_rows((32,), seed=seed,
+                               policies=("decomposed", "incremental",
+                                         "hierarchical"))
+    steady += planetary_rows(seed=seed)
     doc = {
         "benchmark": "fleet_runtime",
         "seed": seed,
         "policies": list(DEFAULT_POLICIES),
-        "scale_sweep": {"scales": list(SCALE_SWEEP_SCALES),
+        "scale_sweep": {"scales": list(SCALE_SWEEP_SCALES) + [32],
                         "policies": list(SCALE_SWEEP_POLICIES)},
         "rows": rows + scaled,
         "steady_tick": steady,
@@ -83,18 +97,32 @@ def run_json(out_path: str, seed: int) -> int:
         json.dump(doc, f, indent=1)
     print(f"wrote {out_path}: {len(rows)} scale-1 rows + "
           f"{len(scaled)} scale-sweep rows + {len(steady)} steady-tick rows")
+    ok = 0
     for sc in sorted({r["scale"] for r in steady}):
         by_pol = {r["policy"]: r for r in steady if r["scale"] == sc}
-        dec, inc = by_pol["decomposed"], by_pol["incremental"]
-        ratio = dec["mean_steady_tick_s"] / max(inc["mean_steady_tick_s"], 1e-9)
-        print(f"  steady-tick x{sc}: decomposed={dec['mean_steady_tick_s']*1e3:.1f}ms "
-              f"incremental={inc['mean_steady_tick_s']*1e3:.1f}ms "
-              f"({ratio:.1f}x, reused {inc['regions_reused_last']}/"
-              f"{inc['regions_reused_last'] + inc['regions_solved_last']})")
-    ok = 0
+        cols = " ".join(
+            f"{pol}={row['mean_steady_tick_s'] * 1e3:.1f}ms"
+            for pol, row in by_pol.items())
+        extra = ""
+        if "decomposed" in by_pol and "incremental" in by_pol:
+            inc = by_pol["incremental"]
+            ratio = by_pol["decomposed"]["mean_steady_tick_s"] / max(
+                inc["mean_steady_tick_s"], 1e-9)
+            extra = (f" ({ratio:.1f}x, reused {inc['regions_reused_last']}/"
+                     f"{inc['regions_reused_last'] + inc['regions_solved_last']})")
+        if sc >= 32:
+            # Planetary acceptance: steady ticks under 100 ms at ×32+.
+            p50s = {pol: row["p50_steady_tick_s"]
+                    for pol, row in by_pol.items()
+                    if pol in ("incremental", "hierarchical")}
+            good = p50s and all(v < 0.1 for v in p50s.values())
+            extra += f"  [p50 < 100ms: {'OK' if good else 'MISS'}]"
+            ok |= 0 if good else 1
+        print(f"  steady-tick x{sc}: {cols}{extra}")
     # Incremental-vs-full acceptance: identical behavior fingerprints at
-    # scale ×1 (deterministic policies), and the ×4 window-1600 sweep's
-    # planning-latency ratio.
+    # scale ×1 (deterministic policies), the hierarchical planner's
+    # fingerprint parity wherever its flat equivalent ran, and the ×4
+    # window-1600 sweep's planning-latency ratio.
     by_cell = {(r["scenario"], r["scale"], r["policy"]): r
                for r in rows + scaled}
     for r in rows + scaled:
@@ -117,6 +145,12 @@ def run_json(out_path: str, seed: int) -> int:
                     speedup = dec["mean_solver_time_s"] / max(
                         r["mean_solver_time_s"], 1e-9)
                     flag += f"  [vs decomposed: {speedup:.1f}x]"
+        if r["policy"] == "hierarchical":
+            inc = by_cell.get((r["scenario"], r["scale"], "incremental"))
+            if inc is not None:
+                same = r["fingerprint"] == inc["fingerprint"]
+                flag += f"  [fp == incremental: {'OK' if same else 'MISS'}]"
+                ok |= 0 if same else 1
         print(f"  {r['scenario']:28s} {r['policy']:11s} x{r['scale']:<2d} "
               f"ratio={_ratio(r['mean_moved_ratio'])} "
               f"ratio_w={_ratio(r['mean_moved_ratio_weighted'])} "
@@ -162,6 +196,35 @@ def run_smoke(seed: int, scale: int) -> int:
               f"{r['total_transfer_s']:.2f}/{r['total_restore_s']:.2f}s "
               f"slo={r['slo_breaches']}b/{r['slo_escalations']}e "
               f"[{'OK' if ok else 'FAIL'}]")
+    if scale >= 16:
+        # Hierarchical parity gate: above the 4000-node activation gate
+        # the region-of-regions planner must still fingerprint identically
+        # to the flat incremental planner on the same cell.
+        pair = {r["policy"]: r["fingerprint"] for r in rows
+                if r["scenario"] == "paper-steady-state"
+                and r["scale"] == scale
+                and r["policy"] in ("incremental", "hierarchical")}
+        if len(pair) == 2:
+            same = pair["hierarchical"] == pair["incremental"]
+            print(f"  hierarchical parity x{scale} (fp == incremental): "
+                  f"{'OK' if same else 'FAIL'}")
+            bad |= 0 if same else 1
+        else:
+            print("  hierarchical parity pair missing from smoke rows [FAIL]")
+            bad |= 1
+        # Planetary steady-tick budget gate: quiet ticks at ×scale must
+        # come in under the 100 ms acceptance ceiling.
+        from benchmarks.bench_fleet import steady_tick_rows
+
+        st = steady_tick_rows((scale,), seed=seed,
+                              policies=("incremental", "hierarchical"))
+        worst = max(r["p50_steady_tick_s"] for r in st)
+        ok = worst < 0.1
+        cols = " ".join(f"{r['policy']}={r['p50_steady_tick_s'] * 1e3:.1f}ms"
+                        for r in st)
+        print(f"  steady-tick budget x{scale}: {cols} p50<100ms "
+              f"[{'OK' if ok else 'FAIL'}]")
+        bad |= 0 if ok else 1
     # Elastic-bridge parity gate: the simulated backend's no-declared-state
     # fallback must be behavior-identical to the flat executor model.
     pair = {r["backend"]: r["fingerprint"] for r in rows
@@ -236,7 +299,9 @@ def main() -> None:
                     help="output path for --json (default: BENCH_fleet.json)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=int, default=2,
-                    help="topology scale for the --smoke decomposed cell")
+                    help="topology scale for the --smoke planner cells "
+                         "(≥16 adds the hierarchical parity + steady-tick "
+                         "budget gates)")
     ap.add_argument("--trace", metavar="OUT",
                     help="run one traced scenario and write Chrome/Perfetto "
                          "trace_event JSON to OUT")

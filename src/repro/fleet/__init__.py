@@ -43,6 +43,7 @@ from .events import (  # noqa: F401
     MigrationStart,
     NodeFailure,
     NodeRecovery,
+    RateBank,
     RateCurve,
     ReconfigTick,
     RequestRateUpdate,
@@ -85,15 +86,18 @@ from .policies import (  # noqa: F401
     ReconfigPolicy,
     get_policy,
 )
-from .planner import (  # noqa: F401  (also registers decomposed/incremental/horizon)
+from .planner import (  # noqa: F401  (registers decomposed/incremental/hierarchical/horizon)
     DecomposedPolicy,
     DemandForecaster,
+    HierarchicalPolicy,
     HorizonPolicy,
     IncrementalPolicy,
     MigrationCostModel,
     Partition,
+    PartitionTree,
     Region,
     partition_topology,
+    partition_tree,
 )
 from .runtime import FleetRuntime, RuntimeConfig  # noqa: F401
 from .scenarios import SCENARIOS, ScenarioSpec, build_scenario  # noqa: F401

@@ -390,7 +390,11 @@ class MigrationExecutor:
                     events: EventQueue) -> None:
         """Recompute fair-share rates and re-project completions under a
         fresh generation (stale `MigrationComplete`s become no-ops).  A
-        completion lands after the remaining snapshot + copy + restore."""
+        completion lands after the remaining snapshot + copy + restore.
+
+        Reservations are NOT touched here: `_pump` — which every public
+        path ends in — owns them (release on entry, re-debit each
+        transfer's live fair-share rate on exit)."""
         counts = self.link_shares()
         links = engine.topo.links
         for req_id in sorted(self.active):
@@ -421,8 +425,10 @@ class MigrationExecutor:
             started_s=now,
             last_update_s=now,
         )
-        if self.reserve_mbps > 0.0:
-            tr.reserved = engine.reserve_link_bandwidth(tr.links, self.reserve_mbps)
+        # No reservation here: every start path runs `_reschedule` before
+        # control returns (the `_pump` progressed branch), which debits the
+        # transfer's live fair-share rate — `reserve_mbps > 0` is the
+        # enable flag, the flat amount itself is no longer used.
         self.active[mv.req_id] = tr
         events.push(now, MigrationStart(mv.req_id, mode))
 
@@ -436,12 +442,47 @@ class MigrationExecutor:
             return False                     # suspended apps sit off-node
         return placed.candidate.node.node_id != mv.old.node.node_id
 
+    def _release_reservations(self, engine: PlacementEngine) -> None:
+        for req_id in sorted(self.active):
+            tr = self.active[req_id]
+            if tr.reserved:
+                engine.release_link_bandwidth(tr.reserved)
+                tr.reserved = {}
+
+    def _reserve_fair_share(self, engine: PlacementEngine) -> None:
+        """Debit each active transfer's *live fair-share rate* (engine-
+        clamped to the link residual) on every link it crosses — the
+        bandwidth the copy is consuming right now, not a flat constant —
+        so admission control for new arrivals sees the real contention.
+        Sorted order keeps the ledger deterministic."""
+        for req_id in sorted(self.active):
+            tr = self.active[req_id]
+            tr.reserved = engine.reserve_link_bandwidth(tr.links,
+                                                        tr.rate_mbps)
+
     def _pump(self, engine: PlacementEngine, now: float,
               events: EventQueue) -> None:
         """Start every waiting move that fits; break stalls by suspension.
 
         Terminates: each iteration either starts a transfer, drops a stale
-        move, suspends one app (at most once per app), or exits."""
+        move, suspends one app (at most once per app), or exits.
+
+        Owns the bandwidth reservations: they are lifted for the duration
+        of the sweep — transfer-vs-transfer contention is already modeled
+        by the fair-share ledger itself, so a running copy must not block
+        a *migration* admission, only outside arrivals — and re-debited at
+        the live fair-share rates on the way out."""
+        if self.reserve_mbps > 0.0:
+            self._release_reservations(engine)
+            try:
+                self._pump_loop(engine, now, events)
+            finally:
+                self._reserve_fair_share(engine)
+        else:
+            self._pump_loop(engine, now, events)
+
+    def _pump_loop(self, engine: PlacementEngine, now: float,
+                   events: EventQueue) -> None:
         while True:
             progressed = False
             for mv in list(self.waiting):

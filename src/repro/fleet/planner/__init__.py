@@ -11,7 +11,12 @@ giving up the satisfaction objective:
                     conflict-free `ReconfigResult`; its *incremental* mode
                     (policy ``incremental``) consumes the engine's change
                     journal to re-solve only dirty regions, replaying
-                    cached plans for clean ones and warm-starting the rest
+                    cached plans for clean ones and warm-starting the rest;
+                    its *hierarchical* mode (policy ``hierarchical``) plans
+                    over a region-of-regions `PartitionTree` — per-level
+                    arbitration sweeps and wholesale skips of journal-clean
+                    closed subtrees — activating only on fleets above
+                    ``hierarchy_min_nodes`` devices
   forecast        — sample each app's `RateCurve` ahead of the clock
                     (peak/mean over a rolling horizon) + forecast-error
                     scoring
@@ -26,12 +31,23 @@ it eagerly.
 """
 
 from ..policies import POLICIES
-from .decomposed import DecomposedPolicy, IncrementalPolicy  # noqa: F401
+from .decomposed import (  # noqa: F401
+    DecomposedPolicy,
+    HierarchicalPolicy,
+    IncrementalPolicy,
+)
 from .forecast import DemandForecaster, Forecast  # noqa: F401
 from .horizon import HorizonPolicy  # noqa: F401
 from .migration_cost import MigrationCostModel  # noqa: F401
-from .partition import Partition, Region, partition_topology  # noqa: F401
+from .partition import (  # noqa: F401
+    Partition,
+    PartitionTree,
+    Region,
+    partition_topology,
+    partition_tree,
+)
 
 POLICIES.setdefault(DecomposedPolicy.name, DecomposedPolicy)
 POLICIES.setdefault(IncrementalPolicy.name, IncrementalPolicy)
+POLICIES.setdefault(HierarchicalPolicy.name, HierarchicalPolicy)
 POLICIES.setdefault(HorizonPolicy.name, HorizonPolicy)

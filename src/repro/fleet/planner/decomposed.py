@@ -54,6 +54,32 @@ as a deadline fallback); under the scipy-free B&B fallback a warm start
 can return a *different representative of tied optima* — the objective,
 gain and satisfaction are identical, but the chosen nodes (and hence
 fingerprints) may differ on symmetric topologies.
+
+**Hierarchical mode** plans over a `planner.partition.PartitionTree`
+instead of a flat partition.  The regional MILPs still run against the
+tree's *leaf* cut — so with default parameters (a degenerate
+``[leaf, global]`` tree) every code path is byte-identical to the
+single-level planner — but two things recurse:
+
+* the **arbitration sweep** runs bottom-up, level by level: each app is
+  swept exactly once, at the lowest level whose enclosing region is
+  *closed* (no boundary links at that level).  A closed region provably
+  contains every candidate of every app homed in it — any escaping path
+  would need a crossing link — so sweeping it in isolation admits exactly
+  the moves the flat global sweep would, while upper levels only arbitrate
+  the apps whose regions still have budgeted cross-level boundary links;
+* the **change journal drives dirtiness at every level**: a closed
+  level-1 region whose leaf regions are all journal-clean and whose app
+  roster/weights/placements match the cached *subtree signature* is
+  skipped wholesale — its leaf plans replay without assembling MILP
+  inputs or per-region signatures (``PlanStats.subtrees_skipped``).
+  Candidate containment is what makes the cheap signature sufficient:
+  everything a closed subtree's solve can see lives inside the subtree,
+  and every engine mutation inside it is journaled.
+
+`HierarchicalPolicy` (policy name ``hierarchical``) enables tree
+coarsening only above ``hierarchy_min_nodes`` devices, so paper-scale
+topologies keep the exact single-level behavior and fingerprints.
 """
 
 from __future__ import annotations
@@ -78,7 +104,7 @@ from ..policies import (
     _WindowApp,
 )
 from ..telemetry import PlanStats
-from .partition import Partition, partition_topology
+from .partition import Partition, PartitionTree, partition_tree
 
 
 @dataclasses.dataclass
@@ -112,22 +138,26 @@ class DecomposedPolicy(ReconfigPolicy):
                  boundary_budget_frac: float = 0.5,
                  coordinate: bool = True,
                  backend: str = "auto", time_limit_s: float = 10.0,
-                 incremental: bool = False):
+                 incremental: bool = False,
+                 group_size: Optional[int] = None):
         super().__init__(move_penalty, accept_threshold, cost_model)
         self.max_region_nodes = max_region_nodes
         self.k_regions = k_regions
+        self.group_size = group_size
         self.boundary_budget_frac = boundary_budget_frac
         self.coordinate = coordinate
         self.backend = backend
         self.time_limit_s = time_limit_s
         self.incremental = incremental
-        # Last (topo, partition) pair — topologies are immutable, and a
-        # policy plans against one fleet at a time, so one slot suffices
-        # (a dict keyed by id() would pin every topology ever seen).
-        self._partition: Optional[Partition] = None
+        # Last (topo, tree) pair — topologies are immutable, and a policy
+        # plans against one fleet at a time, so one slot suffices (a dict
+        # keyed by id() would pin every topology ever seen).
+        self._tree: Optional[PartitionTree] = None
         # Incremental state: per-region cached plans, the journal cursor
         # they are valid from, and the engine they were observed on.
         self._region_cache: Dict[str, _RegionPlan] = {}
+        # Level-1 subtree signatures for the wholesale skip (deep trees).
+        self._subtree_cache: Dict[str, Tuple] = {}
         self._cursor = 0
         self._engine: Optional[PlacementEngine] = None
         self.last_dirty_regions: Optional[Set[str]] = None
@@ -138,12 +168,25 @@ class DecomposedPolicy(ReconfigPolicy):
         self._build_s = 0.0
 
     # -------------------------------------------------------------- partition
-    def partition_for(self, topo: Topology) -> Partition:
-        if self._partition is None or self._partition.topo is not topo:
-            self._partition = partition_topology(
-                topo, self.max_region_nodes, self.k_regions)
+    def _tree_params(self, topo: Topology) -> Tuple[Optional[int],
+                                                    Optional[int],
+                                                    Optional[int]]:
+        """(max_region_nodes, k_regions, group_size) used to build the
+        tree for ``topo`` — the subclass hook that lets `hierarchical`
+        gate coarsening on fleet size."""
+        return (self.max_region_nodes, self.k_regions, self.group_size)
+
+    def tree_for(self, topo: Topology) -> PartitionTree:
+        if self._tree is None or self._tree.topo is not topo:
+            mrn, k, gs = self._tree_params(topo)
+            self._tree = partition_tree(topo, mrn, k, gs)
             self._region_cache.clear()
-        return self._partition
+            self._subtree_cache.clear()
+        return self._tree
+
+    def partition_for(self, topo: Topology) -> Partition:
+        """The leaf cut the regional MILPs are solved against."""
+        return self.tree_for(topo).leaf
 
     # ---------------------------------------------------------------- journal
     def _dirty_since(self, engine: PlacementEngine,
@@ -154,12 +197,14 @@ class DecomposedPolicy(ReconfigPolicy):
         if self._engine is not engine:
             self._engine = engine
             self._region_cache.clear()
+            self._subtree_cache.clear()
             self._cursor = engine.journal.total
             return None
         entries = engine.journal.since(self._cursor)
         self._cursor = engine.journal.total
         if entries is None:
             self._region_cache.clear()
+            self._subtree_cache.clear()
             return None
         dirty: Set[str] = set()
         for e in entries:
@@ -196,12 +241,13 @@ class DecomposedPolicy(ReconfigPolicy):
                     build_s=0.0, lp_iterations=0, bnb_nodes=0,
                     regions_reused=c_stats.regions_reused + c_stats.n_regions)
                 return ReconfigResult(
-                    list(window), list(c_moves), list(c_sat),
+                    list(window), list(c_moves), c_sat,
                     2.0 * len(c_sat), c_s_after, c_accepted, None,
                     time.perf_counter() - t0, weights=norm)
         batch_ctx = self._window_costs(engine, window, norm)
         ctx, costv, movers = batch_ctx.ctx, batch_ctx.costv, batch_ctx.movers
-        part = self.partition_for(engine.topo)
+        tree = self.tree_for(engine.topo)
+        part = tree.leaf
         if self.incremental:
             with self.tracer.span("journal_scan", cat="tick"):
                 dirty = self._dirty_since(engine, part)
@@ -232,6 +278,46 @@ class DecomposedPolicy(ReconfigPolicy):
             rid = part.region_of_node[wa.placed.candidate.node.node_id]
             groups.setdefault(rid, []).append(i)
 
+        # Quiet-subtree wholesale skip (deep trees only — the degenerate
+        # [leaf, global] tree never reaches this, protecting single-level
+        # byte-parity).  A *closed* level-1 region contains every candidate
+        # of every app homed under it, so if its leaves are journal-clean
+        # and its app roster (ids, live indices/nodes, weights, baselines)
+        # matches last tick's subtree signature, the leaf MILP inputs are
+        # provably unchanged — replay each leaf's cached plan without even
+        # assembling inputs or per-region signatures.
+        use_subtree = (self.incremental and self.cost_model is None
+                       and tree.n_levels >= 3 and dirty is not None)
+        skip_leaves: Dict[str, str] = {}   # leaf rid -> level-1 ancestor
+        subtree_sigs: Dict[str, Tuple] = {}
+        failed_l1: Set[str] = set()
+        if use_subtree:
+            dirty1 = tree.dirty_at(1, dirty)
+            for region1 in tree.levels[1].regions:
+                rid1 = region1.region_id
+                if region1.boundary_links:
+                    continue
+                if rid1 in dirty1:
+                    self._subtree_cache.pop(rid1, None)
+                    continue
+                leaves = tree.leaves_under(1, rid1)
+                w_of = (lambda r: norm[r]) if norm else (lambda r: 1.0)
+                sig1 = tuple(
+                    (ctx[i].placed.req_id, ctx[i].current_idx,
+                     ctx[i].placed.candidate.node.node_id,
+                     w_of(ctx[i].placed.req_id),
+                     ctx[i].placed.response_s, ctx[i].placed.price)
+                    for rid in leaves for i in groups.get(rid, ()))
+                subtree_sigs[rid1] = (sig1, tuple(leaves))
+                if self._subtree_cache.get(rid1) != sig1:
+                    continue
+                mover_leaves = [rid for rid in leaves
+                                if any(movers[i]
+                                       for i in groups.get(rid, ()))]
+                if all(rid in self._region_cache for rid in mover_leaves):
+                    for rid in leaves:
+                        skip_leaves[rid] = rid1
+
         # Per-region triage: lift each mover set out of the shared pool,
         # assemble the exact MILP inputs, and either replay the cached plan
         # (incremental, clean region, identical inputs) or queue a solve.
@@ -254,6 +340,20 @@ class DecomposedPolicy(ReconfigPolicy):
             for i in idxs:
                 shadow.occupy(ctx[i].placed.request.app,
                               ctx[i].candidates[assignment[i]], -1.0)
+            if rid in skip_leaves:
+                cached = self._region_cache.get(rid)
+                if cached is not None \
+                        and self._replay(cached, ctx, idxs, assignment):
+                    reused += 1
+                    for i in idxs:
+                        shadow.occupy(ctx[i].placed.request.app,
+                                      ctx[i].candidates[assignment[i]], +1.0)
+                    continue
+                # Anomalous (the signature argument says this cannot
+                # happen): fall through to the full inputs+signature path
+                # and stop trusting the subtree this tick.
+                failed_l1.add(skip_leaves[rid])
+                self._subtree_cache.pop(skip_leaves[rid], None)
             inputs = self._region_inputs(ctx, idxs, region, part, shadow,
                                          norm, assignment, costv)
             sig = self._signature(ctx, idxs, norm, inputs) \
@@ -305,6 +405,20 @@ class DecomposedPolicy(ReconfigPolicy):
                 self._cache_region(region.region_id, sig, ctx, idxs,
                                    assignment, res.status == "optimal")
 
+        # Remember each clean closed subtree's roster signature for the
+        # next tick.  Planning never mutates the engine, so the pre-plan
+        # signatures are still the live state; a subtree is replayable
+        # only once every mover leaf under it holds a proven plan.
+        if use_subtree:
+            for rid1, (sig1, leaves) in subtree_sigs.items():
+                if rid1 not in failed_l1 and all(
+                        rid in self._region_cache for rid in leaves
+                        if any(movers[i] for i in groups.get(rid, ()))):
+                    self._subtree_cache[rid1] = sig1
+                else:
+                    self._subtree_cache.pop(rid1, None)
+        subtrees_skipped = len(set(skip_leaves.values()) - failed_l1)
+
         # Without boundary links every candidate lives in its app's home
         # region (a crossing path would need a crossing link), so the
         # arbitration sweep is provably a no-op on top of the region-MILP
@@ -312,8 +426,8 @@ class DecomposedPolicy(ReconfigPolicy):
         crossings = 0
         if self.coordinate and part.boundary_links:
             with self.tracer.span("arbitration", cat="tick"):
-                crossings = self._coordinate(ctx, part, shadow, assignment,
-                                             costv)
+                crossings = self._coordinate_tree(ctx, tree, shadow,
+                                                  assignment, costv)
 
         self.last_plan_stats = PlanStats(
             n_regions=n_solved,
@@ -326,13 +440,14 @@ class DecomposedPolicy(ReconfigPolicy):
             build_s=self._build_s,
             lp_iterations=lp_iters,
             bnb_nodes=bnb_nodes,
+            subtrees_skipped=subtrees_skipped,
         )
         result = _result_from_batch(window, batch_ctx, assignment,
                                     self.accept_threshold, t0, norm)
         if self.incremental and n_feasible == 0:
             # Deadline incumbents are wall-clock artifacts — never replay.
             self._tick_cache = (tuple(window), norm, tuple(result.moves),
-                                tuple(result.satisfaction), result.s_after,
+                                result.satisfaction, result.s_after,
                                 result.accepted, self.last_plan_stats)
         else:
             self._tick_cache = None
@@ -592,24 +707,16 @@ class DecomposedPolicy(ReconfigPolicy):
         return x0
 
     # ------------------------------------------------------------ coordinate
-    def _coordinate(
-        self,
-        ctx: List[_WindowApp],
-        part: Partition,
-        shadow: _Shadow,
-        assignment: List[int],
-        costv: List[np.ndarray],
-    ) -> int:
-        """Greedy arbitration over the FULL candidate lists: each app (in
-        req_id order) may take any strictly cheaper candidate — including
-        across a region boundary — that still fits the shared shadow.
-        Returns how many apps ended up outside their home region."""
-        crossings = 0
-        order = sorted(range(len(ctx)), key=lambda i: ctx[i].placed.req_id)
+    def _sweep(self, ctx: List[_WindowApp], idxs: List[int], shadow: _Shadow,
+               assignment: List[int], costv: List[np.ndarray]) -> None:
+        """Greedy arbitration over the FULL candidate lists: each listed
+        app (in req_id order) may take any strictly cheaper candidate —
+        including across a leaf-region boundary — that still fits the
+        shared shadow."""
+        order = sorted(idxs, key=lambda i: ctx[i].placed.req_id)
         for i in order:
             wa = ctx[i]
             app = wa.placed.request.app
-            home = part.region_of_node[wa.placed.candidate.node.node_id]
             costs = costv[i]
             shadow.occupy(app, wa.candidates[assignment[i]], -1.0)
             best = assignment[i]
@@ -623,9 +730,50 @@ class DecomposedPolicy(ReconfigPolicy):
                         break
             shadow.occupy(app, wa.candidates[best], +1.0)
             assignment[i] = best
-            if part.region_of_node[wa.candidates[best].node.node_id] != home:
-                crossings += 1
-        return crossings
+
+    def _coordinate_tree(
+        self,
+        ctx: List[_WindowApp],
+        tree: PartitionTree,
+        shadow: _Shadow,
+        assignment: List[int],
+        costv: List[np.ndarray],
+    ) -> int:
+        """Shadow-ledger arbitration applied per tree level, bottom-up.
+
+        Each app is swept exactly once, at the lowest level ≥ 1 whose
+        enclosing region is *closed* (no boundary links there).  Closed
+        regions at one level are resource-disjoint from everything outside
+        them — candidate containment — so sweeping them region-by-region
+        admits exactly the moves one flat global sweep would, and on the
+        degenerate two-level tree this IS the flat sweep.  The top level
+        is a single closed global region, so every app gets arbitrated.
+        Returns how many apps ended up outside their home *leaf* region.
+        """
+        leaf = tree.leaf
+        home_leaf = [leaf.region_of_node[wa.placed.candidate.node.node_id]
+                     for wa in ctx]
+        swept = [False] * len(ctx)
+        for level in range(1, tree.n_levels):
+            part = tree.levels[level]
+            by_region: Dict[str, List[int]] = {}
+            for i in range(len(ctx)):
+                if not swept[i]:
+                    by_region.setdefault(
+                        tree.ancestor(home_leaf[i], level), []).append(i)
+            for region in part.regions:
+                if region.boundary_links:
+                    continue
+                idxs = by_region.get(region.region_id)
+                if not idxs:
+                    continue
+                self._sweep(ctx, idxs, shadow, assignment, costv)
+                for i in idxs:
+                    swept[i] = True
+        return sum(
+            1 for i, wa in enumerate(ctx)
+            if leaf.region_of_node[wa.candidates[assignment[i]].node.node_id]
+            != home_leaf[i])
 
 
 class IncrementalPolicy(DecomposedPolicy):
@@ -636,3 +784,30 @@ class IncrementalPolicy(DecomposedPolicy):
 
     def __init__(self, *args, incremental: bool = True, **kwargs):
         super().__init__(*args, incremental=incremental, **kwargs)
+
+
+class HierarchicalPolicy(IncrementalPolicy):
+    """Incremental planning over a deep region-of-regions tree — registered
+    as the ``hierarchical`` policy name.
+
+    Below ``hierarchy_min_nodes`` devices the tree stays the degenerate
+    ``[leaf, global]`` shape, making this policy byte-identical to
+    ``incremental`` (and hence ``decomposed``) on paper-scale topologies —
+    the parity the scale sweep asserts.  Above it, leaf regions are
+    coarsened in sorted runs of ``group_size`` per parent until the tree
+    converges, enabling per-level arbitration and the quiet-subtree
+    wholesale skip."""
+
+    name = "hierarchical"
+
+    def __init__(self, *args, hierarchy_min_nodes: int = 4000,
+                 group_size: int = 16, **kwargs):
+        super().__init__(*args, group_size=group_size, **kwargs)
+        self.hierarchy_min_nodes = hierarchy_min_nodes
+
+    def _tree_params(self, topo: Topology) -> Tuple[Optional[int],
+                                                    Optional[int],
+                                                    Optional[int]]:
+        gs = self.group_size \
+            if len(topo.nodes) >= self.hierarchy_min_nodes else None
+        return (self.max_region_nodes, self.k_regions, gs)

@@ -25,13 +25,24 @@ property tests assert).  A link is **interior** to a region when both of
 its endpoints map there, otherwise it is a **boundary** link of both — the
 decomposed planner gives regional subproblems only a budgeted share of
 boundary-link capacity and lets the coordination pass arbitrate the rest.
+
+**Region-of-regions trees** (`PartitionTree`, built by `partition_tree`)
+stack coarsenings of one leaf partition: level 0 is the finest cut, each
+higher level merges whole lower-level regions, and the top level is the
+single global region.  Every link gets a **merge level** — the lowest
+level at which both endpoints fall into one region (`link_level`); a link
+still split at level ``k`` is a *cross-level boundary link* there and
+keeps its leaf-solve budget, while a region with no boundary links at its
+level is **closed**: no path can leave it, so it provably contains every
+candidate of every app homed inside — the property the hierarchical
+planner's per-level arbitration and quiet-subtree replay both lean on.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
 
 from repro.core.topology import Topology
 
@@ -165,3 +176,160 @@ def partition_topology(
     all_boundary = frozenset().union(*(r.boundary_links for r in regions)) \
         if regions else frozenset()
     return Partition(topo, regions, region_of_site, region_of_node, all_boundary)
+
+
+# ------------------------------------------------------- region-of-regions
+@dataclasses.dataclass
+class PartitionTree:
+    """A stack of coarsenings of one leaf partition.
+
+    ``levels[0]`` is the finest cut (the partition the regional MILPs are
+    solved against), every higher level merges whole lower-level regions,
+    and ``levels[-1]`` is a single global region.  ``parents[k]`` maps a
+    region id at level ``k`` to its containing region at ``k+1``;
+    ``ancestor_of[k]`` maps every *leaf* region id straight to its level-k
+    ancestor.  ``link_level`` is each link's **merge level**: the lowest
+    level at which both endpoints land in one region (0 for leaf-interior
+    links; a leaf-boundary link "merges" wherever its two leaf regions
+    first share an ancestor — below that level it stays a budgeted
+    cross-level boundary link)."""
+
+    topo: Topology
+    levels: List[Partition]
+    parents: List[Dict[str, str]]
+    link_level: Dict[str, int]
+    ancestor_of: List[Dict[str, str]]
+
+    @property
+    def leaf(self) -> Partition:
+        return self.levels[0]
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def ancestor(self, leaf_region_id: str, level: int) -> str:
+        """Region at ``level`` containing the given leaf region."""
+        return self.ancestor_of[level][leaf_region_id]
+
+    def dirty_at(self, level: int, dirty_leaves: Iterable[str]) -> Set[str]:
+        """Lift a dirty *leaf*-region set up the tree: a level-k region is
+        dirty iff any dirty leaf maps into it — the journal drives
+        dirtiness at every level through the same leaf mapping."""
+        amap = self.ancestor_of[level]
+        return {amap[rid] for rid in dirty_leaves if rid in amap}
+
+    def leaves_under(self, level: int, region_id: str) -> List[str]:
+        """Leaf region ids contained in one level-``level`` region, in
+        leaf-partition order (deterministic: matches ``leaf.regions``)."""
+        amap = self.ancestor_of[level]
+        return [r.region_id for r in self.leaf.regions
+                if amap[r.region_id] == region_id]
+
+
+def _coarsen(lower: Partition, group_of: Dict[str, str]) -> Partition:
+    """Merge whole ``lower`` regions into the groups named by ``group_of``
+    (lower region id -> upper region id) and re-classify every link at the
+    coarser cut."""
+    topo = lower.topo
+    region_of_site = {sid: group_of[rid]
+                      for sid, rid in lower.region_of_site.items()}
+    members: Dict[str, List[Region]] = {}
+    for r in lower.regions:
+        members.setdefault(group_of[r.region_id], []).append(r)
+    interior: Dict[str, set] = {rid: set() for rid in members}
+    boundary: Dict[str, set] = {rid: set() for rid in members}
+    for link in topo.links.values():
+        ra = region_of_site[link.site_a]
+        rb = region_of_site[link.site_b]
+        if ra == rb:
+            interior[ra].add(link.link_id)
+        else:
+            boundary[ra].add(link.link_id)
+            boundary[rb].add(link.link_id)
+    regions: List[Region] = []
+    region_of_node: Dict[str, str] = {}
+    for rid in sorted(members):
+        sites: List[str] = []
+        nodes: List[str] = []
+        for r in sorted(members[rid], key=lambda m: m.region_id):
+            sites.extend(r.sites)
+            nodes.extend(r.nodes)
+        for nid in nodes:
+            region_of_node[nid] = rid
+        regions.append(Region(
+            region_id=rid,
+            sites=tuple(sites),
+            nodes=tuple(nodes),
+            interior_links=frozenset(interior[rid]),
+            boundary_links=frozenset(boundary[rid]),
+        ))
+    all_boundary = frozenset().union(*(r.boundary_links for r in regions)) \
+        if regions else frozenset()
+    return Partition(topo, regions, region_of_site, region_of_node,
+                     all_boundary)
+
+
+def partition_tree(
+    topo: Topology,
+    max_region_nodes: Optional[int] = None,
+    k_regions: Optional[int] = None,
+    group_size: Optional[int] = None,
+) -> PartitionTree:
+    """Build a region-of-regions tree over ``topo``.
+
+    * the **leaf** level is `partition_topology(topo, max_region_nodes,
+      k_regions)` — exactly the single-level planner's cut;
+    * when ``max_region_nodes`` split below the root subtrees, the default
+      per-root partition is inserted as the next level (each split cloud
+      re-merges there);
+    * ``group_size`` keeps coarsening by merging sorted runs of at most
+      ``group_size`` regions per parent until one level fits;
+    * the top level is always the single global region.
+
+    With default arguments this degenerates to ``[default partition,
+    global]`` — the exact structure the single-level planner implicitly
+    used, which is what keeps the tree-based planner bit-identical to it.
+    """
+    leaf = partition_topology(topo, max_region_nodes, k_regions)
+    levels: List[Partition] = [leaf]
+    parents: List[Dict[str, str]] = []
+    # Re-merge split subtrees at their root region.  (Skipped under
+    # k_regions: merged leaves can span roots, breaking containment.)
+    if max_region_nodes is not None and k_regions is None:
+        root_part = partition_topology(topo)
+        if 1 < len(root_part.regions) < len(leaf.regions):
+            group_of = {r.region_id: root_part.region_of_site[r.region_id]
+                        for r in leaf.regions}
+            levels.append(_coarsen(leaf, group_of))
+            parents.append(group_of)
+    if group_size is not None and group_size > 1:
+        while len(levels[-1].regions) > group_size:
+            cur = levels[-1]
+            rids = sorted(r.region_id for r in cur.regions)
+            group_of = {rid: rids[(i // group_size) * group_size]
+                        for i, rid in enumerate(rids)}
+            upper = _coarsen(cur, group_of)
+            levels.append(upper)
+            parents.append(group_of)
+    if len(levels[-1].regions) > 1:
+        cur = levels[-1]
+        root_id = min(r.region_id for r in cur.regions)
+        group_of = {r.region_id: root_id for r in cur.regions}
+        levels.append(_coarsen(cur, group_of))
+        parents.append(group_of)
+
+    link_level: Dict[str, int] = {}
+    for k, part in enumerate(levels):
+        ros = part.region_of_site
+        for link in topo.links.values():
+            if link.link_id not in link_level \
+                    and ros[link.site_a] == ros[link.site_b]:
+                link_level[link.link_id] = k
+
+    ancestor_of: List[Dict[str, str]] = [
+        {r.region_id: r.region_id for r in leaf.regions}]
+    for pmap in parents:
+        prev = ancestor_of[-1]
+        ancestor_of.append({rid: pmap[a] for rid, a in prev.items()})
+    return PartitionTree(topo, levels, parents, link_level, ancestor_of)

@@ -48,7 +48,11 @@ from repro.core.ga import GaConfig, GeneticSearch
 from repro.core.migration import Move
 from repro.core.placement import PlacedApp, PlacementEngine
 from repro.core.reconfig import ReconfigResult, Reconfigurator
-from repro.core.satisfaction import AppSatisfaction, normalize_weights
+from repro.core.satisfaction import (
+    AppSatisfaction,
+    SatisfactionBatch,
+    normalize_weights,
+)
 
 from .obs.trace import NULL_TRACER
 
@@ -138,10 +142,7 @@ def _result_from_batch(
     ratio = ra / batch.rb + pa / batch.pb
     s_after = float((batch.w * ratio).sum()) if weights is not None \
         else float(ratio.sum())
-    sat = [AppSatisfaction(req_id, rb, r_a, pb, p_a)
-           for req_id, rb, r_a, pb, p_a in zip(
-               window, batch.rb.tolist(), ra.tolist(),
-               batch.pb.tolist(), pa.tolist())]
+    sat = SatisfactionBatch(window, batch.rb, ra, batch.pb, pa)
     moves: List[Move] = []
     for i in np.nonzero(choice != batch.cur_idx)[0]:
         wa = ctx[i]

@@ -46,6 +46,7 @@ from .events import (
     MigrationStart,
     NodeFailure,
     NodeRecovery,
+    RateBank,
     RateCurve,
     ReconfigTick,
     RequestRateUpdate,
@@ -71,8 +72,17 @@ class RuntimeConfig:
     reconfig_on_failure: bool = True
     check_invariants: bool = True  # occupancy audit after every tick
     rate_epsilon: float = 0.05     # min relative rate change worth re-admitting
+    # Planning-window selection: "recent" = the most-recent-N stable apps
+    # (the paper's periodic re-placement window); "churn" = only apps whose
+    # rate or placement regressed since the last plan (admissions, rate
+    # re-admissions, drift, failover) — quiet apps stay out of the window,
+    # so the journal/region-reuse machinery bites on busy ticks too.
+    window_policy: str = "recent"
     # Bandwidth each active migration debits against admission control on
-    # every link it crosses (0 = legacy unreserved transfers).
+    # every link it crosses (0 = legacy unreserved transfers).  Since the
+    # fair-share ledger refactor this is an on/off knob: each transfer
+    # reserves its *live fair-share rate*, re-computed on every contention
+    # change, not this flat constant.
     migration_reserve_mbps: float = 2.0
     # Elastic bridge backend executing every migration's checkpoint →
     # reshard → resume pipeline (`fleet.elastic_bridge`).  None → a
@@ -108,9 +118,15 @@ class FleetRuntime:
         self._since_reconfig = 0
         self._events = EventQueue()   # bound to the live queue by run()
         # Request-stream state: per-app curve and the rate its footprint is
-        # currently admitted at (1.0 for apps without a curve).
+        # currently admitted at (1.0 for apps without a curve).  The bank
+        # mirrors (curve, admitted rate) in struct-of-arrays form so the
+        # periodic resample is one fused numpy pass over the fleet.
         self._curves: Dict[int, RateCurve] = {}
         self._rates: Dict[int, float] = {}
+        self._bank = RateBank()
+        # Apps whose rate or placement regressed since the last plan —
+        # the churn-aware planning window (config.window_policy="churn").
+        self._churned: set = set()
         # Observability (`fleet.obs`): the span tracer is strictly additive
         # (behavior-neutral — fingerprints are bit-identical with it on or
         # off); metrics and the SLO monitor are always on and deterministic.
@@ -216,7 +232,9 @@ class FleetRuntime:
         c["admitted"] += 1
         if ev.rate_curve is not None:
             self._curves[req.req_id] = ev.rate_curve
+            self._bank.add(req.req_id, ev.rate_curve, rate0)
         self._rates[req.req_id] = rate0
+        self._churned.add(req.req_id)
         if ev.lifetime_s is not None:
             events.push(self.now + ev.lifetime_s, AppDeparture(req.req_id))
         self._since_reconfig += 1
@@ -226,19 +244,23 @@ class FleetRuntime:
     def _on_rate_update(self, ev: RequestRateUpdate, events: EventQueue,
                         tel: Telemetry) -> None:
         c = tel.counters
-        for req_id in list(self.engine.placement_order):
-            curve = self._curves.get(req_id)
-            if curve is None or self.engine.is_migrating(req_id):
-                continue
-            cur = self._rates.get(req_id, 1.0)
-            target = curve.rate(self.now)
-            if abs(target - cur) <= self.config.rate_epsilon * cur:
-                continue
-            c["rate_updates"] += 1
-            if self._readmit(req_id, scale=target / cur):
-                self._rates[req_id] = target
-            else:
-                c["rate_evicted"] += 1
+        # One fused numpy pass over every curve (RateBank) replaces the
+        # per-app Python loop; the re-admissions then run in the exact
+        # placement order the loop used, preserving its semantics
+        # (mid-migration apps skipped, rates confirmed only on success).
+        changed = self._bank.sample(self.now, self.config.rate_epsilon)
+        if changed:
+            for req_id in list(self.engine.placement_order):
+                target = changed.get(req_id)
+                if target is None or self.engine.is_migrating(req_id):
+                    continue
+                cur = self._rates.get(req_id, 1.0)
+                c["rate_updates"] += 1
+                if self._readmit(req_id, scale=target / cur):
+                    self._rates[req_id] = target
+                    self._bank.set_rate(req_id, target)
+                else:
+                    c["rate_evicted"] += 1
         if self.now + ev.every_s <= ev.horizon_s:
             events.push(self.now + ev.every_s, ev)
 
@@ -297,6 +319,8 @@ class FleetRuntime:
     def _forget(self, req_id: int) -> None:
         self._curves.pop(req_id, None)
         self._rates.pop(req_id, None)
+        self._bank.discard(req_id)
+        self._churned.discard(req_id)
 
     def _readmit(self, req_id: int, scale: float = 1.0) -> bool:
         """Release ``req_id`` and place it again (rescaling its bandwidth/
@@ -311,6 +335,11 @@ class FleetRuntime:
         ok = self.engine.place(req) is not None
         if not ok:
             self._forget(req_id)
+        else:
+            # Every re-admission path (rate swing, drift, failover, link
+            # cut) is a rate or placement regression — churn.  Migration
+            # completions are planned improvements and do NOT mark.
+            self._churned.add(req_id)
         self.executor.on_capacity_freed(self.engine, self.now, self._events)
         return ok
 
@@ -336,15 +365,32 @@ class FleetRuntime:
         return sum(self._rates.get(r, 1.0) for r in self.engine.placed) / len(
             self.engine.placed)
 
+    def _select_window(self) -> list:
+        """The re-placement window for this tick.  ``recent``: the paper's
+        most-recent-N stable apps.  ``churn``: only apps marked churned
+        since the last plan (still capped at N, most recent first), so a
+        busy tick re-plans exactly what regressed."""
+        if self.config.window_policy == "churn":
+            eng = self.engine
+            churned = self._churned
+            window = [r for r in eng.placement_order
+                      if r in churned and not eng.is_migrating(r)]
+            return window[-self.config.window:]
+        return self.engine.recent_stable(self.config.window)
+
     def _tick(self, trigger: str, tel: Telemetry, events: EventQueue) -> None:
         self._since_reconfig = 0
-        window = self.engine.recent_stable(self.config.window)
+        window = self._select_window()
         if not window:
             return
         with self.tracer.span("tick", cat="tick",
                               args={"trigger": trigger, "t_sim": self.now,
                                     "window": len(window)}):
             self._tick_body(trigger, tel, events, window)
+        # Planned: these apps got their re-placement look; drop them from
+        # the churn set so the next window is the next delta.
+        if self.config.window_policy == "churn":
+            self._churned.difference_update(window)
 
     def _tick_body(self, trigger: str, tel: Telemetry, events: EventQueue,
                    window) -> None:
@@ -397,6 +443,7 @@ class FleetRuntime:
             regions_reused=stats.regions_reused if stats else 0,
             warm_start_hits=stats.warm_start_hits if stats else 0,
             n_feasible=stats.n_feasible if stats else 0,
+            subtrees_skipped=stats.subtrees_skipped if stats else 0,
             mean_satisfaction=mean_sat,
             build_s=stats.build_s if stats else 0.0,
             lp_iterations=stats.lp_iterations if stats else 0,
@@ -438,6 +485,7 @@ class FleetRuntime:
         if stats is not None:
             m.counter("planner/regions_solved").inc(stats.n_regions)
             m.counter("planner/regions_reused").inc(stats.regions_reused)
+            m.counter("planner/subtrees_skipped").inc(stats.subtrees_skipped)
             m.counter("planner/warm_start_hits").inc(stats.warm_start_hits)
             m.counter("planner/warm_start_misses").inc(stats.warm_start_misses)
             m.counter("solver/lp_iterations").inc(stats.lp_iterations)

@@ -50,6 +50,9 @@ class PlanStats:
     warm_start_hits: int = 0
     warm_start_misses: int = 0
     n_feasible: int = 0
+    # Hierarchical planning: closed level-1 subtrees replayed wholesale
+    # (journal-clean + matching subtree signature — see `planner.decomposed`).
+    subtrees_skipped: int = 0
     # Hot-path profiling (wall clock / solver work — never fingerprinted):
     # CSR assembly time across the tick's `build_joint_milp` calls, simplex
     # pivots summed over every LP relaxation, and B&B nodes explored.
@@ -116,6 +119,7 @@ class TickRecord:
     regions_reused: int = 0
     warm_start_hits: int = 0
     n_feasible: int = 0                     # deadline incumbents; not fingerprinted
+    subtrees_skipped: int = 0               # hierarchical wholesale skips
     # Post-tick fleet satisfaction: weighted mean X+Y over the window after
     # the tick (2.0 = do-nothing baseline; stays 2.0 on rejected ticks).
     # Simulated quantity → fingerprinted, and the SLO monitor's input.
@@ -148,7 +152,7 @@ WALL_CLOCK_TICK_FIELDS = frozenset({
 #: so incremental≡decomposed parity can hold despite different work.
 WORK_ACCOUNTING_TICK_FIELDS = frozenset({
     "n_regions", "regions_reused", "warm_start_hits", "n_feasible",
-    "lp_iterations", "bnb_nodes",
+    "lp_iterations", "bnb_nodes", "subtrees_skipped",
 })
 
 UNFINGERPRINTED_TICK_FIELDS = WALL_CLOCK_TICK_FIELDS | WORK_ACCOUNTING_TICK_FIELDS
