@@ -46,12 +46,14 @@ SCALE_SWEEP_POLICIES = ("milp", "decomposed", "incremental", "horizon",
 
 def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
           scenario_kwargs: Optional[Dict] = None,
-          backend=None, slo=None, policy_kwargs: Optional[Dict] = None) -> Dict:
+          backend=None, slo=None, policy_kwargs: Optional[Dict] = None,
+          config_kwargs: Optional[Dict] = None) -> Dict:
     """``backend`` overrides the scenario's elastic-bridge backend
     (`RuntimeConfig.elastic_backend`); None keeps the default simulated
     backend.  The row records which backend executed the migrations.
     ``slo`` overrides the runtime's `SloConfig` (for cells that provoke
-    burn-rate breaches); ``policy_kwargs`` are forwarded to `get_policy`."""
+    burn-rate breaches); ``policy_kwargs`` are forwarded to `get_policy`;
+    ``config_kwargs`` set `RuntimeConfig` fields (e.g. ``cost_feedback``)."""
     from repro.fleet import build_scenario, get_policy
 
     kwargs = dict(scenario_kwargs or {})
@@ -60,6 +62,8 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
         spec.config.elastic_backend = backend
     if slo is not None:
         spec.config.slo = slo
+    for k, v in (config_kwargs or {}).items():
+        setattr(spec.config, k, v)
     runtime = spec.make_runtime(get_policy(pol, **(policy_kwargs or {})))
     t0 = time.perf_counter()
     tel = runtime.run(spec.event_queue(), scenario=sc, seed=seed)
@@ -87,13 +91,22 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
         **d["counters"],
         **d["summary"],
     }
+    # Calibration-ledger columns (repro.fleet.obs.calibration): how many
+    # predicted-vs-actual joins landed, how many drift detectors fired.
+    calib = d.get("calibration") or {}
+    row["cost_feedback"] = bool(spec.config.cost_feedback)
+    row["calib_samples"] = calib.get("samples", 0)
+    row["calib_excluded"] = calib.get("excluded", 0)
+    row["calib_drifts"] = len(calib.get("drifts", ()))
     # Deterministic percentile columns from the fixed-bucket metrics
     # registry (repro.fleet.obs): satisfaction quantiles are simulated
     # quantities, solver-latency quantiles are wall-clock profiling.
     met = d["metrics"]
     for col, metric in (("satisfaction", "tick/satisfaction"),
                         ("solver_time_s", "solver/latency_s"),
-                        ("mig_downtime_s", "migration/downtime_s")):
+                        ("mig_downtime_s", "migration/downtime_s"),
+                        ("forecast_error", "forecast/error"),
+                        ("calib_downtime_err", "calibration/downtime_rel_err")):
         snap = met.get(metric) or {}
         for q in ("p50", "p90", "p99"):
             row[f"{q}_{col}"] = snap.get(q)
@@ -240,7 +253,7 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     gate) a hierarchical cell rides along; the driver gates its
     fingerprint against the incremental cell's and budgets the ×scale
     steady tick."""
-    from repro.fleet import FlatStateBackend, SloConfig
+    from repro.fleet import FlatStateBackend, SimulatedElasticBackend, SloConfig
 
     hierarchy = [] if scale < 16 else [
         _cell("paper-steady-state", "hierarchical", seed, with_ticks=False,
@@ -273,6 +286,35 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
               slo=SloConfig(satisfaction_objective=1.0,
                             satisfaction_budget_per_tick=0.01,
                             cooldown_s=100.0)),
+        # Calibration smoke: the backend's real byte counts are 4× the flat
+        # 64 MB pricing belief.  With ``cost_feedback`` off the ledger must
+        # catch the miscalibration (drift detectors fire); with it on the
+        # predictions come from the backend's own size model and the
+        # downtime error collapses — while the fingerprint stays
+        # bit-identical to the off cell (the ledger is behavior-neutral).
+        _cell("node-outage", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 150},
+              backend=SimulatedElasticBackend(default_state_mb=256.0)),
+        _cell("node-outage", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 150},
+              backend=SimulatedElasticBackend(default_state_mb=256.0),
+              config_kwargs={"cost_feedback": True}),
+    ]
+
+
+def calibration_rows(seed: int = 0) -> List[Dict]:
+    """The ISSUE's calibration acceptance pair: hetero-expansion (jobs
+    declare 1536 MB of state — 24× the flat 64 MB belief) priced blind vs
+    with the self-correcting cost model (`RuntimeConfig.cost_feedback`).
+    The driver gates p90(calib_downtime_err) dropping ≥5× feedback-on and
+    records both rows in BENCH_fleet.json."""
+    from repro.fleet import MigrationCostModel
+
+    return [
+        _cell("hetero-expansion", "greedy", seed, with_ticks=False),
+        _cell("hetero-expansion", "greedy", seed, with_ticks=False,
+              policy_kwargs={"cost_model": MigrationCostModel()},
+              config_kwargs={"cost_feedback": True}),
     ]
 
 

@@ -16,10 +16,16 @@ planners at ``--scale`` — plus, at ``--scale`` ≥ 16, the hierarchical
 planner with a fingerprint-parity gate and a steady-tick latency budget —
 the elastic-bridge cells: simulated-vs-flat fingerprint parity plus
 byte-derived phase timings on hetero-expansion, an SLO burn-rate →
-policy-escalation cell, and a traced run validated against the Chrome
-trace_event schema) and exits non-zero on any failure.  ``--trace out.json`` runs one scenario
+policy-escalation cell, a calibration cell pair (drift detectors must
+catch a 4×-miscalibrated size model, ``cost_feedback`` must collapse the
+downtime prediction error without perturbing the behavior fingerprint),
+and a traced run validated against the Chrome trace_event schema) and
+exits non-zero on any failure.  ``--trace out.json`` runs one scenario
 with the dual-clock span tracer attached and writes a Perfetto-loadable
-trace (open in ui.perfetto.dev or chrome://tracing).
+trace (open in ui.perfetto.dev or chrome://tracing).  ``--report
+calibration`` dumps the full calibration ledger — residual summaries,
+drift records, and per-move decision provenance — for the
+hetero-expansion acceptance pair.
 """
 
 import argparse
@@ -65,6 +71,7 @@ def run_json(out_path: str, seed: int) -> int:
         DEFAULT_POLICIES,
         SCALE_SWEEP_POLICIES,
         SCALE_SWEEP_SCALES,
+        calibration_rows,
         planetary_rows,
         scale_sweep,
         steady_tick_rows,
@@ -84,6 +91,7 @@ def run_json(out_path: str, seed: int) -> int:
                                policies=("decomposed", "incremental",
                                          "hierarchical"))
     steady += planetary_rows(seed=seed)
+    calib = calibration_rows(seed=seed)
     doc = {
         "benchmark": "fleet_runtime",
         "seed": seed,
@@ -92,12 +100,32 @@ def run_json(out_path: str, seed: int) -> int:
                         "policies": list(SCALE_SWEEP_POLICIES)},
         "rows": rows + scaled,
         "steady_tick": steady,
+        "calibration": calib,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {out_path}: {len(rows)} scale-1 rows + "
-          f"{len(scaled)} scale-sweep rows + {len(steady)} steady-tick rows")
+          f"{len(scaled)} scale-sweep rows + {len(steady)} steady-tick rows + "
+          f"{len(calib)} calibration rows")
     ok = 0
+    # Calibration acceptance (ISSUE): on hetero-expansion the p90 relative
+    # error of predicted vs measured migration downtime must drop ≥5× with
+    # the self-correcting cost model (`RuntimeConfig.cost_feedback`) on.
+    c_off = next((r for r in calib if not r["cost_feedback"]), None)
+    c_on = next((r for r in calib if r["cost_feedback"]), None)
+    if c_off and c_on and c_off["p90_calib_downtime_err"] is not None \
+            and c_on["p90_calib_downtime_err"] is not None:
+        ratio = c_off["p90_calib_downtime_err"] / max(
+            c_on["p90_calib_downtime_err"], 1e-9)
+        good = ratio >= 5.0
+        print(f"  calibration hetero-expansion: p90 downtime err "
+              f"{c_off['p90_calib_downtime_err']:.4f} → "
+              f"{c_on['p90_calib_downtime_err']:.4f} ({ratio:.1f}x) "
+              f"[>=5x: {'OK' if good else 'MISS'}]")
+        ok |= 0 if good else 1
+    else:
+        print("  calibration hetero-expansion pair missing p90 columns [MISS]")
+        ok |= 1
     for sc in sorted({r["scale"] for r in steady}):
         by_pol = {r["policy"]: r for r in steady if r["scale"] == sc}
         cols = " ".join(
@@ -237,6 +265,31 @@ def run_smoke(seed: int, scale: int) -> int:
     else:
         print("  bridge parity pair missing from smoke rows [FAIL]")
         bad |= 1
+    # Calibration gates: on the node-outage pair (backend bytes 4× the
+    # flat pricing belief) the ledger must flag the miscalibration
+    # (drift detectors fire feedback-off), the backend-informed
+    # predictions must shrink the p90 downtime error, and turning the
+    # feedback knob must NOT perturb the behavior fingerprint.
+    pair = {bool(r["cost_feedback"]): r for r in rows
+            if r["scenario"] == "node-outage" and r["policy"] == "greedy"}
+    if len(pair) == 2:
+        off, on = pair[False], pair[True]
+        drift_ok = off["calib_drifts"] > 0
+        p_off, p_on = off["p90_calib_downtime_err"], on["p90_calib_downtime_err"]
+        conv_ok = p_off is not None and p_on is not None and p_on < p_off
+        fp_ok = off["fingerprint"] == on["fingerprint"]
+        ok = drift_ok and conv_ok and fp_ok
+        print(f"  calibration smoke (node-outage 4x bytes): "
+              f"drifts={off['calib_drifts']} "
+              f"p90_err={p_off}->{p_on} "
+              f"drift fired: {'OK' if drift_ok else 'FAIL'}, "
+              f"err shrank: {'OK' if conv_ok else 'FAIL'}, "
+              f"fp unperturbed: {'OK' if fp_ok else 'FAIL'} "
+              f"[{'OK' if ok else 'FAIL'}]")
+        bad |= 0 if ok else 1
+    else:
+        print("  calibration smoke pair missing from smoke rows [FAIL]")
+        bad |= 1
     # Trace smoke: a traced run must export a schema-valid Chrome
     # trace_event document with ≥1 tick-phase span and ≥1 migration whose
     # snapshot/copy/restore phases nest inside it (validate_trace checks
@@ -265,6 +318,42 @@ def run_smoke(seed: int, scale: int) -> int:
         print(f"    INVALID: {p}")
     bad |= 0 if ok else 1
     return bad
+
+
+def run_report(seed: int) -> int:
+    """``--report calibration``: dump the full calibration ledger for the
+    hetero-expansion acceptance pair — residual summaries, every
+    `CalibrationDrift` record, and the per-move decision provenance
+    (`MoveProvenance`) explaining *why* each committed move won."""
+    from repro.fleet import MigrationCostModel, build_scenario, get_policy
+
+    for feedback in (False, True):
+        spec = build_scenario("hetero-expansion", seed=seed)
+        spec.config.cost_feedback = feedback
+        policy = (get_policy("greedy", cost_model=MigrationCostModel())
+                  if feedback else get_policy("greedy"))
+        runtime = spec.make_runtime(policy)
+        tel = runtime.run(spec.event_queue(), scenario="hetero-expansion",
+                          seed=seed)
+        rep = tel.calibration
+        hist = runtime.metrics.histogram("calibration/downtime_rel_err")
+        print(f"# calibration report: hetero-expansion/greedy "
+              f"cost_feedback={'on' if feedback else 'off'}")
+        print(f"  joined={rep['samples']} excluded={rep['excluded']} "
+              f"unmatched={rep['unmatched']} pending={rep['pending']} "
+              f"learned_apps={rep['learned_apps']} "
+              f"contention_s={rep['contention_s_total']:.3f}")
+        print(f"  downtime_rel_err p50={hist.percentile(0.5):.4f} "
+              f"p90={hist.percentile(0.9):.4f}")
+        for dr in rep["drifts"]:
+            print(f"  drift {json.dumps(dr, sort_keys=True)}")
+        prov = rep["provenance"]
+        print(f"  provenance: {prov['moves']} moves, "
+              f"{prov['price_binding']} price-binding, "
+              f"{prov['budget_binding']} budget-binding")
+        for p in prov["records"]:
+            print(f"  why {json.dumps(p, sort_keys=True)}")
+    return 0
 
 
 def run_csv(seed: int = 0) -> int:
@@ -302,6 +391,10 @@ def main() -> None:
                     help="topology scale for the --smoke planner cells "
                          "(≥16 adds the hierarchical parity + steady-tick "
                          "budget gates)")
+    ap.add_argument("--report", choices=("calibration",),
+                    help="dump one observability report (calibration: the "
+                         "predicted-vs-actual ledger + decision provenance "
+                         "for the hetero-expansion pair)")
     ap.add_argument("--trace", metavar="OUT",
                     help="run one traced scenario and write Chrome/Perfetto "
                          "trace_event JSON to OUT")
@@ -310,6 +403,8 @@ def main() -> None:
     ap.add_argument("--trace-policy", default="incremental",
                     help="policy for --trace (default: incremental)")
     args = ap.parse_args()
+    if args.report:
+        sys.exit(run_report(args.seed))
     if args.trace:
         sys.exit(run_trace(args.trace, args.trace_scenario,
                            args.trace_policy, args.seed))

@@ -50,6 +50,10 @@ class ReconfigResult:
     plan_time_s: float
     migration_steps: List[MigrationStep] = dataclasses.field(default_factory=list)
     weights: Optional[Dict[int, float]] = None  # normalized (mean 1) or None
+    # req_id → `fleet.obs.provenance.MoveProvenance`, one per committed
+    # move: the decision's "why" (objective delta, runner-up + margin,
+    # binding constraints), attached by the policy layer when available.
+    provenance: Optional[Dict] = None
 
     @property
     def n_moved(self) -> int:
@@ -88,8 +92,9 @@ class Reconfigurator:
         self.backend = backend
         self.time_limit_s = time_limit_s
         # Optional migration-aware cost model (duck-typed: must expose
-        # ``penalty(old_cand, new_cand, base)``) pricing each candidate
-        # move's transfer time into its MILP coefficient.
+        # ``penalty(old_cand, new_cand, base, request=None)``) pricing each
+        # candidate move's transfer time into its MILP coefficient; the
+        # request lets per-app state sizes replace the flat default.
         self.cost_model = cost_model
 
     # -------------------------------------------------------------- window
@@ -108,7 +113,9 @@ class Reconfigurator:
             cands = self.engine.enumerate_feasible(placed.request)
             pens = None
             if self.cost_model is not None:
-                pens = [self.cost_model.penalty(placed.candidate, c, self.move_penalty)
+                pens = [self.cost_model.penalty(placed.candidate, c,
+                                                self.move_penalty,
+                                                request=placed.request)
                         for c in cands]
             out.append(
                 AppVars(

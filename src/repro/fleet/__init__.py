@@ -28,7 +28,9 @@ service over a changing fleet, with load-bearing simulated time).
   obs       — observability subsystem: dual-clock span tracer (Perfetto
               export), deterministic metrics registry (fingerprint-safe
               percentiles), SLO burn-rate monitor feeding the policy
-              ladder — all behavior-neutral
+              ladder, calibration ledger joining plan-time predictions
+              against measured migration outcomes (+ per-move decision
+              provenance) — all behavior-neutral
 """
 
 from .events import (  # noqa: F401
@@ -67,12 +69,18 @@ from .executor import (  # noqa: F401
 )
 from .obs import (  # noqa: F401
     BurnRateDetector,
+    CalibrationDrift,
+    CalibrationLedger,
+    DriftDetector,
     MetricsRegistry,
+    MovePrediction,
+    MoveProvenance,
     NullTracer,
     SloBreach,
     SloConfig,
     SloMonitor,
     SpanTracer,
+    provenance_from_costs,
     validate_trace,
 )
 from .policies import (  # noqa: F401
@@ -106,4 +114,5 @@ from .telemetry import (  # noqa: F401
     PlanStats,
     Telemetry,
     TickRecord,
+    TransferMeasurement,
 )

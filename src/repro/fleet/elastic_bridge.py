@@ -146,6 +146,16 @@ class ElasticBackend:
         """Megabits a migration of ``request`` along ``move`` would copy."""
         raise NotImplementedError
 
+    def predict_phases(self, request: PlacementRequest,
+                       move: Optional[Move] = None) -> Tuple[float, float, float]:
+        """Pure prediction of ``(mbits, snapshot_s, restore_s)`` for a
+        hypothetical migration of ``request`` — what `snapshot` would
+        report, **without** taking one (no registry mutation, no state
+        retained).  The planner's cost model and the runtime's
+        calibration ledger price moves through this, so planning can
+        never perturb the executor's bookkeeping."""
+        return (self.transfer_mbits(request, move), 0.0, 0.0)
+
     def snapshot(self, request: PlacementRequest, move: Move,
                  now: float) -> SnapshotInfo:
         """Checkpoint the job's state; returns what the wire must carry."""
@@ -267,6 +277,18 @@ class SimulatedElasticBackend(ElasticBackend):
     def transfer_mbits(self, request: PlacementRequest, move: Move) -> float:
         nb = self._state_nbytes(request)
         return self.default_state_mb * 8.0 if nb is None else nb * 8.0 / 1e6
+
+    def predict_phases(self, request: PlacementRequest,
+                       move: Optional[Move] = None) -> Tuple[float, float, float]:
+        """Exactly the numbers `snapshot` would produce — same byte count,
+        shard layout, and host-phase model — but read-only (nothing lands
+        in ``snapshots``)."""
+        nb = self._state_nbytes(request)
+        if nb is None:
+            return (self.default_state_mb * 8.0, 0.0, 0.0)
+        from repro.ckpt import shard_count          # deferred: pulls in jax
+        host = self._host_s(nb, shard_count(nb))
+        return (nb * 8.0 / 1e6, host, host)
 
     def snapshot(self, request: PlacementRequest, move: Move,
                  now: float) -> SnapshotInfo:

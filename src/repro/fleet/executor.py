@@ -72,7 +72,7 @@ from .elastic_bridge import (
     pipeline_downtime,
 )
 from .events import EventQueue, MigrationComplete, MigrationStart
-from .telemetry import MigrationRecord
+from .telemetry import MigrationRecord, TransferMeasurement
 
 
 # --------------------------------------------------------------- transfers
@@ -146,6 +146,9 @@ class MigrationExecutor:
         self.active: Dict[int, Transfer] = {}
         self.waiting: List[Move] = []        # accepted, not yet transferring
         self.records: List[MigrationRecord] = []
+        # Measured transfer facts, index-aligned with ``records`` — the
+        # "actual" side of the calibration join (obs.calibration).
+        self.measurements: List[TransferMeasurement] = []
         self.moves_dropped = 0               # accepted moves never executed
         self._gen = 0
 
@@ -162,6 +165,18 @@ class MigrationExecutor:
             for lid in tr.links:
                 counts[lid] = counts.get(lid, 0) + 1
         return counts
+
+    def _measure(self, engine: PlacementEngine,
+                 tr: Transfer) -> TransferMeasurement:
+        """Freeze one retiring transfer's measured facts, appended
+        index-aligned with its `MigrationRecord`."""
+        links = engine.topo.links
+        uncont = min((links[lid].bandwidth_mbps
+                      for lid in tr.links if lid in links), default=100.0)
+        return TransferMeasurement(
+            req_id=tr.req_id, mbits=tr.snapshot.mbits,
+            nbytes=tr.snapshot.nbytes, n_shards=tr.snapshot.n_shards,
+            links=tr.links, uncontended_mbps=uncont)
 
     # ------------------------------------------------------------ plan API
     def begin(
@@ -218,6 +233,7 @@ class MigrationExecutor:
                               snapshot_s=snap_s, transfer_s=transfer_s,
                               restore_s=restore_s)
         self.records.append(rec)
+        self.measurements.append(self._measure(engine, tr))
         self._reschedule(engine, now, events)
         self._pump(engine, now, events)
         return rec
@@ -239,6 +255,7 @@ class MigrationExecutor:
         self.records.append(MigrationRecord(
             tr.req_id, tr.mode, "aborted", tr.started_s, now, down,
             snapshot_s=snap_s, transfer_s=transfer_s, restore_s=restore_s))
+        self.measurements.append(self._measure(engine, tr))
 
     def on_node_failure(
         self,
@@ -332,6 +349,7 @@ class MigrationExecutor:
                 req_id, tr.mode, "cancelled", tr.started_s, now, down,
                 snapshot_s=snap_s, transfer_s=transfer_s,
                 restore_s=restore_s))
+            self.measurements.append(self._measure(engine, tr))
         for mv in list(self.waiting):
             if mv.req_id == req_id:
                 self.waiting.remove(mv)

@@ -23,7 +23,10 @@ giving up the satisfaction objective:
   horizon         — rolling-horizon policy wrapper planning against the
                     forecast instead of the instantaneous snapshot
   migration_cost  — price each candidate move's transfer time (executor
-                    ledger contention included) into the move penalty
+                    ledger contention included) into the move penalty;
+                    sizes come from the elastic backend for apps that
+                    declare state, and — with ``RuntimeConfig.
+                    cost_feedback`` — from calibration-ledger measurements
 
 Importing this package registers the ``decomposed``, ``incremental`` and
 ``horizon`` policies in `fleet.policies.POLICIES`; `repro.fleet` imports

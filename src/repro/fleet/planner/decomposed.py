@@ -231,8 +231,8 @@ class DecomposedPolicy(ReconfigPolicy):
                 and self._tick_cache is not None
                 and self._engine is engine
                 and engine.journal.total == self._cursor):
-            c_window, c_norm, c_moves, c_sat, c_s_after, c_accepted, c_stats \
-                = self._tick_cache
+            (c_window, c_norm, c_moves, c_sat, c_s_after, c_accepted,
+             c_stats, c_prov) = self._tick_cache
             if c_window == tuple(window) and c_norm == norm:
                 self.last_dirty_regions = set()
                 self.last_plan_stats = dataclasses.replace(
@@ -243,7 +243,8 @@ class DecomposedPolicy(ReconfigPolicy):
                 return ReconfigResult(
                     list(window), list(c_moves), c_sat,
                     2.0 * len(c_sat), c_s_after, c_accepted, None,
-                    time.perf_counter() - t0, weights=norm)
+                    time.perf_counter() - t0, weights=norm,
+                    provenance=c_prov)
         batch_ctx = self._window_costs(engine, window, norm)
         ctx, costv, movers = batch_ctx.ctx, batch_ctx.costv, batch_ctx.movers
         tree = self.tree_for(engine.topo)
@@ -444,11 +445,13 @@ class DecomposedPolicy(ReconfigPolicy):
         )
         result = _result_from_batch(window, batch_ctx, assignment,
                                     self.accept_threshold, t0, norm)
+        self._attach_provenance(result, ctx, assignment, norm, costv=costv)
         if self.incremental and n_feasible == 0:
             # Deadline incumbents are wall-clock artifacts — never replay.
             self._tick_cache = (tuple(window), norm, tuple(result.moves),
                                 result.satisfaction, result.s_after,
-                                result.accepted, self.last_plan_stats)
+                                result.accepted, self.last_plan_stats,
+                                result.provenance)
         else:
             self._tick_cache = None
         return result

@@ -20,7 +20,7 @@ it is deterministic, so it participates in telemetry fingerprints.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 AGG_PEAK = "peak"
 AGG_MEAN = "mean"
@@ -49,6 +49,9 @@ class DemandForecaster:
         self.agg = agg
         self.last: Optional[Forecast] = None
         self.last_error: Optional[float] = None
+        # (predicted, realized) rate pairs behind ``last_error`` — the
+        # calibration ledger's per-app forecast-drift input.
+        self.last_residuals: List[Tuple[float, float]] = []
 
     def forecast(
         self,
@@ -75,10 +78,14 @@ class DemandForecaster:
         return out
 
     def _score(self, realized: Optional[Mapping[int, float]]) -> Optional[float]:
+        self.last_residuals = []
         if self.last is None or not realized:
             return None
-        errs = [abs(pred - realized[r]) / max(abs(realized[r]), 1e-9)
-                for r, pred in self.last.predicted.items() if r in realized]
-        if not errs:
+        pairs = [(pred, realized[r])
+                 for r, pred in self.last.predicted.items() if r in realized]
+        if not pairs:
             return None
+        self.last_residuals = pairs
+        errs = [abs(pred - real) / max(abs(real), 1e-9)
+                for pred, real in pairs]
         return sum(errs) / len(errs)

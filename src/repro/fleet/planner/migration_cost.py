@@ -18,6 +18,21 @@ flat penalty and a copy across a congested backbone scales up with the
 number of transfers already on it — the planner starts preferring cheap,
 idle paths and *deferring* churn toward congested ones, instead of
 pretending the ledger doesn't exist.
+
+Since the calibration PR the *size* side of the estimate is no longer a
+single flat ``state_mb`` guess for every app:
+
+* when a ``request`` is threaded through (`penalty(..., request=...)`)
+  and the bound executor carries an `ElasticBackend`, apps that declare
+  state (``AppProfile.state_mb`` / an attached job) are priced at the
+  backend's own byte count (`ElasticBackend.transfer_mbits`) — the same
+  size model the executor snapshots with, so planner pricing and
+  executor phases can no longer disagree by construction;
+* with the opt-in feedback loop enabled (`enable_feedback`, driven by
+  ``RuntimeConfig.cost_feedback``), measured per-app byte counts from
+  the `CalibrationLedger` take precedence over even the backend's
+  declared sizes — the model converges on what the wire actually
+  carried.
 """
 
 from __future__ import annotations
@@ -40,6 +55,9 @@ class MigrationCostModel:
         self.state_mb = state_mb
         self.time_coef = time_coef   # penalty growth per transfer-second
         self._shares: Dict[str, int] = {}
+        self.backend = None          # ElasticBackend captured from bind()
+        self.ledger = None           # CalibrationLedger (feedback mode)
+        self.feedback = False
         self.bind(executor)
 
     def bind(self, executor) -> None:
@@ -47,14 +65,41 @@ class MigrationCostModel:
         fixed for the duration of a plan (observe() rebinds every tick),
         and penalty() runs once per app-candidate pair — scanning the
         live ledger there would put an O(transfers) walk in the planning
-        hot path."""
+        hot path.  Also captures the executor's elastic backend so sizes
+        can come from the one size model the executor snapshots with."""
         self.executor = executor
         self._shares = executor.link_shares() if executor is not None else {}
+        if executor is not None:
+            self.backend = getattr(executor, "backend", self.backend)
+
+    def enable_feedback(self, backend, ledger) -> None:
+        """Opt in to measurement-driven sizing (``RuntimeConfig.
+        cost_feedback``): the calibration ledger's learned per-app byte
+        counts override the flat/declared belief once an app has
+        completed a migration."""
+        self.backend = backend
+        self.ledger = ledger
+        self.feedback = True
 
     def link_shares(self) -> Dict[str, int]:
         return dict(self._shares)
 
-    def est_transfer_s(self, old: Candidate, new: Candidate) -> float:
+    def _mbits(self, request=None) -> float:
+        """Wire size belief for one app: measured (feedback on, app has
+        history) → backend-declared (app declares state) → flat."""
+        if request is not None:
+            if self.feedback and self.ledger is not None:
+                learned = self.ledger.learned_mbits(request.req_id)
+                if learned is not None:
+                    return learned
+            if self.backend is not None and (
+                    request.app.state_mb is not None
+                    or request.req_id in getattr(self.backend, "_job_bytes", ())):
+                return self.backend.transfer_mbits(request, None)
+        return self.state_mb * 8.0
+
+    def est_transfer_s(self, old: Candidate, new: Candidate,
+                       request=None) -> float:
         """Full state copy over the slowest fair-share link of the move's
         old∪new path (the links `MigrationExecutor` would occupy)."""
         links = {l.link_id: l.bandwidth_mbps for l in old.links}
@@ -63,9 +108,27 @@ class MigrationCostModel:
             (bw / (self._shares.get(lid, 0) + 1) for lid, bw in links.items()),
             default=100.0,
         )
-        return self.state_mb * 8.0 / max(rate, 1e-9)
+        return self._mbits(request) / max(rate, 1e-9)
 
-    def penalty(self, old: Candidate, new: Candidate, base: float) -> float:
+    def est_host_s(self, request=None) -> float:
+        """Snapshot + restore host phases the backend would charge —
+        measured values when the feedback loop has them, else the
+        backend's pure prediction (`ElasticBackend.predict_phases`)."""
+        if request is None:
+            return 0.0
+        if self.feedback and self.ledger is not None:
+            learned = self.ledger.learned_host(request.req_id)
+            if learned is not None:
+                return learned[0] + learned[1]
+        if self.backend is not None:
+            _, snap_s, restore_s = self.backend.predict_phases(request, None)
+            return snap_s + restore_s
+        return 0.0
+
+    def penalty(self, old: Candidate, new: Candidate, base: float,
+                request=None) -> float:
         if new.node.node_id == old.node.node_id:
             return 0.0
-        return base * (1.0 + self.time_coef * self.est_transfer_s(old, new))
+        pipeline_s = self.est_transfer_s(old, new, request) \
+            + self.est_host_s(request)
+        return base * (1.0 + self.time_coef * pipeline_s)

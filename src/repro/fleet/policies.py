@@ -257,7 +257,9 @@ class ReconfigPolicy:
             return 0.0
         if self.cost_model is None:
             return self.move_penalty
-        return self.cost_model.penalty(wa.placed.candidate, cand, self.move_penalty)
+        return self.cost_model.penalty(wa.placed.candidate, cand,
+                                       self.move_penalty,
+                                       request=wa.placed.request)
 
     def _cost(self, wa: _WindowApp, choice: int, w: float = 1.0) -> float:
         """Traffic-weighted eq. (1) summand + migration penalty relative to
@@ -285,6 +287,62 @@ class ReconfigPolicy:
             pens = np.fromiter((self._move_penalty(wa, c) for c in wa.candidates),
                                np.float64, len(wa.candidates))
         return w * ratios + pens
+
+    def _attach_provenance(self, res: ReconfigResult, ctx: List[_WindowApp],
+                           assignment: Sequence[int],
+                           norm: Optional[Dict[int, float]] = None,
+                           costv: Optional[List[np.ndarray]] = None) -> None:
+        """Attach a `MoveProvenance` record per committed move (the "why":
+        objective delta, runner-up + margin, binding constraints — see
+        `obs.provenance`).  O(moves), not O(window): cost vectors are
+        rebuilt only for apps that actually move (or reused from
+        ``costv`` when the planner already has them)."""
+        if not res.accepted or not res.moves:
+            return
+        from .obs.provenance import provenance_from_costs
+        by_req = {wa.placed.req_id: i for i, wa in enumerate(ctx)}
+        prov: Dict[int, object] = {}
+        for mv in res.moves:
+            i = by_req.get(mv.req_id)
+            if i is None:
+                continue
+            wa = ctx[i]
+            w = norm[mv.req_id] if norm else 1.0
+            resp, price, nodes = wa.metric_arrays()
+            raw = w * (resp / wa.placed.response_s
+                       + price / wa.placed.price)
+            costs = costv[i] if costv is not None else self._cost_vector(wa, w)
+            prov[mv.req_id] = provenance_from_costs(
+                mv.req_id, nodes, costs, raw,
+                assignment[i], wa.current_idx)
+        res.provenance = prov
+
+    def _provenance_from_moves(self, engine: PlacementEngine,
+                               window: Sequence[int], res: ReconfigResult,
+                               weights: Optional[Mapping[int, float]]) -> None:
+        """`_attach_provenance` for planners that return moves without an
+        explicit assignment vector (the MILP path): reconstruct each moved
+        app's chosen candidate index from the move's destination node."""
+        if not res.accepted or not res.moves:
+            return
+        norm = normalize_weights(window, weights) if weights is not None else None
+        ctx = _window_context(engine, window)
+        by_req = {wa.placed.req_id: i for i, wa in enumerate(ctx)}
+        assignment = [wa.current_idx for wa in ctx]
+        for mv in res.moves:
+            i = by_req.get(mv.req_id)
+            if i is None:
+                continue
+            wa = ctx[i]
+            nid = mv.new.node.node_id
+            if wa.cset is not None:
+                j = wa.cset.index_of.get(nid, -1)
+            else:
+                j = next((k for k, c in enumerate(wa.candidates)
+                          if c.node.node_id == nid), -1)
+            if j >= 0:
+                assignment[i] = j
+        self._attach_provenance(res, ctx, assignment, norm)
 
     def _batch_cost_vectors(self, ctx: List[_WindowApp],
                             norm: Optional[Dict[int, float]]):
@@ -398,6 +456,7 @@ class MilpPolicy(ReconfigPolicy):
             n_feasible=int(sol is not None and sol.status == "feasible"),
             lp_iterations=sol.lp_iterations if sol is not None else 0,
             bnb_nodes=sol.nodes_explored if sol is not None else 0)
+        self._provenance_from_moves(engine, window, res, weights)
         return res
 
 
@@ -429,8 +488,10 @@ class GreedyPolicy(ReconfigPolicy):
                     best, best_cost = j, cost
             shadow.occupy(app, wa.candidates[best], +1.0)
             assignment.append(best)
-        return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0, norm)
+        res = _result_from_assignment(window, ctx, assignment,
+                                      self.accept_threshold, t0, norm)
+        self._attach_provenance(res, ctx, assignment, norm)
+        return res
 
 
 class HillClimbPolicy(ReconfigPolicy):
@@ -474,8 +535,10 @@ class HillClimbPolicy(ReconfigPolicy):
             shadow.occupy(wa.placed.request.app, wa.candidates[assignment[best_i]], -1.0)
             shadow.occupy(wa.placed.request.app, wa.candidates[best_j], +1.0)
             assignment[best_i] = best_j
-        return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0, norm)
+        res = _result_from_assignment(window, ctx, assignment,
+                                      self.accept_threshold, t0, norm)
+        self._attach_provenance(res, ctx, assignment, norm)
+        return res
 
 
 class GaPolicy(ReconfigPolicy):
@@ -540,8 +603,10 @@ class GaPolicy(ReconfigPolicy):
         if any(v < -1e-9 for v in shadow.node.values()) or any(
                 v < -1e-9 for v in shadow.link.values()):
             assignment = [0] * len(ctx)  # infeasible winner → do nothing
-        return _result_from_assignment(window, ctx, assignment,
-                                       self.accept_threshold, t0, norm)
+        res = _result_from_assignment(window, ctx, assignment,
+                                      self.accept_threshold, t0, norm)
+        self._attach_provenance(res, ctx, assignment, norm)
+        return res
 
 
 class AdaptivePolicy(ReconfigPolicy):

@@ -52,6 +52,7 @@ from .events import (
     RequestRateUpdate,
 )
 from .executor import MigrationExecutor
+from .obs.calibration import CalibrationLedger, MovePrediction
 from .obs.metrics import (
     DEFAULT_FRACTION_BUCKETS,
     DEFAULT_LATENCY_BUCKETS_S,
@@ -93,6 +94,13 @@ class RuntimeConfig:
     # None → the default `SloConfig` (calibrated to stay quiet on healthy
     # runs and burn on sustained degradation).
     slo: Optional[SloConfig] = None
+    # Opt-in calibration feedback (`fleet.obs.calibration`): when True and
+    # the policy carries a `MigrationCostModel`, the model prices moves
+    # with backend-declared byte counts and ledger-measured per-app
+    # corrections instead of the flat `state_mb` belief.  Off (default)
+    # the cost model's behavior — and every scenario fingerprint — is
+    # bit-identical to the pre-calibration code.
+    cost_feedback: bool = False
 
 
 class FleetRuntime:
@@ -136,6 +144,16 @@ class FleetRuntime:
             bind(self.tracer)
         self.metrics = MetricsRegistry()
         self.slo = SloMonitor(self.config.slo)
+        # Calibration ledger (`fleet.obs.calibration`): joins plan-time
+        # predictions against the executor's measured outcomes.  Always on
+        # (deterministic, excluded from fingerprints); feedback into the
+        # cost model is the opt-in part.
+        self.calibration = CalibrationLedger(
+            self.metrics, feedback=self.config.cost_feedback)
+        if self.config.cost_feedback:
+            cm = getattr(self.policy, "cost_model", None)
+            if cm is not None and hasattr(cm, "enable_feedback"):
+                cm.enable_feedback(self.executor.backend, self.calibration)
         # Cursor into the executor's append-only migration ledger: records
         # past it are new since the last drain (tracing the executor from
         # outside keeps the reservation ledger observability-free).
@@ -155,6 +173,7 @@ class FleetRuntime:
         tel.counters["migrations_dropped"] = self.executor.moves_dropped
         tel.migrations = list(self.executor.records)
         tel.metrics = self.metrics.snapshot()
+        tel.calibration = self.calibration.report()
         return tel
 
     def _dispatch(self, ev: Event, events: EventQueue, tel: Telemetry) -> None:
@@ -414,6 +433,7 @@ class FleetRuntime:
                 n_started = self.executor.begin(self.engine, res, self.now,
                                                 events)
                 tel.counters["moves"] += res.n_moved
+                self._record_predictions(res)
         util, util_max = self._utilization()
         # Post-tick fleet satisfaction (weighted mean X+Y over the window):
         # the planned value when the plan was accepted, else the do-nothing
@@ -457,6 +477,55 @@ class FleetRuntime:
             raise AssertionError("occupancy invariants violated after tick")
 
     # -------------------------------------------------------- observability
+    def _record_predictions(self, res) -> None:
+        """Capture the plan's quantified beliefs about each committed move
+        — wire size, phase times, fair-share rate, satisfaction gain — in
+        the calibration ledger, to be joined against the executor's
+        measured `MigrationRecord` when the transfer resolves.
+
+        The prediction mirrors what the *planner* believed, not what the
+        executor knows: with ``cost_feedback`` off that is the flat
+        ``state_mb`` copy with zero host phases (the legacy pricing
+        belief); with feedback on it is the backend's declared phases,
+        overridden by ledger-measured per-app values once available."""
+        shares = self.executor.link_shares()
+        for mv in res.moves:
+            placed = self.engine.placed.get(mv.req_id)
+            if placed is None:
+                continue
+            links = {l.link_id: l.bandwidth_mbps for l in mv.old.links}
+            links.update({l.link_id: l.bandwidth_mbps for l in mv.new.links})
+            uncont = min(links.values(), default=100.0)
+            rate = min((bw / max(shares.get(lid, 1), 1)
+                        for lid, bw in links.items()), default=100.0)
+            if self.config.cost_feedback:
+                mbits, snap_s, rest_s = self.executor.backend.predict_phases(
+                    placed.request, mv)
+                learned = self.calibration.learned_mbits(mv.req_id)
+                if learned is not None:
+                    mbits = learned
+                host = self.calibration.learned_host(mv.req_id)
+                if host is not None:
+                    snap_s, rest_s = host
+            else:
+                mbits = self.executor.state_mb * 8.0
+                snap_s = rest_s = 0.0
+            self.calibration.record_move(MovePrediction(
+                req_id=mv.req_id,
+                t_plan=self.now,
+                mbits=mbits,
+                snapshot_s=snap_s,
+                transfer_s=mbits / max(rate, 1e-9),
+                restore_s=rest_s,
+                rate_mbps=rate,
+                uncontended_mbps=uncont,
+                gain=2.0 - mv.ratio,
+                r_before=mv.old.response_s,
+                p_before=mv.old.price,
+                feedback=self.config.cost_feedback,
+                provenance=(res.provenance or {}).get(mv.req_id),
+            ))
+
     def _observe_tick_metrics(self, rec: TickRecord, stats) -> None:
         m = self.metrics
         m.counter("tick/count").inc()
@@ -492,6 +561,11 @@ class FleetRuntime:
             m.counter("solver/bnb_nodes").inc(stats.bnb_nodes)
             m.histogram("planner/build_s",
                         DEFAULT_LATENCY_BUCKETS_S).observe(stats.build_s)
+        if rec.forecast_error is not None:
+            fc = getattr(self.policy, "forecaster", None)
+            self.calibration.observe_forecast(
+                rec.t, rec.forecast_error,
+                getattr(fc, "last_residuals", None) if fc is not None else None)
 
     def _drain_records(self, tel: Telemetry) -> None:
         """Consume executor ledger rows appended since the last drain:
@@ -510,15 +584,30 @@ class FleetRuntime:
             if rec.outcome == "completed":
                 m.histogram("migration/duration_s",
                             DEFAULT_LATENCY_BUCKETS_S).observe(rec.duration_s)
+            # Predicted-vs-actual join: the executor's measurement
+            # side-channel is index-aligned with its record ledger.
+            meas = (self.executor.measurements[i]
+                    if i < len(self.executor.measurements) else None)
+            pred, _ = self.calibration.observe_record(rec, meas)
+            if pred is not None and rec.outcome == "completed":
+                placed = self.engine.placed.get(rec.req_id)
+                if placed is not None:
+                    realized = 2.0 - (
+                        placed.response_s / max(pred.r_before, 1e-9)
+                        + placed.price / max(pred.p_before, 1e-9))
+                    self.calibration.observe_gain(rec.t_end, pred.gain,
+                                                  realized)
             if self.tracer.enabled:
                 track = f"mig {i}: app {rec.req_id}"
                 snap_end = min(rec.t_start + rec.snapshot_s, rec.t_end)
                 restore_start = max(rec.t_end - rec.restore_s, snap_end)
+                span_args = {"mode": rec.mode, "outcome": rec.outcome,
+                             "downtime_s": rec.downtime_s}
+                if pred is not None and pred.provenance is not None:
+                    span_args["why"] = pred.provenance.to_dict()
                 self.tracer.add_span(
                     f"migrate #{rec.req_id}", "migration", track,
-                    rec.t_start, rec.t_end,
-                    args={"mode": rec.mode, "outcome": rec.outcome,
-                          "downtime_s": rec.downtime_s})
+                    rec.t_start, rec.t_end, args=span_args)
                 self.tracer.add_span("snapshot", "migration", track,
                                      rec.t_start, snap_end)
                 self.tracer.add_span("copy", "migration", track,

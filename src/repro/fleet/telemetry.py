@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .obs.metrics import mean_or_none, weighted_mean_or_none
 
@@ -91,6 +91,24 @@ class MigrationRecord:
     @property
     def duration_s(self) -> float:
         return self.t_end - self.t_start
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferMeasurement:
+    """Executor-measured facts about one migration's transfer, recorded
+    index-aligned with `MigrationRecord` (the executor appends one per
+    retired record).  This is the *actual* side of the calibration join
+    (`obs.calibration.CalibrationLedger`): what really went on the wire,
+    over which links, and how fast the path would have been uncontended —
+    so residuals can separate size-model error from fair-share
+    contention."""
+
+    req_id: int
+    mbits: float                   # measured checkpoint size on the wire
+    nbytes: Optional[int]          # backend byte count (None: flat model)
+    n_shards: int                  # shard layout the bytes crossed in
+    links: Tuple[str, ...]         # path link ids the transfer occupied
+    uncontended_mbps: float        # path bottleneck bandwidth, no sharing
 
 
 @dataclasses.dataclass
@@ -169,6 +187,16 @@ UNFINGERPRINTED_SUMMARY_FIELDS = frozenset({"mean_solver_time_s"})
 #: are wall-clock- or work-derived and therefore dropped wholesale.
 WALL_CLOCK_METRIC_PREFIXES = ("solver/", "planner/")
 
+#: Calibration namespaces: deterministic (two identical runs report
+#: identical residuals — tests assert it) but *about* the run rather
+#: than *of* it, and present only when a prediction ledger is attached —
+#: excluded so attaching calibration can never perturb the behavior
+#: contract, mirroring how tracing is behavior-neutral.
+CALIBRATION_METRIC_PREFIXES = ("calibration/", "forecast/")
+
+UNFINGERPRINTED_METRIC_PREFIXES = (WALL_CLOCK_METRIC_PREFIXES
+                                   + CALIBRATION_METRIC_PREFIXES)
+
 
 @dataclasses.dataclass
 class Telemetry:
@@ -184,6 +212,12 @@ class Telemetry:
     # `obs.metrics.MetricsRegistry.snapshot()` attached by the runtime at
     # the end of the run (empty when run outside a FleetRuntime).
     metrics: Dict = dataclasses.field(default_factory=dict)
+    # `obs.calibration.CalibrationLedger.report()` attached by the runtime
+    # at the end of the run: predicted-vs-actual join counts, drift
+    # records, and per-move provenance.  Deterministic, but excluded from
+    # the fingerprint (like CALIBRATION_METRIC_PREFIXES) so the ledger is
+    # observability *about* the behavior, never part of it.
+    calibration: Dict = dataclasses.field(default_factory=dict)
     counters: Dict[str, int] = dataclasses.field(default_factory=lambda: {
         "arrivals": 0, "admitted": 0, "rejected": 0, "departures": 0,
         "drifts": 0, "drift_evicted": 0, "failures": 0, "recoveries": 0,
@@ -281,6 +315,7 @@ class Telemetry:
             ],
             "slo_breaches": [b.to_dict() for b in self.slo_breaches],
             "metrics": dict(self.metrics),
+            "calibration": dict(self.calibration),
         }
 
     def fingerprint(self) -> str:
@@ -295,13 +330,14 @@ class Telemetry:
         planner."""
         d = self.to_dict()
         d.pop("policy", None)
+        d.pop("calibration", None)
         for key in UNFINGERPRINTED_SUMMARY_FIELDS:
             d["summary"].pop(key, None)
         for t in d["ticks"]:
             for key in UNFINGERPRINTED_TICK_FIELDS:
                 t.pop(key, None)
         d["metrics"] = {k: v for k, v in d["metrics"].items()
-                        if not k.startswith(WALL_CLOCK_METRIC_PREFIXES)}
+                        if not k.startswith(UNFINGERPRINTED_METRIC_PREFIXES)}
         return hashlib.sha256(
             json.dumps(d, sort_keys=True).encode()
         ).hexdigest()

@@ -1,0 +1,401 @@
+"""Calibration observability tests (`repro.fleet.obs.calibration`).
+
+Five contracts:
+  1. behavior-neutrality — the ledger observes without perturbing: with
+     ``cost_feedback`` off, fingerprints are bit-identical to the
+     pre-calibration code (pinned) and flipping the knob on a policy
+     without a cost model changes nothing;
+  2. residual correctness under adversity — aborted/cancelled migrations
+     are excluded from calibration samples, and fair-share contention is
+     attributed to the ledger (``contention_s``), not the size model
+     (``transfer_err_s``);
+  3. drift detection — the EWMA predicted/actual detectors fire on a
+     sustained miscalibration, after warmup, with a cooldown;
+  4. the self-correcting loop — on hetero-expansion the p90 relative
+     error of predicted vs measured migration downtime drops ≥5× with
+     ``cost_feedback`` on (the ISSUE acceptance gate);
+  5. provenance — every committed move carries a "why" record with sane
+     binding flags, margins, and a deterministic report.
+"""
+
+import json
+from types import SimpleNamespace
+
+import pytest
+
+from repro.fleet import (
+    CalibrationLedger,
+    DriftDetector,
+    MigrationCostModel,
+    MigrationRecord,
+    MoveProvenance,
+    SimulatedElasticBackend,
+    TransferMeasurement,
+    build_scenario,
+    get_policy,
+    provenance_from_costs,
+)
+from repro.fleet.obs.calibration import MovePrediction
+from repro.fleet.obs.metrics import MetricsRegistry
+from repro.fleet.telemetry import (
+    CALIBRATION_METRIC_PREFIXES,
+    UNFINGERPRINTED_METRIC_PREFIXES,
+)
+
+
+def _run(scenario, policy="greedy", seed=0, feedback=False, cost_model=None,
+         backend=None, **kw):
+    spec = build_scenario(scenario, seed=seed, **kw)
+    spec.config.cost_feedback = feedback
+    if backend is not None:
+        spec.config.elastic_backend = backend
+    pol = (get_policy(policy, cost_model=cost_model) if cost_model is not None
+           else get_policy(policy))
+    rt = spec.make_runtime(pol)
+    tel = rt.run(spec.event_queue(), scenario=scenario, seed=seed)
+    return rt, tel
+
+
+def _pred(req_id=7, mbits=512.0, snapshot_s=0.0, transfer_s=5.12,
+          restore_s=0.0, **kw):
+    base = dict(req_id=req_id, t_plan=10.0, mbits=mbits,
+                snapshot_s=snapshot_s, transfer_s=transfer_s,
+                restore_s=restore_s, rate_mbps=100.0,
+                uncontended_mbps=100.0, gain=0.05, r_before=1.0,
+                p_before=1.0, feedback=False)
+    base.update(kw)
+    return MovePrediction(**base)
+
+
+def _rec(req_id=7, outcome="completed", mode="stop_and_copy",
+         snapshot_s=0.0, transfer_s=5.12, restore_s=0.0, downtime_s=None):
+    if downtime_s is None:
+        downtime_s = snapshot_s + transfer_s + restore_s
+    return MigrationRecord(req_id=req_id, mode=mode, outcome=outcome,
+                           t_start=10.0, t_end=10.0 + transfer_s,
+                           downtime_s=downtime_s, snapshot_s=snapshot_s,
+                           transfer_s=transfer_s, restore_s=restore_s)
+
+
+def _meas(req_id=7, mbits=512.0, uncontended_mbps=100.0):
+    return TransferMeasurement(req_id=req_id, mbits=mbits, nbytes=None,
+                               n_shards=1, links=("l1",),
+                               uncontended_mbps=uncontended_mbps)
+
+
+class TestDriftDetector:
+    def test_fires_on_sustained_miscalibration_after_warmup(self):
+        det = DriftDetector("transfer_mbits", band=1.5, min_samples=5)
+        fired = [det.observe(float(t), 512.0, 2048.0) for t in range(6)]
+        assert all(d is None for d in fired[:4])   # warmup
+        drift = next(d for d in fired if d is not None)
+        assert drift.family == "transfer_mbits"
+        assert drift.ewma_ratio < 1.0 / 1.5
+        assert drift.n_samples >= 5
+
+    def test_in_band_never_fires(self):
+        det = DriftDetector("downtime", band=1.5)
+        assert all(det.observe(float(t), 1.0, 1.1) is None
+                   for t in range(50))
+
+    def test_cooldown_rate_limits_a_stale_regime(self):
+        det = DriftDetector("downtime", band=1.5, min_samples=5, cooldown=20)
+        drifts = [d for t in range(30)
+                  if (d := det.observe(float(t), 4.0, 1.0)) is not None]
+        assert len(drifts) == 2   # t=4 (5th sample) and 20 samples later
+
+    def test_band_must_exceed_one(self):
+        with pytest.raises(ValueError):
+            DriftDetector("x", band=1.0)
+
+
+class TestLedgerJoins:
+    def test_completed_record_joins_and_learns(self):
+        led = CalibrationLedger(MetricsRegistry())
+        led.record_move(_pred())
+        pred, drifts = led.observe_record(_rec(), _meas())
+        assert pred is not None and led.samples == 1
+        assert led.learned_mbits(7) == 512.0
+        assert led.learned_host(7) == (0.0, 0.0)
+        assert led.pending == 0
+
+    def test_aborted_and_cancelled_are_excluded_not_sampled(self):
+        led = CalibrationLedger(MetricsRegistry())
+        for outcome in ("aborted", "cancelled"):
+            led.record_move(_pred())
+            pred, drifts = led.observe_record(_rec(outcome=outcome), _meas())
+            assert pred is not None and drifts == []
+        assert led.samples == 0 and led.excluded == 2
+        assert led.learned_mbits(7) is None
+        # No residual histograms were fed by the partial pipelines.
+        assert led.metrics.histogram(
+            "calibration/downtime_rel_err").count == 0
+
+    def test_record_without_prediction_is_unmatched(self):
+        led = CalibrationLedger(MetricsRegistry())
+        pred, drifts = led.observe_record(_rec())
+        assert pred is None and drifts == []
+        assert led.unmatched == 1 and led.samples == 0
+
+    def test_pending_predictions_queue_fifo_per_app(self):
+        led = CalibrationLedger(MetricsRegistry())
+        led.record_move(_pred(mbits=100.0))
+        led.record_move(_pred(mbits=200.0))
+        assert led.pending == 2
+        first, _ = led.observe_record(_rec(outcome="cancelled"))
+        second, _ = led.observe_record(_rec())
+        assert (first.mbits, second.mbits) == (100.0, 200.0)
+        assert led.pending == 0
+
+    def test_contention_attributed_to_ledger_not_model(self):
+        led = CalibrationLedger(MetricsRegistry())
+        # Exact byte model (pred.mbits == measured mbits), but the wire
+        # ran at half the uncontended rate: ideal 5.12 s, measured 10.24 s.
+        led.record_move(_pred(mbits=512.0, transfer_s=5.12))
+        led.observe_record(_rec(transfer_s=10.24), _meas(mbits=512.0))
+        assert led.contention_s_total == pytest.approx(5.12)
+        # The size model's own error is ~0 — contention did not leak in.
+        assert led.metrics.histogram(
+            "calibration/transfer_err_s").percentile(0.99) <= 0.005
+
+    def test_downtime_repriced_under_executor_mode(self):
+        led = CalibrationLedger(MetricsRegistry())
+        # Prediction was priced stop-and-copy-style but the executor ran
+        # precopy: the rel-err must score against the precopy formula
+        # (0.05·transfer + restore), not the full pipeline.
+        led.record_move(_pred(transfer_s=10.0, restore_s=1.0))
+        led.observe_record(_rec(mode="precopy", transfer_s=10.0,
+                                restore_s=1.0, downtime_s=1.5))
+        h = led.metrics.histogram("calibration/downtime_rel_err")
+        assert h.count == 1 and h.percentile(0.5) <= 0.001
+
+    def test_forecast_residuals_feed_drift_family(self):
+        led = CalibrationLedger(MetricsRegistry(), min_samples=3)
+        drifts = []
+        for t in range(5):
+            drifts += led.observe_forecast(
+                float(t), 0.5, residuals=[(4.0, 1.0)])
+        assert any(d.family == "forecast_rate" for d in drifts)
+        assert led.metrics.histogram("forecast/error").count == 5
+
+    def test_report_is_deterministic_and_json_ready(self):
+        def build():
+            led = CalibrationLedger(MetricsRegistry())
+            led.record_move(_pred(provenance=MoveProvenance(
+                7, "a", "b", 0.1, "c", 0.02, False, True)))
+            led.observe_record(_rec(), _meas())
+            return led.report()
+        a, b = build(), build()
+        assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+        assert a["provenance"]["budget_binding"] == 1
+
+
+class TestProvenance:
+    def test_clear_winner_is_neither_price_nor_budget_binding(self):
+        p = provenance_from_costs(1, ["n0", "n1", "n2"],
+                                  [2.0, 1.5, 1.9], [1.99, 1.49, 1.89],
+                                  chosen_idx=1, current_idx=0)
+        assert p.node_from == "n0" and p.node_to == "n1"
+        assert not p.price_binding and not p.budget_binding
+        assert p.objective_delta == pytest.approx(0.5)
+        assert p.runner_up == "n2" and p.margin == pytest.approx(0.4)
+
+    def test_price_binding_when_penalty_flips_the_argmin(self):
+        # Unpenalized optimum is n1; the migration price makes staying on
+        # n0 the penalized optimum.
+        p = provenance_from_costs(1, ["n0", "n1"],
+                                  [2.0, 2.1], [2.0, 1.8],
+                                  chosen_idx=0, current_idx=0)
+        assert p.price_binding and not p.budget_binding
+
+    def test_budget_binding_when_a_cheaper_candidate_was_not_chosen(self):
+        p = provenance_from_costs(1, ["n0", "n1", "n2"],
+                                  [2.0, 1.2, 1.6], [2.0, 1.2, 1.6],
+                                  chosen_idx=2, current_idx=0)
+        assert p.budget_binding
+
+    def test_every_committed_move_gets_a_record(self):
+        rt, tel = _run("node-outage", n_arrivals=120)
+        prov = tel.calibration["provenance"]
+        assert prov["moves"] == tel.counters["moves"] > 0
+        for rec in prov["records"]:
+            assert rec["node_from"] != rec["node_to"]
+            assert isinstance(rec["price_binding"], bool)
+            assert isinstance(rec["budget_binding"], bool)
+            assert rec["margin"] >= 0.0
+
+
+class TestRuntimeIntegration:
+    def test_every_record_is_joined_or_classified(self):
+        rt, tel = _run("node-outage", n_arrivals=120)
+        c = tel.calibration
+        assert c["unmatched"] == 0
+        assert c["samples"] == tel.counters["migrations_completed"]
+        assert (c["samples"] + c["excluded"] + c["pending"]
+                == tel.counters["moves"])
+
+    def test_adversity_excludes_aborted_migrations(self):
+        rt, tel = _run("node-outage")
+        c = tel.calibration
+        assert tel.counters["migrations_aborted"] > 0
+        assert tel.counters["migrations_cancelled"] > 0
+        assert c["excluded"] > 0
+        assert c["samples"] == tel.counters["migrations_completed"]
+
+    def test_calibration_report_deterministic_across_runs(self):
+        reports = [json.dumps(_run("node-outage", n_arrivals=120)[1]
+                              .calibration, sort_keys=True)
+                   for _ in range(2)]
+        assert reports[0] == reports[1]
+
+    def test_miscalibrated_backend_fires_drift(self):
+        # Backend bytes 4× the executor's flat 64 MB pricing belief.
+        rt, tel = _run("node-outage", n_arrivals=150,
+                       backend=SimulatedElasticBackend(default_state_mb=256.0))
+        assert len(tel.calibration["drifts"]) > 0
+        assert any(d["family"] == "transfer_mbits"
+                   for d in tel.calibration["drifts"])
+
+    def test_forecast_error_lands_in_registry(self):
+        rt, tel = _run("diurnal-streams", policy="horizon", n_arrivals=200)
+        assert rt.metrics.histogram("forecast/error").count > 0
+
+
+class TestFingerprintNeutrality:
+    # Fingerprints of the greedy seed-0 cells, computed at the commit
+    # before the calibration ledger landed.  The ledger must observe
+    # without perturbing: a behavior change here is a regression (or a
+    # deliberate planner change — then re-pin).
+    PINNED = {
+        "node-outage":
+            "b3f55e96bb70406c093808c74b092a7ab82746ad37a84ae3dfa3b15eba9bce29",
+        "hetero-expansion":
+            "a4e818d1114c678080632b618da7af892b95893a9e27403a5130733894b02663",
+        "flash-crowd":
+            "2cfebce54e30a4223648853da45868bdae30345099249f3bff84d5ee0d2e0b52",
+    }
+
+    @pytest.mark.parametrize("scenario", sorted(PINNED))
+    def test_feedback_off_matches_pre_calibration_pin(self, scenario):
+        rt, tel = _run(scenario)
+        assert tel.fingerprint() == self.PINNED[scenario]
+
+    def test_feedback_knob_alone_does_not_move_the_fingerprint(self):
+        fps = [_run("node-outage", n_arrivals=150, feedback=fb,
+                    backend=SimulatedElasticBackend(default_state_mb=256.0)
+                    )[1].fingerprint()
+               for fb in (False, True)]
+        assert fps[0] == fps[1]
+
+    def test_calibration_metrics_excluded_from_fingerprint(self):
+        assert "calibration/" in CALIBRATION_METRIC_PREFIXES
+        assert "forecast/" in CALIBRATION_METRIC_PREFIXES
+        for p in CALIBRATION_METRIC_PREFIXES:
+            assert p in UNFINGERPRINTED_METRIC_PREFIXES
+        rt, tel = _run("node-outage", n_arrivals=120)
+        assert any(k.startswith("calibration/") for k in tel.metrics)
+        fp_doc = dict(tel.to_dict())
+        # fingerprint() drops the calibration report and the calibration/
+        # + forecast/ metric families before hashing.
+        assert "calibration" in fp_doc
+        tel2 = _run("node-outage", n_arrivals=120)[1]
+        tel2.calibration = {}
+        assert tel.fingerprint() == tel2.fingerprint()
+
+
+class TestCostModelSizing:
+    """Satellite: `MigrationCostModel.transfer_time` no longer duplicates
+    the size model — declared-state apps are priced at backend bytes."""
+
+    def _request(self, req_id=1, state_mb=None):
+        return SimpleNamespace(req_id=req_id,
+                               app=SimpleNamespace(state_mb=state_mb))
+
+    def test_declared_state_priced_at_backend_bytes(self):
+        model = MigrationCostModel(state_mb=64.0)
+        model.backend = SimulatedElasticBackend()
+        assert model._mbits(self._request(state_mb=1536.0)) == \
+            pytest.approx(1536.0 * 8.0)
+
+    def test_undeclared_state_keeps_the_flat_belief(self):
+        model = MigrationCostModel(state_mb=64.0)
+        model.backend = SimulatedElasticBackend()
+        assert model._mbits(self._request()) == pytest.approx(64.0 * 8.0)
+        assert model._mbits(None) == pytest.approx(64.0 * 8.0)
+
+    def test_attached_job_priced_at_job_bytes(self):
+        backend = SimulatedElasticBackend()
+        backend.attach_job(5, state_bytes=10 ** 9)
+        model = MigrationCostModel(state_mb=64.0)
+        model.backend = backend
+        assert model._mbits(self._request(req_id=5)) == \
+            pytest.approx(10 ** 9 * 8.0 / 1e6)
+
+    def test_feedback_prefers_ledger_measurements(self):
+        led = CalibrationLedger(MetricsRegistry())
+        led.record_move(_pred(req_id=5, mbits=512.0))
+        led.observe_record(_rec(req_id=5), _meas(req_id=5, mbits=4096.0))
+        model = MigrationCostModel(state_mb=64.0)
+        model.enable_feedback(SimulatedElasticBackend(), led)
+        assert model._mbits(self._request(req_id=5)) == pytest.approx(4096.0)
+        assert model.est_host_s(self._request(req_id=5)) == \
+            pytest.approx(0.0)
+
+    def test_predict_phases_is_read_only(self):
+        backend = SimulatedElasticBackend()
+        req = self._request(req_id=9, state_mb=128.0)
+        mbits, snap_s, restore_s = backend.predict_phases(req)
+        assert mbits == pytest.approx(128.0 * 8.0)
+        assert snap_s > 0.0 and restore_s > 0.0
+        assert backend.snapshots == {} and backend._job_bytes == {}
+
+    def test_bare_penalty_signature_unchanged(self):
+        # Pre-calibration callers pass no request: flat behavior exactly.
+        model = MigrationCostModel(state_mb=64.0)
+        node = SimpleNamespace(node_id="n1")
+        link = SimpleNamespace(link_id="l1", bandwidth_mbps=100.0)
+        old = SimpleNamespace(node=node, links=[link])
+        new = SimpleNamespace(node=SimpleNamespace(node_id="n2"),
+                              links=[link])
+        assert model.penalty(old, new, 0.01) == \
+            pytest.approx(0.01 * (1.0 + 0.01 * 5.12))
+
+
+class TestSelfCorrectingLoop:
+    def test_hetero_expansion_p90_downtime_error_drops_5x(self):
+        """The ISSUE acceptance gate: predicted-vs-measured migration
+        downtime p90 relative error improves ≥5× with cost_feedback."""
+        def p90(feedback):
+            cm = MigrationCostModel() if feedback else None
+            rt, tel = _run("hetero-expansion", feedback=feedback,
+                           cost_model=cm)
+            assert tel.calibration["samples"] > 0
+            return rt.metrics.histogram(
+                "calibration/downtime_rel_err").percentile(0.9)
+        off, on = p90(False), p90(True)
+        assert off / max(on, 1e-9) >= 5.0
+
+    def test_feedback_converges_the_size_belief(self):
+        rt, tel = _run("node-outage", n_arrivals=150, feedback=True,
+                       backend=SimulatedElasticBackend(default_state_mb=256.0))
+        c = tel.calibration
+        assert c["feedback"] is True and c["samples"] > 0
+        assert len(c["drifts"]) == 0   # predictions match the backend
+        h = rt.metrics.histogram("calibration/transfer_mbits_ratio")
+        assert h.percentile(0.5) == pytest.approx(1.0, abs=0.05)
+
+
+class TestBenchColumns:
+    def test_rows_carry_calibration_columns(self):
+        import sys
+        from pathlib import Path
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+        from benchmarks.bench_fleet import _cell
+        row = _cell("node-outage", "greedy", 0, with_ticks=False,
+                    scenario_kwargs={"n_arrivals": 120})
+        assert row["cost_feedback"] is False
+        assert row["calib_samples"] == row["migrations_completed"]
+        assert "calib_drifts" in row and "calib_excluded" in row
+        for q in ("p50", "p90", "p99"):
+            assert f"{q}_calib_downtime_err" in row
+            assert f"{q}_forecast_error" in row
