@@ -95,6 +95,7 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
     # predicted-vs-actual joins landed, how many drift detectors fired.
     calib = d.get("calibration") or {}
     row["cost_feedback"] = bool(spec.config.cost_feedback)
+    row["admission_mode"] = spec.config.admission_mode
     row["calib_samples"] = calib.get("samples", 0)
     row["calib_excluded"] = calib.get("excluded", 0)
     row["calib_drifts"] = len(calib.get("drifts", ()))
@@ -234,6 +235,120 @@ def planetary_rows(seed: int = 0, n_ticks: int = 5) -> List[Dict]:
     return rows
 
 
+def admission_rows(seed: int = 0, scales: Sequence[int] = (64, 256),
+                   apps_factor: int = 440,
+                   decide_samples: int = 4000) -> List[Dict]:
+    """Admission fast-path microbench: one row per scale comparing the
+    vectorized arrival path (array ledger + chain-template decision cache)
+    against the retained scalar reference loop on the identical request
+    stream.
+
+    Two measurements per row, both with GC disabled during timing:
+
+    * **end to end** — per-arrival ``place()`` wall time (p50/p99,
+      arrivals/sec) for each mode on its own engine.  The commit
+      bookkeeping (registry, journal, reverse indexes) is identical by
+      design in both modes, so this ratio is bounded by the shared tail.
+    * **decision phase** — ``decide_scalar`` vs ``_decide`` interleaved on
+      the same fully warmed engine (identical occupancy), probing a
+      deterministic slice of the stream.  This isolates the part the
+      vectorization actually replaces; the CI ≥5× speedup gate rides it.
+
+    Every probe asserts decision parity, and the two end-to-end engines
+    must agree app-for-app on placement — the admission rows double as a
+    scalar↔vector behavior-parity harness at planetary scale."""
+    import gc
+    import statistics
+
+    import numpy as np
+
+    from repro.core import PlacementEngine, build_paper_topology, sample_requests
+
+    rows: List[Dict] = []
+    for scale in scales:
+        topo = build_paper_topology(scale=scale)
+        reqs = sample_requests(topo, apps_factor * scale,
+                               np.random.default_rng(seed))
+        per: Dict[str, Dict] = {}
+        engines: Dict[str, PlacementEngine] = {}
+        gc_was = gc.isenabled()
+        for mode in ("scalar", "vector"):
+            eng = PlacementEngine(topo, admission_mode=mode)
+            times: List[float] = []
+            gc.disable()
+            try:
+                t_run = time.perf_counter()
+                for r in reqs:
+                    t0 = time.perf_counter()
+                    eng.place(r)
+                    times.append(time.perf_counter() - t0)
+                total = time.perf_counter() - t_run
+            finally:
+                if gc_was:
+                    gc.enable()
+            times.sort()
+            per[mode] = {
+                "p50": times[len(times) // 2],
+                "p99": times[int(len(times) * 0.99)],
+                "total": total,
+            }
+            engines[mode] = eng
+        es, ev = engines["scalar"], engines["vector"]
+        assert len(es.placed) == len(ev.placed), "admission parity: counts"
+        assert all(es.placed[r].candidate.node.node_id
+                   == ev.placed[r].candidate.node.node_id
+                   for r in es.placed), "admission parity: placements"
+        assert es.node_used == ev.node_used, "admission parity: ledgers"
+        # Decision phase on the warmed vector engine: both functions are
+        # pure (no occupancy mutation), so interleaving them probes the
+        # same state.
+        step = max(1, len(reqs) // decide_samples)
+        t_sc: List[float] = []
+        t_vec: List[float] = []
+        gc.disable()
+        try:
+            for r in reqs[::step]:
+                t0 = time.perf_counter()
+                a = ev.decide_scalar(r)
+                t1 = time.perf_counter()
+                b = ev._decide(r)
+                t2 = time.perf_counter()
+                t_sc.append(t1 - t0)
+                t_vec.append(t2 - t1)
+                assert (a is None) == (b is None), "decide parity"
+                if a is not None:
+                    assert a == b, "decide parity: candidate"
+        finally:
+            if gc_was:
+                gc.enable()
+        d50_s = statistics.median(t_sc)
+        d50_v = statistics.median(t_vec)
+        rows.append({
+            "benchmark": "admission",
+            "scenario": "admission-fast-path",
+            "policy": "engine",
+            "seed": seed,
+            "scale": scale,
+            "arrivals": len(reqs),
+            "placed": len(ev.placed),
+            "rejected": ev.rejected_total,
+            "p50_place_s": round(per["vector"]["p50"], 9),
+            "p99_place_s": round(per["vector"]["p99"], 9),
+            "p50_place_scalar_s": round(per["scalar"]["p50"], 9),
+            "p99_place_scalar_s": round(per["scalar"]["p99"], 9),
+            "arrivals_per_s": round(len(reqs) / per["vector"]["total"], 1),
+            "arrivals_per_s_scalar": round(
+                len(reqs) / per["scalar"]["total"], 1),
+            "place_speedup_p50": round(
+                per["scalar"]["p50"] / max(per["vector"]["p50"], 1e-12), 2),
+            "decide_p50_scalar_s": round(d50_s, 9),
+            "decide_p50_vector_s": round(d50_v, 9),
+            "decide_speedup_p50": round(d50_s / max(d50_v, 1e-12), 2),
+            "decide_probes": len(t_sc),
+        })
+    return rows
+
+
 def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     """CI sanity slice: fast cells with every moving part exercised
     (request streams, in-flight migrations, adaptive switching, the
@@ -279,6 +394,13 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
               backend=FlatStateBackend(64.0)),
         # … and byte-derived phase timings on declared-state jobs.
         _cell("hetero-expansion", "greedy", seed, with_ticks=False),
+        # Admission-mode parity smoke: the same cell as the first row but
+        # with the scalar reference admission loop — the driver gates the
+        # two fingerprints bit-identical (the vectorized fast path is pure
+        # mechanism).
+        _cell("paper-steady-state", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_arrivals": 250},
+              config_kwargs={"admission_mode": "scalar"}),
         # SLO observe→act: breaches must escalate the adaptive ladder.
         _cell("site-outage", "adaptive", seed, with_ticks=False,
               scenario_kwargs={"n_arrivals": 150},

@@ -8,15 +8,18 @@
 Default mode prints ``name,key=value,...`` CSV rows for every section.
 ``--json`` runs the fleet sweep (scale ×1 scenario × policy grid, the
 ×2/×4/×8 solver-scaling sweep with 400×scale windows, a ×32 planetary
-slice under the hierarchical planner, and ×64/×256 steady-tick rows with
-a >100k-app window) and writes machine-readable rows to
-``BENCH_fleet.json``.  ``--smoke`` runs a CI sanity slice (request
+slice under the hierarchical planner, ×64/×256 steady-tick rows with
+a >100k-app window, and the ×64/×256 admission fast-path microbench —
+scalar vs vectorized arrival path with a ≥5× decision-phase gate) and
+writes machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a CI sanity slice (request
 streams + adaptive policy, a backbone cut, the decomposed/incremental
 planners at ``--scale`` — plus, at ``--scale`` ≥ 16, the hierarchical
 planner with a fingerprint-parity gate and a steady-tick latency budget —
 the elastic-bridge cells: simulated-vs-flat fingerprint parity plus
-byte-derived phase timings on hetero-expansion, an SLO burn-rate →
-policy-escalation cell, a calibration cell pair (drift detectors must
+byte-derived phase timings on hetero-expansion, a scalar-vs-vector
+admission-mode fingerprint-parity cell (plus, at ``--scale`` ≥ 16, the
+admission fast-path microbench with its ≥5× decision-phase speedup and
+arrival-throughput gates), an SLO burn-rate → policy-escalation cell, a calibration cell pair (drift detectors must
 catch a 4×-miscalibrated size model, ``cost_feedback`` must collapse the
 downtime prediction error without perturbing the behavior fingerprint),
 and a traced run validated against the Chrome trace_event schema) and
@@ -71,6 +74,7 @@ def run_json(out_path: str, seed: int) -> int:
         DEFAULT_POLICIES,
         SCALE_SWEEP_POLICIES,
         SCALE_SWEEP_SCALES,
+        admission_rows,
         calibration_rows,
         planetary_rows,
         scale_sweep,
@@ -92,6 +96,7 @@ def run_json(out_path: str, seed: int) -> int:
                                          "hierarchical"))
     steady += planetary_rows(seed=seed)
     calib = calibration_rows(seed=seed)
+    admission = admission_rows(seed=seed)
     doc = {
         "benchmark": "fleet_runtime",
         "seed": seed,
@@ -101,13 +106,30 @@ def run_json(out_path: str, seed: int) -> int:
         "rows": rows + scaled,
         "steady_tick": steady,
         "calibration": calib,
+        "admission": admission,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {out_path}: {len(rows)} scale-1 rows + "
           f"{len(scaled)} scale-sweep rows + {len(steady)} steady-tick rows + "
-          f"{len(calib)} calibration rows")
+          f"{len(calib)} calibration rows + {len(admission)} admission rows")
     ok = 0
+    # Admission fast-path acceptance: the vectorized decision phase must
+    # beat the scalar reference ≥5× at p50 on the planetary cells (the
+    # rows assert scalar↔vector placement parity internally; end-to-end
+    # p50/p99 ride along as evidence columns).
+    for r in admission:
+        good = r["decide_speedup_p50"] >= 5.0
+        print(f"  admission x{r['scale']}: {r['arrivals']} arrivals, "
+              f"place p50 {r['p50_place_scalar_s'] * 1e6:.1f}us -> "
+              f"{r['p50_place_s'] * 1e6:.1f}us "
+              f"({r['place_speedup_p50']:.1f}x e2e), decide p50 "
+              f"{r['decide_p50_scalar_s'] * 1e6:.1f}us -> "
+              f"{r['decide_p50_vector_s'] * 1e6:.1f}us "
+              f"({r['decide_speedup_p50']:.1f}x) "
+              f"[>=5x: {'OK' if good else 'MISS'}], "
+              f"{r['arrivals_per_s']:.0f} arrivals/s")
+        ok |= 0 if good else 1
     # Calibration acceptance (ISSUE): on hetero-expansion the p90 relative
     # error of predicted vs measured migration downtime must drop ≥5× with
     # the self-correcting cost model (`RuntimeConfig.cost_feedback`) on.
@@ -253,6 +275,28 @@ def run_smoke(seed: int, scale: int) -> int:
         print(f"  steady-tick budget x{scale}: {cols} p50<100ms "
               f"[{'OK' if ok else 'FAIL'}]")
         bad |= 0 if ok else 1
+        # Admission fast-path gates at planetary scale: the vectorized
+        # decision phase (the part the array ledger + decision cache
+        # replace) must beat the retained scalar reference ≥5× at p50,
+        # and end-to-end arrival throughput must clear the budget.  The
+        # cell also asserts scalar↔vector placement parity internally.
+        from benchmarks.bench_fleet import admission_rows
+
+        ad = admission_rows(seed=seed, scales=(scale,),
+                            decide_samples=2000)[0]
+        dec_ok = ad["decide_speedup_p50"] >= 5.0
+        thr_ok = ad["arrivals_per_s"] >= 10_000
+        ok = dec_ok and thr_ok
+        print(f"  admission fast path x{scale}: decide p50 "
+              f"{ad['decide_p50_scalar_s'] * 1e6:.1f}us -> "
+              f"{ad['decide_p50_vector_s'] * 1e6:.1f}us "
+              f"({ad['decide_speedup_p50']:.1f}x) "
+              f"[>=5x: {'OK' if dec_ok else 'FAIL'}], "
+              f"{ad['arrivals_per_s']:.0f} arrivals/s "
+              f"(scalar {ad['arrivals_per_s_scalar']:.0f}) "
+              f"[>=10k/s: {'OK' if thr_ok else 'FAIL'}] "
+              f"[{'OK' if ok else 'FAIL'}]")
+        bad |= 0 if ok else 1
     # Elastic-bridge parity gate: the simulated backend's no-declared-state
     # fallback must be behavior-identical to the flat executor model.
     pair = {r["backend"]: r["fingerprint"] for r in rows
@@ -264,6 +308,20 @@ def run_smoke(seed: int, scale: int) -> int:
         bad |= 0 if same else 1
     else:
         print("  bridge parity pair missing from smoke rows [FAIL]")
+        bad |= 1
+    # Admission-mode parity gate: the vectorized admission fast path must
+    # fingerprint bit-identically to the retained scalar reference loop on
+    # the same scenario cell (pure mechanism, zero behavior drift).
+    pair = {r["admission_mode"]: r["fingerprint"] for r in rows
+            if r["scenario"] == "paper-steady-state"
+            and r["policy"] == "greedy" and r["scale"] == 1}
+    if len(pair) == 2:
+        same = pair["vector"] == pair["scalar"]
+        print(f"  admission parity (scalar vs vector fingerprint): "
+              f"{'OK' if same else 'FAIL'}")
+        bad |= 0 if same else 1
+    else:
+        print("  admission parity pair missing from smoke rows [FAIL]")
         bad |= 1
     # Calibration gates: on the node-outage pair (backend bytes 4× the
     # flat pricing belief) the ledger must flag the miscalibration

@@ -44,6 +44,19 @@ class AppProfile:
     # bytes and snapshot/restore phase times from it.
     state_mb: Optional[float] = None
 
+    def __hash__(self) -> int:
+        # Same value the generated frozen-dataclass __hash__ would produce,
+        # cached: profiles key the admission decision cache, so this is hit
+        # once per arrival at fleet scale.
+        try:
+            return self._cached_hash
+        except AttributeError:
+            h = hash((self.name, self.device_kind, self.device_usage,
+                      self.bandwidth_mbps, self.data_mb, self.proc_time_s,
+                      self.cpu_proc_time_s, self.state_mb))
+            object.__setattr__(self, "_cached_hash", h)
+            return h
+
 
 NAS_FT = AppProfile("NAS.FT", "gpu", 1.0, 2.0, 0.2, 5.8, cpu_proc_time_s=5.8 * 5)
 MRI_Q = AppProfile("MRI-Q", "fpga", 0.1, 1.0, 0.15, 2.0, cpu_proc_time_s=2.0 * 7)
@@ -67,6 +80,26 @@ class Requirement:
             raise ValueError(f"bad objective {self.objective}")
         if self.r_upper is None and self.p_upper is None:
             raise ValueError("at least one of r_upper/p_upper required")
+        # Precomputed generated-equivalent hash: requirements are minted
+        # fresh per request and hashed once on the admission fast path, so
+        # the first (and usually only) hash must not pay a miss.
+        object.__setattr__(
+            self, "_cached_hash",
+            hash((self.r_upper, self.p_upper, self.objective)))
+
+    def __hash__(self) -> int:
+        return self._cached_hash
+
+    def __eq__(self, other: object) -> bool:
+        # Same semantics as the generated field-tuple comparison, without
+        # allocating the two tuples: requirements are fresh objects per
+        # request, so the admission decision-cache probe compares them by
+        # value on every arrival.
+        if other.__class__ is not Requirement:
+            return NotImplemented
+        return (self.r_upper == other.r_upper
+                and self.p_upper == other.p_upper
+                and self.objective == other.objective)
 
 
 @dataclasses.dataclass(frozen=True)

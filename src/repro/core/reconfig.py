@@ -110,7 +110,12 @@ class Reconfigurator:
             # The current placement is always a candidate (it satisfied the
             # bounds at admission and its node is online), so the MILP can
             # never be infeasible.
-            cands = self.engine.enumerate_feasible(placed.request)
+            #
+            # `candidate_set` shares the engine's cached list + metric
+            # arrays (consumers never mutate AppVars.candidates), so the
+            # MILP builder skips the per-candidate attribute extraction.
+            cs = self.engine.candidate_set(placed.request)
+            cands = cs.cands
             pens = None
             if self.cost_model is not None:
                 pens = [self.cost_model.penalty(placed.candidate, c,
@@ -125,6 +130,9 @@ class Reconfigurator:
                     r_before=placed.response_s / w,
                     p_before=placed.price / w,
                     move_penalties=pens,
+                    response_arr=cs.response_arr,
+                    price_arr=cs.price_arr,
+                    node_id_arr=cs.node_id_arr,
                 )
             )
         return out

@@ -101,7 +101,7 @@ def run_paper_experiment(
     return ExperimentResult(
         window_size=window_size,
         n_placed=len(engine.placed),
-        n_rejected=len(engine.rejected),
+        n_rejected=engine.rejected_total,
         events=events,
         placement_time_s=time.perf_counter() - t0,
     )

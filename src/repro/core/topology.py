@@ -131,6 +131,11 @@ class Topology:
                 path.append(link)
         return tuple(path)
 
+    def uplink_of(self, site_id: str) -> Optional[Link]:
+        """The site's priced uplink ``Link``, or None — input sites have no
+        uplink object (their attachment hop is free and unconstrained)."""
+        return self._uplink.get(site_id)
+
     def path_between(self, site_a: str, site_b: str) -> Tuple[Link, ...]:
         """Links on the unique tree path between two sites (via their LCA).
         Used by fleet topologies where placement is not ancestor-restricted."""

@@ -102,6 +102,10 @@ class Transfer:
     # Per-link bandwidth debited against the engine's admission control
     # while this transfer runs (released on commit/abort/cancel).
     reserved: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Interned `links` indexes (engine.intern_links), resolved once per
+    # transfer: the fair-share ledger re-debits the same path on every
+    # contention change, so the per-link id lookups are hoisted out.
+    link_idx: Optional[Tuple[int, ...]] = None
 
     @property
     def req_id(self) -> int:
@@ -475,8 +479,11 @@ class MigrationExecutor:
         Sorted order keeps the ledger deterministic."""
         for req_id in sorted(self.active):
             tr = self.active[req_id]
+            if tr.link_idx is None:
+                tr.link_idx = engine.intern_links(tr.links)
             tr.reserved = engine.reserve_link_bandwidth(tr.links,
-                                                        tr.rate_mbps)
+                                                        tr.rate_mbps,
+                                                        link_idx=tr.link_idx)
 
     def _pump(self, engine: PlacementEngine, now: float,
               events: EventQueue) -> None:

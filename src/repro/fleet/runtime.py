@@ -28,7 +28,10 @@ latency by design.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional
+
+import numpy as np
 
 from repro.core.apps import PlacementRequest
 from repro.core.placement import PlacementEngine
@@ -101,6 +104,12 @@ class RuntimeConfig:
     # the cost model's behavior — and every scenario fingerprint — is
     # bit-identical to the pre-calibration code.
     cost_feedback: bool = False
+    # Admission path: "vector" = the array-ledger template fast path,
+    # "scalar" = the retained per-candidate reference loop.  Both decide
+    # identically (property-tested; the benchmark smoke gate asserts
+    # bit-identical scenario fingerprints), so this is a perf knob and a
+    # parity harness, never a behavior switch.
+    admission_mode: str = "vector"
 
 
 class FleetRuntime:
@@ -114,9 +123,11 @@ class FleetRuntime:
         all_sites: bool = False,
         tracer=None,
     ) -> None:
-        self.engine = PlacementEngine(topo, all_sites=all_sites)
         self.policy = policy
         self.config = config or RuntimeConfig()
+        self.engine = PlacementEngine(
+            topo, all_sites=all_sites,
+            admission_mode=self.config.admission_mode)
         self.executor = MigrationExecutor(
             state_mb=self.config.state_mb,
             reserve_mbps=self.config.migration_reserve_mbps,
@@ -242,7 +253,13 @@ class FleetRuntime:
         if ev.rate_curve is not None:
             rate0 = ev.rate_curve.rate(self.now)
             req = _scaled_request(req, rate0)
+        t0 = time.perf_counter()
         placed = self.engine.place(req)
+        # Wall-clock admission latency (excluded from fingerprints, like
+        # every `admission/` metric — see telemetry.WALL_CLOCK_METRIC_PREFIXES).
+        self.metrics.histogram("admission/place_s",
+                               DEFAULT_LATENCY_BUCKETS_S).observe(
+            time.perf_counter() - t0)
         if placed is None:
             c["rejected"] += 1
             if inflight:
@@ -269,10 +286,14 @@ class FleetRuntime:
         # (mid-migration apps skipped, rates confirmed only on success).
         changed = self._bank.sample(self.now, self.config.rate_epsilon)
         if changed:
-            for req_id in list(self.engine.placement_order):
-                target = changed.get(req_id)
-                if target is None or self.engine.is_migrating(req_id):
+            # Consume the batch: only the changed apps, in the exact
+            # admission order the historical placement_order scan visited
+            # them (engine.in_admission_order), instead of probing every
+            # placed app per rate event.
+            for req_id in self.engine.in_admission_order(changed):
+                if self.engine.is_migrating(req_id):
                     continue
+                target = changed[req_id]
                 cur = self._rates.get(req_id, 1.0)
                 c["rate_updates"] += 1
                 if self._readmit(req_id, scale=target / cur):
@@ -350,8 +371,12 @@ class FleetRuntime:
         req = placed.request
         if scale != 1.0:
             req = _scaled_request(req, scale)
+        t0 = time.perf_counter()
         self.engine.release(req_id)
         ok = self.engine.place(req) is not None
+        self.metrics.histogram("admission/readmit_s",
+                               DEFAULT_LATENCY_BUCKETS_S).observe(
+            time.perf_counter() - t0)
         if not ok:
             self._forget(req_id)
         else:
@@ -542,11 +567,16 @@ class FleetRuntime:
         # running above 90% of their bandwidth this tick.
         link_hist = m.histogram("link/utilization", DEFAULT_FRACTION_BUCKETS)
         contended = 0
-        for lid, link in self.engine.topo.links.items():
-            cap = link.bandwidth_mbps
+        # One array pass over the link ledger (identical values to the
+        # per-link `link_remaining` sweep: same IEEE op order); the
+        # observe() loop stays sequential in topology link order so the
+        # histogram stream — and thus the tick fingerprint — is unchanged.
+        caps, rem = self.engine.link_capacity_remaining()
+        with np.errstate(divide="ignore", invalid="ignore"):
+            utils = 1.0 - rem / caps
+        for cap, u in zip(caps.tolist(), utils.tolist()):
             if cap <= 0.0:
                 continue
-            u = 1.0 - self.engine.link_remaining(lid) / cap
             link_hist.observe(u)
             if u > 0.9:
                 contended += 1

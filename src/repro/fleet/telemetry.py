@@ -185,7 +185,10 @@ UNFINGERPRINTED_SUMMARY_FIELDS = frozenset({"mean_solver_time_s"})
 
 #: Metric namespaces (see `obs.metrics.MetricsRegistry`) whose snapshots
 #: are wall-clock- or work-derived and therefore dropped wholesale.
-WALL_CLOCK_METRIC_PREFIXES = ("solver/", "planner/")
+#: ``admission/`` is the arrival-path latency family (`admission/place_s`,
+#: `admission/readmit_s`): pure wall clock, so scalar- and vector-mode
+#: runs keep bit-identical fingerprints.
+WALL_CLOCK_METRIC_PREFIXES = ("solver/", "planner/", "admission/")
 
 #: Calibration namespaces: deterministic (two identical runs report
 #: identical residuals — tests assert it) but *about* the run rather

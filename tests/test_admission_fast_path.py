@@ -1,0 +1,322 @@
+"""Vectorized admission fast path: scalar↔vector parity + index invariants.
+
+The array-backed ledger, chain-template decision cache, and reverse
+placement indexes are pure *mechanism* — admission decisions, occupancy,
+and fingerprints must be bit-identical to the retained scalar reference
+path.  Plain seeded randomization (hypothesis is not in the CI image):
+each test sweeps a handful of seeds with failure/recovery churn mixed in.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import PlacementEngine, build_paper_topology, sample_requests
+from repro.core.placement import REJECTED_KEEP
+from repro.core.topology import DeviceNode, Link, Site, Topology
+
+_TOPO = build_paper_topology()  # immutable; shared across tests
+
+
+def _random_topo(rng: np.random.Generator) -> Topology:
+    """Irregular non-paper topology: uneven fan-out, some empty sites."""
+    sites = [Site("root", "cloud", None)]
+    nodes, links = [], []
+    for c in range(int(rng.integers(2, 4))):
+        sid = f"mid{c}"
+        sites.append(Site(sid, "carrier_edge", "root"))
+        links.append(Link(f"l_{sid}", sid, "root",
+                          float(rng.integers(20, 200)),
+                          float(rng.integers(1000, 9000))))
+        for u in range(int(rng.integers(1, 4))):
+            uid = f"leaf{c}_{u}"
+            sites.append(Site(uid, "user_edge", sid))
+            links.append(Link(f"l_{uid}", uid, sid,
+                              float(rng.integers(5, 50)),
+                              float(rng.integers(500, 5000))))
+            sites.append(Site(f"in{c}_{u}", "input", uid))
+    for s in sites:
+        if s.tier == "input":
+            continue
+        for kind in ("cpu", "gpu", "fpga"):
+            for i in range(int(rng.integers(0, 3))):
+                nodes.append(DeviceNode(f"{s.site_id}_{kind}{i}", s.site_id,
+                                        kind, float(rng.integers(1, 16)),
+                                        float(rng.integers(10000, 200000))))
+    return Topology(sites, nodes, links)
+
+
+def _churn(rng, engines, topo):
+    """Random failure/recovery flips + releases, applied to all engines."""
+    nodes, links = list(topo.nodes), list(topo.links)
+    for _ in range(3):
+        n = nodes[int(rng.integers(len(nodes)))]
+        on = bool(rng.random() < 0.5)
+        for e in engines:
+            e.set_node_online(n, on)
+    if links:
+        for _ in range(2):
+            l = links[int(rng.integers(len(links)))]
+            on = bool(rng.random() < 0.5)
+            for e in engines:
+                e.set_link_online(l, on)
+    ids = list(engines[0].placement_order)
+    for _ in range(min(5, len(ids))):
+        rid = ids[int(rng.integers(len(ids)))]
+        if rid in engines[0].placed:
+            for e in engines:
+                e.release(rid)
+
+
+# ------------------------------------------------------------- parity
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_scalar_vector_parity_paper_topology(seed):
+    """Every arrival: same admit/reject outcome and the same Candidate,
+    with failure/recovery churn and departures between rounds."""
+    rng = np.random.default_rng(seed)
+    reqs = sample_requests(_TOPO, 500, rng)
+    es = PlacementEngine(_TOPO, admission_mode="scalar")
+    ev = PlacementEngine(_TOPO, admission_mode="vector")
+    for ci, chunk in enumerate(np.array_split(np.arange(len(reqs)), 4)):
+        for i in chunk:
+            a, b = es.place(reqs[i]), ev.place(reqs[i])
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a.candidate == b.candidate
+        assert es.node_used == ev.node_used
+        assert es.link_used == ev.link_used
+        assert es.occupancy_invariants_ok()
+        assert ev.occupancy_invariants_ok()
+        if ci < 3:
+            _churn(rng, (es, ev), _TOPO)
+
+
+@pytest.mark.parametrize("seed", [10, 11, 12])
+def test_scalar_vector_parity_random_topology(seed):
+    rng = np.random.default_rng(seed)
+    topo = _random_topo(rng)
+    es = PlacementEngine(topo, admission_mode="scalar")
+    ev = PlacementEngine(topo, admission_mode="vector")
+    reqs = sample_requests(topo, 200, rng)
+    for ci, chunk in enumerate(np.array_split(np.arange(len(reqs)), 3)):
+        for i in chunk:
+            a, b = es.place(reqs[i]), ev.place(reqs[i])
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a.candidate == b.candidate
+        if ci < 2:
+            _churn(rng, (es, ev), topo)
+    assert es.node_used == ev.node_used
+    assert es.link_used == ev.link_used
+
+
+def test_scalar_vector_parity_cpu_fallback():
+    rng = np.random.default_rng(9)
+    reqs = sample_requests(_TOPO, 300, rng)
+    es = PlacementEngine(_TOPO, allow_cpu_fallback=True, admission_mode="scalar")
+    ev = PlacementEngine(_TOPO, allow_cpu_fallback=True, admission_mode="vector")
+    for r in reqs:
+        a, b = es.place(r), ev.place(r)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert a.candidate == b.candidate
+    assert es.node_used == ev.node_used
+
+
+def test_decide_matches_decide_scalar_on_warm_engine():
+    """The pure decision phase (no mutation) agrees candidate-for-candidate
+    on identical occupancy — the basis of the CI decision-speedup gate."""
+    rng = np.random.default_rng(3)
+    eng = PlacementEngine(_TOPO)
+    reqs = sample_requests(_TOPO, 600, rng)
+    for r in reqs[:400]:
+        eng.place(r)
+    for r in reqs[400:]:
+        a = eng.decide_scalar(r)
+        b = eng._decide(r)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert a == b
+
+
+# ----------------------------------------------------- feasibility mask
+@pytest.mark.parametrize("seed", [0, 7])
+def test_feasible_mask_equals_scalar_fits(seed):
+    rng = np.random.default_rng(seed)
+    eng = PlacementEngine(_TOPO)
+    reqs = sample_requests(_TOPO, 250, rng)
+    for r in reqs[:200]:
+        eng.place(r)
+    _churn(rng, (eng,), _TOPO)
+    for r in reqs[200:]:
+        cs = eng.candidate_set(r)
+        mask = eng.feasible_mask(r, cs)
+        expect = [eng.fits(r, c) for c in cs.cands]
+        assert mask.tolist() == expect
+
+
+# ------------------------------------------------ reverse placement index
+def test_reverse_indexes_match_brute_force():
+    """`apps_on_node`/`apps_on_link` == the O(all apps) scan they replaced,
+    in admission order, after a randomized place/release/churn sequence."""
+    rng = np.random.default_rng(5)
+    eng = PlacementEngine(_TOPO)
+    reqs = sample_requests(_TOPO, 400, rng)
+    for ci, chunk in enumerate(np.array_split(np.arange(len(reqs)), 4)):
+        for i in chunk:
+            eng.place(reqs[i])
+        if ci < 3:
+            _churn(rng, (eng,), _TOPO)
+    order = {r: i for i, r in enumerate(eng.placement_order)}
+    for nid in eng.topo.nodes:
+        brute = sorted(
+            (r for r, p in eng.placed.items()
+             if p.candidate.node.node_id == nid and r not in eng.suspended),
+            key=order.__getitem__)
+        assert eng.apps_on_node(nid) == brute
+    for lid in eng.topo.links:
+        brute = sorted(
+            (r for r, p in eng.placed.items()
+             if r not in eng.suspended
+             and any(l.link_id == lid for l in p.candidate.links)),
+            key=order.__getitem__)
+        assert eng.apps_on_link(lid) == brute
+
+
+def test_placed_seq_matches_placement_order():
+    rng = np.random.default_rng(6)
+    eng = PlacementEngine(_TOPO)
+    for r in sample_requests(_TOPO, 200, rng):
+        eng.place(r)
+    for _ in range(30):
+        rid = eng.placement_order[int(rng.integers(len(eng.placement_order)))]
+        eng.release(rid)
+    seqs = [eng.placed[r].seq for r in eng.placement_order]
+    assert seqs == sorted(seqs)
+    subset = set(eng.placement_order[::3])
+    assert eng.in_admission_order(subset) == [
+        r for r in eng.placement_order if r in subset]
+
+
+# --------------------------------------------- O(Δ) cache invalidation
+def test_candidate_cache_invalidation_matches_fresh_engine():
+    """After arbitrary online flips, every cached candidate set equals what
+    a cold engine would build — eviction by blast radius loses nothing."""
+    rng = np.random.default_rng(8)
+    eng = PlacementEngine(_TOPO)
+    reqs = sample_requests(_TOPO, 150, rng)
+    for r in reqs:
+        eng.place(r)
+        eng.candidate_set(r)   # populate the cache
+    nodes, links = list(_TOPO.nodes), list(_TOPO.links)
+    for k in range(6):
+        eng.set_node_online(nodes[int(rng.integers(len(nodes)))],
+                            bool(k % 2))
+        eng.set_link_online(links[int(rng.integers(len(links)))],
+                            bool(rng.random() < 0.5))
+    fresh = PlacementEngine(_TOPO)
+    for n in eng.offline_nodes:
+        fresh.set_node_online(n, False)
+    for l in eng.offline_links:
+        fresh.set_link_online(l, False)
+    for r in reqs:
+        if r.req_id not in eng.placed:
+            continue
+        got = eng.candidate_set(r)
+        want = fresh.candidate_set(r)
+        assert [c.node.node_id for c in got.cands] == \
+               [c.node.node_id for c in want.cands]
+        np.testing.assert_array_equal(got.response_arr, want.response_arr)
+        np.testing.assert_array_equal(got.price_arr, want.price_arr)
+
+
+def test_candidate_cache_no_dead_request_leak():
+    """Release/drop/rejection all funnel through `_evict_cand`: no dead
+    req_id survives in the cache or either reverse index."""
+    rng = np.random.default_rng(4)
+    eng = PlacementEngine(_TOPO)
+    reqs = sample_requests(_TOPO, 120, rng)
+    for r in reqs:
+        if eng.place(r) is not None:
+            eng.candidate_set(r)
+    ids = list(eng.placed)
+    for rid in ids[::2]:
+        eng.release(rid)
+    for rid in ids[1::4]:
+        if rid in eng.placed:
+            eng.suspend(rid)
+            eng.drop(rid)
+    live = set(eng.placed)
+    assert set(eng._cand_cache) <= live
+    for members in eng._cand_rev_nodes.values():
+        assert members <= live
+    for members in eng._cand_rev_links.values():
+        assert members <= live
+
+
+# --------------------------------------------------- rejection ledger
+def test_rejected_ring_bounded_and_total_monotonic():
+    eng = PlacementEngine(_TOPO)
+    rng = np.random.default_rng(2)
+    # Saturate, then keep arriving: the ring stays bounded, the counter
+    # keeps counting.
+    reqs = sample_requests(_TOPO, 3000, rng)
+    last = 0
+    for r in reqs:
+        eng.place(r)
+        assert eng.rejected_total >= last
+        last = eng.rejected_total
+    assert eng.rejected_total > 0
+    assert len(eng.rejected) <= REJECTED_KEEP
+    assert len(eng.rejected) <= eng.rejected_total
+
+
+# ------------------------------------------------------- ledger views
+def test_ledger_view_dict_compat_and_mirror_lockstep():
+    eng = PlacementEngine(_TOPO)
+    nid = next(iter(_TOPO.nodes))
+    ni = eng._node_idx[nid]
+    assert eng.node_used[nid] == 0.0
+    assert nid in eng.node_used
+    assert len(eng.node_used) == len(_TOPO.nodes)
+    assert set(iter(eng.node_used)) == set(_TOPO.nodes)
+    eng.node_used[nid] = 2.5
+    assert eng._node_used[ni] == 2.5
+    assert eng._node_used_l[ni] == 2.5          # list shadow in lockstep
+    as_dict = dict(eng.node_used)
+    assert as_dict[nid] == 2.5
+    assert eng.node_used == as_dict              # dict-equality both ways
+
+
+def test_ledger_view_write_bumps_capacity_epoch():
+    """Direct ledger writes may *increase* capacity, so they must
+    invalidate the monotone last-winner cache."""
+    eng = PlacementEngine(_TOPO)
+    nid = next(iter(_TOPO.nodes))
+    before = eng._cap_epoch
+    eng.node_used[nid] = 1.0
+    assert eng._cap_epoch > before
+
+
+def test_capacity_epoch_win_cache_revalidates_after_release():
+    """Repeat traffic on one chain: the cached winner must be re-verified
+    (and the walk re-run) when a release frees a better node."""
+    rng = np.random.default_rng(1)
+    eng = PlacementEngine(_TOPO)
+    ref = PlacementEngine(_TOPO, admission_mode="scalar")
+    # Same input site + app over and over → maximal win-cache hits.
+    base = sample_requests(_TOPO, 1, rng)[0]
+    placed_ids = []
+    for i in range(40):
+        r = base.__class__(req_id=1000 + i, app=base.app,
+                           input_site=base.input_site,
+                           requirement=base.requirement)
+        a, b = eng.place(r), ref.place(r)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert a.candidate == b.candidate
+            placed_ids.append(r.req_id)
+        if i % 7 == 3 and placed_ids:
+            rid = placed_ids.pop(0)
+            eng.release(rid)
+            ref.release(rid)
+    assert eng.node_used == ref.node_used
