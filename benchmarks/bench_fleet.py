@@ -99,6 +99,14 @@ def _cell(sc: str, pol: str, seed: int, with_ticks: bool,
     row["calib_samples"] = calib.get("samples", 0)
     row["calib_excluded"] = calib.get("excluded", 0)
     row["calib_drifts"] = len(calib.get("drifts", ()))
+    if calib.get("strategies"):
+        row["calib_strategies"] = calib["strategies"]
+    # Serving-workload summary (repro.fleet.serving): token conservation
+    # totals, throughput, per-token p99 and completed migrations by
+    # strategy.  Absent on non-serving scenarios.
+    srv = d.get("serving")
+    if srv:
+        row["serving"] = srv
     # Deterministic percentile columns from the fixed-bucket metrics
     # registry (repro.fleet.obs): satisfaction quantiles are simulated
     # quantities, solver-latency quantiles are wall-clock profiling.
@@ -349,6 +357,41 @@ def admission_rows(seed: int = 0, scales: Sequence[int] = (64, 256),
     return rows
 
 
+def serving_rows(seed: int = 0, scales: Sequence[int] = (1, 8)) -> List[Dict]:
+    """Serving-workload acceptance rows: the `serving-fleet` scenario under
+    each forced migration strategy (plus the backend's auto choice) at ×1
+    and ×8.  Each row carries the run's `serving` summary (token
+    conservation totals, tokens_per_s, p99 token latency, completed
+    migrations by strategy) plus the mean downtime of the *serving* moves
+    specifically, so the driver can gate kv-ship beating replay on
+    decode-heavy sessions: zero recomputed tokens at no worse migration
+    downtime, at every scale."""
+    rows: List[Dict] = []
+    for scale in scales:
+        for st in (None, "drain", "replay", "kv-ship"):
+            kwargs: Dict = {}
+            if scale != 1:
+                kwargs["scale"] = scale
+            if st is not None:
+                kwargs["strategy"] = st
+            row = _cell("serving-fleet", "greedy", seed, with_ticks=True,
+                        scenario_kwargs=kwargs)
+            migs = row.pop("migrations_series", [])
+            row.pop("ticks_series", None)
+            # Serving moves are the records the backend stamped a strategy
+            # on; background batch moves carry none.
+            done = [m for m in migs
+                    if m.get("strategy") and m.get("outcome") == "completed"]
+            dts = [m["downtime_s"] for m in done]
+            row["benchmark"] = "serving"
+            row["forced_strategy"] = st or "auto"
+            row["serving_migrations_completed"] = len(done)
+            row["mean_serving_downtime_s"] = (
+                round(sum(dts) / len(dts), 6) if dts else None)
+            rows.append(row)
+    return rows
+
+
 def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
     """CI sanity slice: fast cells with every moving part exercised
     (request streams, in-flight migrations, adaptive switching, the
@@ -421,6 +464,14 @@ def smoke(seed: int = 0, scale: int = 2) -> List[Dict]:
               scenario_kwargs={"n_arrivals": 150},
               backend=SimulatedElasticBackend(default_state_mb=256.0),
               config_kwargs={"cost_feedback": True}),
+        # Serving smoke: a compact serving-fleet cell with a flash crowd
+        # landing mid-reconfiguration and kv-ship forced fleet-wide.  The
+        # driver gates token conservation with zero cancellations, at
+        # least one completed kv-ship migration (echoed by the calibration
+        # ledger's per-strategy counts), and a reported p99 token latency.
+        _cell("serving-fleet", "greedy", seed, with_ticks=False,
+              scenario_kwargs={"n_background": 100, "sessions_per_app": 8,
+                               "flash": True, "strategy": "kv-ship"}),
     ]
 
 

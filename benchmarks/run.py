@@ -9,8 +9,11 @@ Default mode prints ``name,key=value,...`` CSV rows for every section.
 ``--json`` runs the fleet sweep (scale ×1 scenario × policy grid, the
 ×2/×4/×8 solver-scaling sweep with 400×scale windows, a ×32 planetary
 slice under the hierarchical planner, ×64/×256 steady-tick rows with
-a >100k-app window, and the ×64/×256 admission fast-path microbench —
-scalar vs vectorized arrival path with a ≥5× decision-phase gate) and
+a >100k-app window, the ×64/×256 admission fast-path microbench —
+scalar vs vectorized arrival path with a ≥5× decision-phase gate — and
+the serving strategy sweep: serving-fleet under each forced migration
+strategy at ×1/×8 with a kv-ship-beats-replay gate, zero recomputed
+tokens at no worse mean migration downtime) and
 writes machine-readable rows to ``BENCH_fleet.json``.  ``--smoke`` runs a CI sanity slice (request
 streams + adaptive policy, a backbone cut, the decomposed/incremental
 planners at ``--scale`` — plus, at ``--scale`` ≥ 16, the hierarchical
@@ -22,6 +25,9 @@ admission fast-path microbench with its ≥5× decision-phase speedup and
 arrival-throughput gates), an SLO burn-rate → policy-escalation cell, a calibration cell pair (drift detectors must
 catch a 4×-miscalibrated size model, ``cost_feedback`` must collapse the
 downtime prediction error without perturbing the behavior fingerprint),
+a serving-fleet cell (a flash crowd lands mid-reconfiguration with
+kv-ship forced: token conservation with zero cancellations, ≥1
+completed kv-ship migration, a reported per-token p99),
 and a traced run validated against the Chrome trace_event schema) and
 exits non-zero on any failure.  ``--trace out.json`` runs one scenario
 with the dual-clock span tracer attached and writes a Perfetto-loadable
@@ -78,6 +84,7 @@ def run_json(out_path: str, seed: int) -> int:
         calibration_rows,
         planetary_rows,
         scale_sweep,
+        serving_rows,
         steady_tick_rows,
         sweep,
     )
@@ -97,6 +104,7 @@ def run_json(out_path: str, seed: int) -> int:
     steady += planetary_rows(seed=seed)
     calib = calibration_rows(seed=seed)
     admission = admission_rows(seed=seed)
+    serving = serving_rows(seed=seed)
     doc = {
         "benchmark": "fleet_runtime",
         "seed": seed,
@@ -107,13 +115,50 @@ def run_json(out_path: str, seed: int) -> int:
         "steady_tick": steady,
         "calibration": calib,
         "admission": admission,
+        "serving": serving,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"wrote {out_path}: {len(rows)} scale-1 rows + "
           f"{len(scaled)} scale-sweep rows + {len(steady)} steady-tick rows + "
-          f"{len(calib)} calibration rows + {len(admission)} admission rows")
+          f"{len(calib)} calibration rows + {len(admission)} admission rows + "
+          f"{len(serving)} serving rows")
     ok = 0
+    # Serving acceptance: at each scale kv-ship must beat replay on
+    # decode-heavy sessions — zero recomputed tokens (where replay must
+    # show the recompute cost it pays) at no worse mean serving-migration
+    # downtime.
+    srv_by_scale = {}
+    for r in serving:
+        srv_by_scale.setdefault(r["scale"], {})[r["forced_strategy"]] = r
+    for sc in sorted(srv_by_scale):
+        cells = srv_by_scale[sc]
+        for st in ("auto", "drain", "replay", "kv-ship"):
+            r = cells.get(st)
+            if r is None:
+                continue
+            s = r.get("serving") or {}
+            dt = r["mean_serving_downtime_s"]
+            print(f"  serving x{sc} {st:8s}: "
+                  f"tok/s={s.get('tokens_per_s', 0):.2f} "
+                  f"p99={s.get('p99_token_latency_s', 0):.4f}s "
+                  f"rec={s.get('tokens_recomputed', 0):6d} "
+                  f"cancel={s.get('tokens_cancelled', 0):4d} "
+                  f"migs={r['serving_migrations_completed']:3d} "
+                  f"mean_dt={dt if dt is not None else float('nan'):.3f}s")
+        kv, rp = cells.get("kv-ship"), cells.get("replay")
+        kv_s = (kv or {}).get("serving") or {}
+        rp_s = (rp or {}).get("serving") or {}
+        good = (kv is not None and rp is not None
+                and kv_s.get("tokens_recomputed") == 0
+                and rp_s.get("tokens_recomputed", 0) > 0
+                and kv["mean_serving_downtime_s"] is not None
+                and rp["mean_serving_downtime_s"] is not None
+                and kv["mean_serving_downtime_s"]
+                <= rp["mean_serving_downtime_s"])
+        print(f"  serving x{sc}: kv-ship rec==0 & replay rec>0 & "
+              f"kv downtime <= replay [{'OK' if good else 'MISS'}]")
+        ok |= 0 if good else 1
     # Admission fast-path acceptance: the vectorized decision phase must
     # beat the scalar reference ≥5× at p50 on the planetary cells (the
     # rows assert scalar↔vector placement parity internally; end-to-end
@@ -347,6 +392,35 @@ def run_smoke(seed: int, scale: int) -> int:
         bad |= 0 if ok else 1
     else:
         print("  calibration smoke pair missing from smoke rows [FAIL]")
+        bad |= 1
+    # Serving gate: the flash-crowd serving-fleet cell forces kv-ship
+    # fleet-wide; every submitted token must be decoded (conservation with
+    # zero cancellations), at least one kv-ship migration must complete
+    # mid-decode (echoed by the calibration ledger's per-strategy counts),
+    # and the per-token p99 must be reported.
+    srow = next((r for r in rows if r["scenario"] == "serving-fleet"), None)
+    if srow is not None and srow.get("serving"):
+        s = srow["serving"]
+        conserve_ok = (s["tokens_decoded"] + s["tokens_cancelled"]
+                       == s["tokens_submitted"])
+        lossless_ok = s["tokens_cancelled"] == 0
+        mig_ok = s["migrations"].get("kv-ship", 0) >= 1
+        calib_ok = (srow.get("calib_strategies") or {}).get("kv-ship", 0) >= 1
+        p99_ok = s["p99_token_latency_s"] > 0
+        ok = conserve_ok and lossless_ok and mig_ok and calib_ok and p99_ok
+        print(f"  serving smoke (serving-fleet kv-ship flash): "
+              f"tokens={s['tokens_decoded']}/{s['tokens_submitted']} "
+              f"cancel={s['tokens_cancelled']} "
+              f"kv_migs={s['migrations'].get('kv-ship', 0)} "
+              f"p99={s['p99_token_latency_s']:.4f}s "
+              f"conserved: {'OK' if conserve_ok else 'FAIL'}, "
+              f"lossless: {'OK' if lossless_ok else 'FAIL'}, "
+              f"kv-ship completed: {'OK' if mig_ok else 'FAIL'}, "
+              f"calib strategy counted: {'OK' if calib_ok else 'FAIL'} "
+              f"[{'OK' if ok else 'FAIL'}]")
+        bad |= 0 if ok else 1
+    else:
+        print("  serving smoke row missing serving summary [FAIL]")
         bad |= 1
     # Trace smoke: a traced run must export a schema-valid Chrome
     # trace_event document with ≥1 tick-phase span and ≥1 migration whose

@@ -129,6 +129,29 @@ def weighted_window_sum(
     return sum(weights.get(e.req_id, 1.0) * e.ratio for e in entries)
 
 
+# ------------------------------------------------------- token-level SLOs
+def token_slo_ratio(p99_latency_s: float, slo_s: float) -> float:
+    """Per-token latency SLO in eq.-(1) units: the response-side half of
+    X+Y for a serving app, with the p99 token latency standing in for the
+    response time and the SLO target for its baseline.  1.0 = exactly on
+    SLO, < 1 = faster than the objective, clamped to [0, 2] so a blown SLO
+    saturates at the do-nothing-was-better ceiling instead of growing
+    without bound (one stuck token would otherwise dominate a window)."""
+    if slo_s <= 0.0:
+        return 2.0
+    return min(p99_latency_s / slo_s, 2.0)
+
+
+def blend_token_slo(mean_ratio: float, slo_ratio: float,
+                    weight: float = 0.5) -> float:
+    """Fold a serving app's token-SLO term into the window's mean-based
+    X+Y aggregate: convex blend of the classic eq.-(1) ratio and the
+    token-latency ratio doubled into X+Y scale (2.0 = on-SLO baseline,
+    mirroring the do-nothing baseline of the mean aggregation)."""
+    w = min(max(weight, 0.0), 1.0)
+    return (1.0 - w) * mean_ratio + w * (2.0 * slo_ratio)
+
+
 def weighted_mean_moved_ratio(
     entries: Sequence[AppSatisfaction], weights: Mapping[int, float]
 ) -> Optional[float]:

@@ -18,7 +18,13 @@ service over a changing fleet, with load-bearing simulated time).
               live backend executes them for real
   scenarios — paper-steady-state, diurnal-streams, flash-crowd(+during-
               reconfig), node-outage, site-outage, backbone-cut,
-              flapping-node, hetero-expansion — all scalable ×2/×4/×8
+              flapping-node, hetero-expansion, serving-fleet — all
+              scalable ×2/×4/×8
+  serving   — serving as a first-class workload: token-level session
+              streams (`SessionArrival` prefill + decode cadence),
+              deterministic per-app FIFO token queues, and KV-cache-aware
+              migration strategies (drain / replay / kv-ship) priced into
+              move penalties and recorded end-to-end
   planner   — scalable planning subsystem: topology partitioner,
               decomposed per-region MILPs + boundary arbitration,
               rolling-horizon forecasting, migration-aware move pricing
@@ -49,6 +55,7 @@ from .events import (  # noqa: F401
     RateCurve,
     ReconfigTick,
     RequestRateUpdate,
+    SessionArrival,
 )
 from .elastic_bridge import (  # noqa: F401
     ElasticBackend,
@@ -109,6 +116,16 @@ from .planner import (  # noqa: F401  (registers decomposed/incremental/hierarch
 )
 from .runtime import FleetRuntime, RuntimeConfig  # noqa: F401
 from .scenarios import SCENARIOS, ScenarioSpec, build_scenario  # noqa: F401
+from .serving import (  # noqa: F401
+    STRATEGIES,
+    STRATEGY_DRAIN,
+    STRATEGY_KV_SHIP,
+    STRATEGY_REPLAY,
+    ServingConfig,
+    ServingElasticBackend,
+    ServingProfile,
+    ServingWorkload,
+)
 from .telemetry import (  # noqa: F401
     MigrationRecord,
     PlanStats,

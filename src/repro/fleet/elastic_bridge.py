@@ -93,6 +93,10 @@ class SnapshotInfo:
     restore_s: float
     path: Optional[str] = None  # live backend: the on-disk checkpoint
     mesh_shape: Optional[Tuple[int, ...]] = None  # source mesh at snapshot
+    # Serving-workload state strategy ("drain" | "replay" | "kv-ship") the
+    # backend chose for this snapshot; None for non-serving apps.  Threaded
+    # by the executor onto the resulting `MigrationRecord`.
+    strategy: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -215,6 +215,21 @@ class LinkRecovery(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class SessionArrival(Event):
+    """A user session opens against a *serving* app (`fleet.serving`):
+    ``prompt_tokens`` are submitted as one prefill burst at the event time,
+    then ``decode_tokens`` per-token decode requests follow at the session's
+    cadence (the serving profile's ``decode_tps``, scaled by the app's
+    current `RateBank` rate).  Sessions addressed to an app that was never
+    admitted — or has already departed — are counted as rejected."""
+
+    req_id: int                 # the serving app this session hits
+    session_id: int
+    prompt_tokens: int
+    decode_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
 class ReconfigTick(Event):
     """Forced reconfiguration (scenarios use it for time-driven ticks; the
     runtime also self-triggers every ``reconfig_every`` admissions)."""

@@ -235,7 +235,8 @@ class MigrationExecutor:
         rec = MigrationRecord(req_id, tr.mode, "completed",
                               tr.started_s, now, downtime,
                               snapshot_s=snap_s, transfer_s=transfer_s,
-                              restore_s=restore_s)
+                              restore_s=restore_s,
+                              strategy=tr.snapshot.strategy)
         self.records.append(rec)
         self.measurements.append(self._measure(engine, tr))
         self._reschedule(engine, now, events)
@@ -258,7 +259,8 @@ class MigrationExecutor:
         snap_s, transfer_s, restore_s = tr.phases_spent(duration)
         self.records.append(MigrationRecord(
             tr.req_id, tr.mode, "aborted", tr.started_s, now, down,
-            snapshot_s=snap_s, transfer_s=transfer_s, restore_s=restore_s))
+            snapshot_s=snap_s, transfer_s=transfer_s, restore_s=restore_s,
+            strategy=tr.snapshot.strategy))
         self.measurements.append(self._measure(engine, tr))
 
     def on_node_failure(
@@ -352,7 +354,7 @@ class MigrationExecutor:
             self.records.append(MigrationRecord(
                 req_id, tr.mode, "cancelled", tr.started_s, now, down,
                 snapshot_s=snap_s, transfer_s=transfer_s,
-                restore_s=restore_s))
+                restore_s=restore_s, strategy=tr.snapshot.strategy))
             self.measurements.append(self._measure(engine, tr))
         for mv in list(self.waiting):
             if mv.req_id == req_id:

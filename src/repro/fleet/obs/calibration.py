@@ -81,9 +81,13 @@ class MovePrediction:
     p_before: float                # price baseline the gain is against
     feedback: bool                 # was the learned-bytes path active?
     provenance: Optional[MoveProvenance] = None
+    #: Serving apps: the migration state strategy the pricing selected
+    #: ("drain" | "replay" | "kv-ship").  None — and absent from
+    #: `to_dict` — for non-serving moves, keeping legacy records stable.
+    strategy: Optional[str] = None
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "req_id": self.req_id,
             "t_plan": round(self.t_plan, 9),
             "mbits": round(self.mbits, 9),
@@ -97,6 +101,9 @@ class MovePrediction:
             "provenance": (self.provenance.to_dict()
                            if self.provenance is not None else None),
         }
+        if self.strategy is not None:
+            d["strategy"] = self.strategy
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +209,9 @@ class CalibrationLedger:
         self.provenance_records: List[MoveProvenance] = []
         self.prov_price_binding = 0
         self.prov_budget_binding = 0
+        # Serving-strategy tally over predictions ("drain" / "replay" /
+        # "kv-ship"); empty for fleets with no serving apps.
+        self.strategy_counts: Dict[str, int] = {}
 
     # ------------------------------------------------------------- plan side
     def record_move(self, pred: MovePrediction) -> None:
@@ -209,6 +219,9 @@ class CalibrationLedger:
         inside the tick that scheduled the transfer)."""
         self._pending.setdefault(pred.req_id, deque()).append(pred)
         self.metrics.counter("calibration/predicted").inc()
+        if pred.strategy is not None:
+            self.strategy_counts[pred.strategy] = \
+                self.strategy_counts.get(pred.strategy, 0) + 1
         if pred.provenance is not None:
             self.provenance_records.append(pred.provenance)
             if pred.provenance.price_binding:
@@ -352,7 +365,7 @@ class CalibrationLedger:
         """JSON-ready ledger summary, attached to `Telemetry.calibration`
         and dumped by ``benchmarks.run --report calibration``.
         Deterministic: two identical runs produce identical reports."""
-        return {
+        d = {
             "feedback": self.feedback,
             "samples": self.samples,
             "excluded": self.excluded,
@@ -368,3 +381,7 @@ class CalibrationLedger:
                 "records": [p.to_dict() for p in self.provenance_records],
             },
         }
+        if self.strategy_counts:
+            d["strategies"] = {k: self.strategy_counts[k]
+                               for k in sorted(self.strategy_counts)}
+        return d

@@ -49,9 +49,13 @@ class MoveProvenance:
     #: candidate existed in the penalized cost vector but was not chosen
     #: (regional boundary budget, shadow-ledger fit, or MILP capacity).
     budget_binding: bool
+    #: Serving apps: the migration state strategy the pricing selected
+    #: ("drain" | "replay" | "kv-ship").  None — and absent from
+    #: `to_dict` — for non-serving moves, keeping legacy records stable.
+    strategy: Optional[str] = None
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "req_id": self.req_id,
             "node_from": self.node_from,
             "node_to": self.node_to,
@@ -61,6 +65,9 @@ class MoveProvenance:
             "price_binding": self.price_binding,
             "budget_binding": self.budget_binding,
         }
+        if self.strategy is not None:
+            d["strategy"] = self.strategy
+        return d
 
 
 def provenance_from_costs(

@@ -125,10 +125,47 @@ class MigrationCostModel:
             return snap_s + restore_s
         return 0.0
 
+    def serving_pipeline_s(self, old: Candidate, new: Candidate,
+                           request=None):
+        """Serving apps: cheapest per-strategy pipeline time over the
+        move's contended links — ``(seconds, strategy)``, or None for
+        non-serving apps / backends without strategy phases.  Priced
+        through `ServingElasticBackend.strategy_phases`, the same
+        triples the executor will snapshot with, so planner pricing and
+        executor phases agree per strategy by construction."""
+        be = self.backend
+        if request is None or be is None:
+            return None
+        phases_of = getattr(be, "strategy_phases", None)
+        if phases_of is None:
+            return None
+        phases = phases_of(request, None)
+        if phases is None:
+            return None
+        links = {l.link_id: l.bandwidth_mbps for l in old.links}
+        links.update({l.link_id: l.bandwidth_mbps for l in new.links})
+        rate = min(
+            (bw / (self._shares.get(lid, 0) + 1) for lid, bw in links.items()),
+            default=100.0,
+        )
+        rate = max(rate, 1e-9)
+        forced = getattr(be, "forced_strategy", None)
+        best = None
+        for st in ([forced] if forced is not None else phases):
+            mbits, snap_s, rest_s = phases[st]
+            cost = snap_s + mbits / rate + rest_s
+            if best is None or cost < best[0] - 1e-12:
+                best = (cost, st)
+        return best
+
     def penalty(self, old: Candidate, new: Candidate, base: float,
                 request=None) -> float:
         if new.node.node_id == old.node.node_id:
             return 0.0
-        pipeline_s = self.est_transfer_s(old, new, request) \
-            + self.est_host_s(request)
+        serving = self.serving_pipeline_s(old, new, request)
+        if serving is not None:
+            pipeline_s = serving[0]
+        else:
+            pipeline_s = self.est_transfer_s(old, new, request) \
+                + self.est_host_s(request)
         return base * (1.0 + self.time_coef * pipeline_s)

@@ -53,6 +53,7 @@ from .events import (
     RateCurve,
     ReconfigTick,
     RequestRateUpdate,
+    SessionArrival,
 )
 from .executor import MigrationExecutor
 from .obs.calibration import CalibrationLedger, MovePrediction
@@ -110,6 +111,11 @@ class RuntimeConfig:
     # bit-identical scenario fingerprints), so this is a perf knob and a
     # parity harness, never a behavior switch.
     admission_mode: str = "vector"
+    # Opt-in serving workload (`fleet.serving.ServingConfig`): apps with a
+    # serving profile run token-level request streams and migrate with a
+    # KV-cache-aware strategy.  None (default) leaves every scenario
+    # fingerprint bit-identical to the pre-serving code.
+    serving: Optional[object] = None
 
 
 class FleetRuntime:
@@ -128,10 +134,26 @@ class FleetRuntime:
         self.engine = PlacementEngine(
             topo, all_sites=all_sites,
             admission_mode=self.config.admission_mode)
+        # Serving workload (`fleet.serving`), opt-in: token queues per
+        # serving app plus a KV-cache-aware backend (unless the caller
+        # supplied one — a `ServingElasticBackend` gets the workload bound,
+        # any other backend keeps opaque-blob semantics on purpose).
+        self.serving = None
+        backend = self.config.elastic_backend
+        if self.config.serving is not None:
+            from .serving import ServingElasticBackend, ServingWorkload
+            self.serving = ServingWorkload(self.config.serving)
+            if backend is None:
+                backend = ServingElasticBackend(
+                    self.serving,
+                    default_state_mb=self.config.state_mb,
+                    forced_strategy=self.config.serving.forced_strategy)
+            elif hasattr(backend, "bind_workload"):
+                backend.bind_workload(self.serving)
         self.executor = MigrationExecutor(
             state_mb=self.config.state_mb,
             reserve_mbps=self.config.migration_reserve_mbps,
-            backend=self.config.elastic_backend,
+            backend=backend,
         )
         self.now = 0.0
         self._since_reconfig = 0
@@ -155,6 +177,8 @@ class FleetRuntime:
             bind(self.tracer)
         self.metrics = MetricsRegistry()
         self.slo = SloMonitor(self.config.slo)
+        if self.serving is not None:
+            self.serving.attach(self.metrics, self.executor)
         # Calibration ledger (`fleet.obs.calibration`): joins plan-time
         # predictions against the executor's measured outcomes.  Always on
         # (deterministic, excluded from fingerprints); feedback into the
@@ -181,6 +205,11 @@ class FleetRuntime:
             self._dispatch(ev, events, tel)
             self._drain_records(tel)
         self._drain_records(tel)
+        if self.serving is not None:
+            self.serving.finalize(
+                self.now, tel,
+                mean_ratio=(tel.ticks[-1].mean_satisfaction
+                            if tel.ticks else 2.0))
         tel.counters["migrations_dropped"] = self.executor.moves_dropped
         tel.migrations = list(self.executor.records)
         tel.metrics = self.metrics.snapshot()
@@ -236,6 +265,13 @@ class FleetRuntime:
             self.executor.on_capacity_freed(self.engine, self.now, events)
             if self.config.reconfig_on_failure:
                 self._tick("recovery", tel, events)
+        elif isinstance(ev, SessionArrival):
+            if self.serving is None:
+                raise TypeError(
+                    "SessionArrival requires RuntimeConfig.serving")
+            self.serving.on_session(ev.req_id, ev.session_id,
+                                    ev.prompt_tokens, ev.decode_tokens,
+                                    self.now, self._rates.get(ev.req_id, 1.0))
         elif isinstance(ev, ReconfigTick):
             self._tick("tick", tel, events)
         else:
@@ -266,6 +302,8 @@ class FleetRuntime:
                 c["rejected_inflight"] += 1
             return
         c["admitted"] += 1
+        if self.serving is not None:
+            self.serving.register(req.req_id, self.now)
         if ev.rate_curve is not None:
             self._curves[req.req_id] = ev.rate_curve
             self._bank.add(req.req_id, ev.rate_curve, rate0)
@@ -361,6 +399,10 @@ class FleetRuntime:
         self._rates.pop(req_id, None)
         self._bank.discard(req_id)
         self._churned.discard(req_id)
+        if self.serving is not None:
+            # Departure or lost to a failure: serve what completed by now,
+            # cancel the rest (the conservation ledger's `cancelled` side).
+            self.serving.on_departure(req_id, self.now)
 
     def _readmit(self, req_id: int, scale: float = 1.0) -> bool:
         """Release ``req_id`` and place it again (rescaling its bandwidth/
@@ -438,6 +480,11 @@ class FleetRuntime:
 
     def _tick_body(self, trigger: str, tel: Telemetry, events: EventQueue,
                    window) -> None:
+        if self.serving is not None:
+            # Bring every token queue current *before* planning so the
+            # strategy pricing (cached context, decode backlog) sees the
+            # fleet as of this tick, then flush the latency histograms.
+            self.serving.observe_tick(self.now)
         weights = {r: self._rates.get(r, 1.0) for r in window}
         observe = getattr(self.policy, "observe", None)
         if observe is not None:
@@ -535,6 +582,21 @@ class FleetRuntime:
             else:
                 mbits = self.executor.state_mb * 8.0
                 snap_s = rest_s = 0.0
+            # Serving apps: the prediction carries the strategy the backend
+            # would choose for this move *now*, and its per-strategy phases
+            # (the executor re-chooses at transfer start — the record's
+            # strategy is the measured truth the join scores against).
+            strategy = None
+            backend = self.executor.backend
+            if self.serving is not None and hasattr(backend,
+                                                    "strategy_phases"):
+                phases = backend.strategy_phases(placed.request, mv)
+                if phases is not None:
+                    strategy = backend.choose_strategy(placed.request, mv)
+                    mbits, snap_s, rest_s = phases[strategy]
+            prov = (res.provenance or {}).get(mv.req_id)
+            if strategy is not None and prov is not None:
+                prov = dataclasses.replace(prov, strategy=strategy)
             self.calibration.record_move(MovePrediction(
                 req_id=mv.req_id,
                 t_plan=self.now,
@@ -548,7 +610,8 @@ class FleetRuntime:
                 r_before=mv.old.response_s,
                 p_before=mv.old.price,
                 feedback=self.config.cost_feedback,
-                provenance=(res.provenance or {}).get(mv.req_id),
+                provenance=prov,
+                strategy=strategy,
             ))
 
     def _observe_tick_metrics(self, rec: TickRecord, stats) -> None:
@@ -619,6 +682,8 @@ class FleetRuntime:
             meas = (self.executor.measurements[i]
                     if i < len(self.executor.measurements) else None)
             pred, _ = self.calibration.observe_record(rec, meas)
+            if self.serving is not None:
+                self.serving.on_record(rec)
             if pred is not None and rec.outcome == "completed":
                 placed = self.engine.placed.get(rec.req_id)
                 if placed is not None:
@@ -633,6 +698,8 @@ class FleetRuntime:
                 restore_start = max(rec.t_end - rec.restore_s, snap_end)
                 span_args = {"mode": rec.mode, "outcome": rec.outcome,
                              "downtime_s": rec.downtime_s}
+                if rec.strategy is not None:
+                    span_args["strategy"] = rec.strategy
                 if pred is not None and pred.provenance is not None:
                     span_args["why"] = pred.provenance.to_dict()
                 self.tracer.add_span(

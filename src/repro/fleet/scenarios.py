@@ -51,9 +51,11 @@ from .events import (
     RateCurve,
     ReconfigTick,
     RequestRateUpdate,
+    SessionArrival,
 )
 from .policies import ReconfigPolicy
 from .runtime import FleetRuntime, RuntimeConfig
+from .serving import ServingConfig, ServingProfile
 
 
 @dataclasses.dataclass
@@ -363,6 +365,89 @@ def hetero_expansion(seed: int = 0, n_jobs: Optional[int] = None,
                         all_sites=True)
 
 
+def serving_fleet(seed: int = 0, scale: int = 1,
+                  n_serving: Optional[int] = None,
+                  n_background: Optional[int] = None,
+                  sessions_per_app: int = 10,
+                  strategy: Optional[str] = None,
+                  flash: bool = False) -> ScenarioSpec:
+    """Serving as a first-class fleet workload (`fleet.serving`): a core
+    of long-lived serving apps — token-level session streams against
+    each (`SessionArrival`: prefill burst + decode cadence) — churned by
+    background batch arrivals that keep the reconfigurator ticking, so
+    serving apps migrate *while decoding* and the backend must pick a
+    KV-cache-aware strategy per move (forced fleet-wide by
+    ``strategy``).  ``flash=True`` lands a flash crowd plus a session
+    burst while a forced reconfiguration's transfers are still in
+    flight — the tokens-under-migration stress variant."""
+    rng = np.random.default_rng(seed)
+    topo = build_paper_topology(scale=scale)
+    n_serving = 16 * scale if n_serving is None else n_serving
+    n_background = 140 * scale if n_background is None else n_background
+    horizon = n_background * 8.0 / scale
+    serving_reqs = sample_requests(topo, n_serving, rng)
+    events: List[Tuple[float, Event]] = []
+    profiles: Dict[int, ServingProfile] = {}
+    session_id = 0
+    t = 0.0
+    for req in serving_reqs:
+        t += float(rng.exponential(4.0))
+        # Gentle rate curves: per-update swings stay under the runtime's
+        # ``rate_epsilon`` so a serving app is never force-readmitted (and
+        # possibly lost) by its own traffic wobble — only failures cancel.
+        curve = RateCurve(base=1.0,
+                          amplitude=float(rng.uniform(0.05, 0.15)),
+                          period_s=2_000.0)
+        # Serving apps outlive the run: pending tokens are never
+        # cancelled by a scheduled departure (only failures cancel).
+        events.append((t, AppArrival(req, horizon * 2.0, rate_curve=curve)))
+        profiles[req.req_id] = ServingProfile()
+        ts = t + 1.0
+        for _ in range(sessions_per_app):
+            ts += float(rng.exponential(horizon / (2.0 * sessions_per_app)))
+            # Decode-heavy sessions: tens of seconds of cadence each, so
+            # reconfigurations routinely catch live KV context mid-decode.
+            events.append((ts, SessionArrival(
+                req.req_id, session_id,
+                prompt_tokens=int(rng.integers(16, 64)),
+                decode_tokens=int(rng.integers(192, 512)))))
+            session_id += 1
+    events += _poisson_arrivals(topo, rng, n_background,
+                                mean_interarrival_s=8.0 / scale,
+                                mean_lifetime_s=600.0,
+                                start_id=n_serving)
+    events.append((60.0, RequestRateUpdate(60.0, horizon)))
+    if flash:
+        burst_t0 = horizon * 0.5
+        events.append((burst_t0 - 5.0, ReconfigTick()))
+        hot_sites = [f"input{i}" for i in range(5)]
+        burst = sample_requests(topo, 60 * scale, rng,
+                                start_id=n_serving + n_background)
+        tb = burst_t0
+        for req in burst:
+            tb += float(rng.exponential(0.5 / scale))
+            req = dataclasses.replace(
+                req, input_site=hot_sites[int(rng.integers(len(hot_sites)))])
+            events.append((tb, AppArrival(req, float(rng.exponential(400.0)))))
+        # Session burst against every serving app inside the in-flight
+        # transfer window: tokens decode *during* the migrations.
+        for req in serving_reqs:
+            for _ in range(3):
+                events.append((burst_t0 + float(rng.uniform(0.0, 30.0)),
+                               SessionArrival(
+                                   req.req_id, session_id,
+                                   prompt_tokens=int(rng.integers(32, 96)),
+                                   decode_tokens=int(rng.integers(96, 256)))))
+                session_id += 1
+    # The window spans the whole fleet so long-lived serving apps keep
+    # getting re-planned (and migrated) as background churn frees nodes.
+    cfg = RuntimeConfig(
+        reconfig_every=40 * scale,
+        window=(n_serving + n_background) * 2,
+        serving=ServingConfig(profiles=profiles, forced_strategy=strategy))
+    return ScenarioSpec("serving-fleet", topo, events, cfg)
+
+
 SCENARIOS: Dict[str, Callable[..., ScenarioSpec]] = {
     "paper-steady-state": paper_steady_state,
     "diurnal-streams": diurnal_streams,
@@ -373,6 +458,7 @@ SCENARIOS: Dict[str, Callable[..., ScenarioSpec]] = {
     "backbone-cut": backbone_cut,
     "flapping-node": flapping_node,
     "hetero-expansion": hetero_expansion,
+    "serving-fleet": serving_fleet,
 }
 
 

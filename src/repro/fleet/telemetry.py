@@ -87,6 +87,11 @@ class MigrationRecord:
     snapshot_s: float = 0.0        # elastic-bridge phase timings
     transfer_s: float = 0.0
     restore_s: float = 0.0
+    # Serving-workload migrations record which state strategy the backend
+    # chose ("drain" | "replay" | "kv-ship"); None for every other app, and
+    # dropped from `to_dict` when None so non-serving runs serialize — and
+    # fingerprint — exactly as before the serving workload existed.
+    strategy: Optional[str] = None
 
     @property
     def duration_s(self) -> float:
@@ -221,6 +226,12 @@ class Telemetry:
     # the fingerprint (like CALIBRATION_METRIC_PREFIXES) so the ledger is
     # observability *about* the behavior, never part of it.
     calibration: Dict = dataclasses.field(default_factory=dict)
+    # Serving-workload summary (`fleet.serving.ServingWorkload.finalize`):
+    # token conservation counts, throughput, p99 token latency, per-strategy
+    # migration counts.  Empty — and absent from `to_dict` — for runs with
+    # no serving apps, so non-serving fingerprints are untouched; when
+    # present it is simulated behavior and IS fingerprinted.
+    serving: Dict = dataclasses.field(default_factory=dict)
     counters: Dict[str, int] = dataclasses.field(default_factory=lambda: {
         "arrivals": 0, "admitted": 0, "rejected": 0, "departures": 0,
         "drifts": 0, "drift_evicted": 0, "failures": 0, "recoveries": 0,
@@ -290,7 +301,7 @@ class Telemetry:
 
     def to_dict(self) -> Dict:
         rnd = lambda v: round(v, 9) if isinstance(v, float) else v
-        return {
+        d = {
             "scenario": self.scenario,
             "policy": self.policy,
             "seed": self.seed,
@@ -313,13 +324,17 @@ class Telemetry:
                 for t in self.ticks
             ],
             "migrations": [
-                {k: rnd(v) for k, v in dataclasses.asdict(m).items()}
+                {k: rnd(v) for k, v in dataclasses.asdict(m).items()
+                 if not (k == "strategy" and v is None)}
                 for m in self.migrations
             ],
             "slo_breaches": [b.to_dict() for b in self.slo_breaches],
             "metrics": dict(self.metrics),
             "calibration": dict(self.calibration),
         }
+        if self.serving:
+            d["serving"] = dict(self.serving)
+        return d
 
     def fingerprint(self) -> str:
         """Stable digest of the run's *behavior*: what was placed, moved,

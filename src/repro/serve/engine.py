@@ -79,7 +79,7 @@ class ServeEngine:
     manages, see `core.cluster`)."""
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_len: int,
-                 eos_id: int = 0, temperature: float = 0.0):
+                 eos_id: int = 0, temperature: float = 0.0, rng_seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.slots: List[Optional[Request]] = [None] * batch_slots
@@ -92,8 +92,17 @@ class ServeEngine:
         # Per-slot write offsets (slot-local KV positions).
         self.offsets = np.zeros(batch_slots, np.int32)
         self._decode = jax.jit(make_decode_step(cfg))
-        self._key = jax.random.PRNGKey(0)
+        self._base_key = jax.random.PRNGKey(rng_seed)
         self.steps = 0
+
+    def _request_key(self, req: Request):
+        """Sampling key for ``req``'s next token: derived from (req_id,
+        tokens generated so far), never from batch position or step count —
+        so a sampled decode replays identically whatever other requests
+        share the batch, and a request resumed on another engine (same
+        ``rng_seed``) continues the same stream."""
+        return jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.req_id), len(req.output))
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -131,8 +140,14 @@ class ServeEngine:
         tokens = jnp.asarray(self._slot_tokens())
         self.cache, logits = self._decode(self.params, self.cache, tokens)
         self.steps += 1
-        self._key, sub = jax.random.split(self._key)
-        next_tok = np.asarray(sample(logits[:, 0], sub, self.temperature))
+        if self.temperature <= 0.0:
+            next_tok = np.asarray(sample(logits[:, 0], None, 0.0))
+        else:
+            next_tok = np.zeros(len(self.slots), np.int64)
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    next_tok[i] = int(sample(logits[i, 0], self._request_key(req),
+                                             self.temperature))
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -151,3 +166,43 @@ class ServeEngine:
         while (self.queue or any(self.slots)) and self.steps < max_steps:
             self.step()
         return self.finished
+
+    # ---------------------------------------------------- slot migration --
+    # One slot's cache region is a self-contained session state: these two
+    # helpers are the engine-level half of the fleet's kv-ship migration
+    # strategy (repro.fleet.serving) — export on the source engine, import
+    # into any free slot of a destination engine built from the same
+    # config/params, and decoding continues bit-identically.
+    def export_slot(self, slot: int) -> Dict:
+        """Deep-copy one slot's KV/recurrent state + write offset."""
+        c = self.cache
+        state: Dict = {
+            "index": c["index"][slot],
+            "blocks": jax.tree.map(lambda x: x[:, slot], c["blocks"]),
+            "tail": jax.tree.map(lambda x: x[slot], c["tail"]),
+            "offset": int(self.offsets[slot]),
+        }
+        if "shared" in c:
+            state["shared"] = jax.tree.map(lambda x: x[:, slot], c["shared"])
+        if "tail_shared" in c:
+            state["tail_shared"] = jax.tree.map(lambda x: x[slot],
+                                                c["tail_shared"])
+        return state
+
+    def import_slot(self, slot: int, state: Dict) -> None:
+        """Install an `export_slot` payload into ``slot`` (overwrites it)."""
+        c = dict(self.cache)
+        c["index"] = self.cache["index"].at[slot].set(state["index"])
+        c["blocks"] = jax.tree.map(lambda x, v: x.at[:, slot].set(v),
+                                   self.cache["blocks"], state["blocks"])
+        c["tail"] = jax.tree.map(lambda x, v: x.at[slot].set(v),
+                                 self.cache["tail"], state["tail"])
+        if "shared" in self.cache:
+            c["shared"] = jax.tree.map(lambda x, v: x.at[:, slot].set(v),
+                                       self.cache["shared"], state["shared"])
+        if "tail_shared" in self.cache:
+            c["tail_shared"] = jax.tree.map(lambda x, v: x.at[slot].set(v),
+                                            self.cache["tail_shared"],
+                                            state["tail_shared"])
+        self.cache = c
+        self.offsets[slot] = state["offset"]
